@@ -1,0 +1,49 @@
+"""Paper Fig. 8: duration of a no-op command (client CPU timers).
+
+Measures (a) simulated client-observed no-op latency on the paper's
+testbed links vs the ICMP RTT baseline, (b) the real wall-clock Python
+dispatch overhead of this runtime implementation.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import ETH_100M, LOOPBACK, Row, emit
+from repro.core import ClientRuntime, ServerSpec, DeviceSpec
+
+
+def _noop_latency(link, n=1000) -> float:
+    rt = ClientRuntime(servers=[ServerSpec("s0", [DeviceSpec("gpu0")])],
+                       client_link=link, peer_link=link, transport="tcp")
+    total = 0.0
+    for _ in range(n):
+        t0 = rt.clock.now
+        ev = rt.enqueue_kernel("s0", fn=None, duration=0.0, name="noop")
+        rt.finish()
+        total += ev.t_client_ack - t0
+    return total / n
+
+
+def run():
+    rows = []
+    for name, link in [("lan_100M", ETH_100M), ("loopback", LOOPBACK)]:
+        lat = _noop_latency(link)
+        rtt = 2 * link.latency
+        rows.append(Row(f"fig8_noop_{name}", lat * 1e6,
+                        f"rtt_us={rtt*1e6:.1f};overhead_us={(lat-rtt)*1e6:.1f}"))
+    # real wall-clock dispatch overhead of this runtime implementation
+    rt = ClientRuntime(servers=[ServerSpec("s0", [DeviceSpec("gpu0")])],
+                       client_link=LOOPBACK, peer_link=LOOPBACK)
+    n = 2000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        rt.enqueue_kernel("s0", fn=None, duration=0.0)
+    rt.finish()
+    wall = (time.perf_counter() - t0) / n
+    rows.append(Row("fig8_runtime_python_dispatch", wall * 1e6,
+                    f"cmds_per_sec={1/wall:.0f}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

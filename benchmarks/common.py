@@ -1,0 +1,41 @@
+"""Shared benchmark scaffolding + testbed constants from the paper."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import DeviceSpec, LinkSpec
+
+MiB = 1024 * 1024
+
+# GPUs appearing in the paper's testbeds (fp32 TFLOP/s, HBM GB/s)
+GPU_2080TI = DeviceSpec("2080ti", flops=13.4e12, mem_bw=616e9)
+GPU_P100 = DeviceSpec("p100", flops=9.3e12, mem_bw=732e9)
+GPU_V100 = DeviceSpec("v100", flops=14.0e12, mem_bw=900e9)
+GPU_A6000 = DeviceSpec("a6000", flops=38.7e12, mem_bw=768e9)
+GPU_1060 = DeviceSpec("gtx1060", flops=3.9e12, mem_bw=192e9)
+SOC_ADRENO = DeviceSpec("adreno640", flops=0.9e12, mem_bw=34e9)
+
+# links (one-way latency, B/s)
+ETH_100M = LinkSpec(latency=61e-6, bandwidth=100e6 / 8)      # paper LAN
+ETH_1G = LinkSpec(latency=50e-6, bandwidth=1e9 / 8)
+ETH_40G = LinkSpec(latency=15e-6, bandwidth=40e9 / 8)        # direct link
+ETH_56G = LinkSpec(latency=15e-6, bandwidth=56e9 / 8)
+ETH_100G = LinkSpec(latency=10e-6, bandwidth=100e9 / 8)
+WIFI6 = LinkSpec(latency=1.5e-3, bandwidth=300e6 / 8)        # effective
+LOOPBACK = LinkSpec(latency=10e-6, bandwidth=50e9 / 8)
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.3f},{self.derived}"
+
+
+def emit(rows):
+    for r in rows:
+        print(r.csv())
+    return rows

@@ -1,0 +1,49 @@
+"""Paper Fig. 10: 4-byte buffer migration latency between two devices,
+averaged over 1000 migrations, per interconnect. A bump kernel between
+migrations forces the copy to really happen (as in the paper)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import ETH_100M, ETH_40G, GPU_2080TI, Row, emit
+from repro.core import ClientRuntime, ServerSpec
+
+
+def _migrate_loop(peer_link, p2p=True, n=200):
+    rt = ClientRuntime(servers=[ServerSpec("s0", [GPU_2080TI]),
+                                ServerSpec("s1", [GPU_2080TI])],
+                       client_link=ETH_100M, peer_link=peer_link,
+                       transport="tcp", p2p_migration=p2p)
+    buf = rt.create_buffer(4)
+    rt.enqueue_write("s0", buf, np.zeros(1, np.int32))
+    rt.finish()
+    total = 0.0
+    here, there = "s0", "s1"
+    for _ in range(n):
+        t0 = rt.clock.now
+        mig = rt.enqueue_migration(buf, there)
+        rt.finish()
+        total += rt.clock.now - t0
+        # bump to invalidate the other copy (forces the next migration)
+        rt.enqueue_kernel(there, fn=lambda x: x + 1, inputs=[buf],
+                          outputs=[buf], duration=2e-6, wait_for=[mig])
+        rt.finish()
+        here, there = there, here
+    return total / n
+
+
+def run():
+    rows = []
+    for name, link, p2p in [
+        ("p2p_100M_switch", ETH_100M, True),
+        ("p2p_40G_direct", ETH_40G, True),
+        ("via_client_100M", ETH_100M, False),
+    ]:
+        lat = _migrate_loop(link, p2p)
+        rows.append(Row(f"fig10_migration_{name}", lat * 1e6,
+                        f"rtt_us={2*link.latency*1e6:.0f}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

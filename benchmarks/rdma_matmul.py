@@ -1,0 +1,60 @@
+"""Paper Fig. 13: RDMA speedup for the distributed matmul, N servers ×
+matrix size. Expected: ~60 % once the per-server result buffer exceeds
+the ~23 MB tipping point; no meaningful gain below it; registration +
+rkey exchange makes many-server small-work cases a net negative.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import ETH_56G, GPU_P100, Row, emit
+from repro.core import ClientRuntime, ServerSpec
+
+
+def _dist_matmul(transport: str, n_servers: int, N: int) -> float:
+    servers = [ServerSpec(f"s{i}", [GPU_P100]) for i in range(n_servers)]
+    rt = ClientRuntime(servers=servers, client_link=ETH_56G,
+                       peer_link=ETH_56G, transport="tcp",
+                       peer_transport=transport)
+    rows_per = N // n_servers
+    # weights resident everywhere; partials produced per server then
+    # migrated P2P to server 0 for the merge (the paper's "combining the
+    # intermediate results" step)
+    parts = []
+    evs = []
+    for s in servers:
+        o = rt.create_buffer(rows_per * N * 4)
+        ek = rt.enqueue_kernel(s.name, fn=None, inputs=[], outputs=[o],
+                               flops=2.0 * rows_per * N * N,
+                               bytes_moved=3.0 * rows_per * N * 4)
+        parts.append(o)
+        evs.append(ek)
+    rt.finish()
+    t0 = rt.clock.now
+    merge_deps = []
+    for o, ek in zip(parts[1:], evs[1:]):
+        merge_deps.append(rt.enqueue_migration(o, "s0", wait_for=[ek]))
+    rt.enqueue_kernel("s0", fn=None, inputs=parts, outputs=[],
+                      duration=1e-4, wait_for=evs[:1] + merge_deps,
+                      name="merge")
+    rt.finish()
+    return rt.clock.now - t0
+
+
+def run():
+    rows = []
+    for N in (2048, 4096, 8192, 16384):
+        for n_srv in (4, 8, 12):
+            t_tcp = _dist_matmul("tcp", n_srv, N)
+            t_rdma = _dist_matmul("rdma", n_srv, N)
+            sp = (t_tcp / t_rdma - 1.0) * 100.0
+            per_server_mb = (N // n_srv) * N * 4 / 1e6
+            rows.append(Row(f"fig13_rdma_matmul_N{N}_s{n_srv}",
+                            t_rdma * 1e6,
+                            f"per_server_MB={per_server_mb:.0f};"
+                            f"speedup_pct={sp:.1f}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows and writes
+benchmarks/results.json (consumed by EXPERIMENTS.md).
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig11]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+MODULES = [
+    ("fig8", "benchmarks.cmd_overhead"),
+    ("fig9", "benchmarks.passthrough"),
+    ("fig10", "benchmarks.migration_latency"),
+    ("fig11", "benchmarks.rdma_vs_tcp"),
+    ("fig12", "benchmarks.matmul_scaling"),
+    ("fig13", "benchmarks.rdma_matmul"),
+    ("fig15", "benchmarks.ar_pipeline"),
+    ("fig16", "benchmarks.cfd_scaling"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "results.json"))
+    args = ap.parse_args()
+
+    import importlib
+    all_rows = []
+    print("name,us_per_call,derived")
+    for tag, modname in MODULES:
+        if args.only and args.only != tag:
+            continue
+        t0 = time.time()
+        mod = importlib.import_module(modname)
+        rows = mod.run()
+        all_rows.extend({"name": r.name, "us_per_call": r.us_per_call,
+                         "derived": r.derived} for r in rows)
+        print(f"# {tag} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    with open(args.out, "w") as f:
+        json.dump(all_rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

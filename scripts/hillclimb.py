@@ -1,0 +1,99 @@
+"""§Perf hillclimb driver: run named (arch, shape, knobs) experiments,
+collect roofline terms + attention-interior estimate, dump JSON.
+
+  PYTHONPATH=src python scripts/hillclimb.py --only cellA --out hc.json
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ["REPRO_DTYPE_BARRIER"] = "1"
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import sys        # noqa: E402
+import time       # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import dryrun           # noqa: E402
+from repro.roofline import analyze_hlo, from_totals, HBM_BW  # noqa: E402
+from repro.roofline.attention_est import attention_interior_bytes  # noqa: E402
+
+EXPERIMENTS = {
+    # Cell A: worst roofline fraction — tinyllama train_4k
+    "cellA": [
+        ("tinyllama-1.1b", "train_4k", dict()),                       # base
+        ("tinyllama-1.1b", "train_4k", dict(strategy="fsdp")),        # it1
+    ],
+    # Cell B: most collective-bound — grok-1 train_4k (MoE FSDP gathers)
+    "cellB": [
+        ("grok-1-314b", "train_4k", dict()),                          # base mb8
+        ("grok-1-314b", "train_4k", dict(microbatches=4)),            # it1
+        ("grok-1-314b", "train_4k", dict(microbatches=2)),            # it2
+        ("grok-1-314b", "train_4k", dict(microbatches=2,
+                                         strategy="fsdp")),           # it3
+    ],
+    # Cell C: paper-representative giant — nemotron train_4k
+    "cellC": [
+        ("nemotron-4-340b", "train_4k", dict()),                      # base mb16
+        ("nemotron-4-340b", "train_4k", dict(microbatches=8)),        # it1
+        ("nemotron-4-340b", "train_4k", dict(microbatches=4)),        # it2
+    ],
+}
+
+
+def run_exp(arch, shape, knobs, multi_pod=False):
+    t0 = time.time()
+    compiled, lowered, meta = dryrun.lower_cell(arch, shape,
+                                                multi_pod=multi_pod, **knobs)
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    tot = analyze_hlo(hlo)
+    rf = from_totals(arch, shape, meta["mesh"], meta["chips"], tot,
+                     meta["model_flops_global"],
+                     arg_bytes=mem.argument_size_in_bytes,
+                     temp_bytes=mem.temp_size_in_bytes)
+    attn_b = attention_interior_bytes(hlo)
+    row = rf.row()
+    row.update({
+        "knobs": {k: str(v) for k, v in knobs.items()},
+        "strategy": meta["strategy"], "microbatches": meta["microbatches"],
+        "attn_interior_bytes": attn_b,
+        "t_mem_pallas_est": max(rf.hbm_bytes - attn_b, 0) / HBM_BW,
+        "coll_by_type": {k: float(v) for k, v in tot.coll_by_type.items()},
+        "mem_dev_gib": (mem.argument_size_in_bytes
+                        + mem.temp_size_in_bytes) / 2**30,
+        "wall_s": time.time() - t0,
+    })
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="hillclimb.json")
+    args = ap.parse_args()
+    results = {}
+    for cell, exps in EXPERIMENTS.items():
+        if args.only and args.only != cell:
+            continue
+        results[cell] = []
+        for arch, shape, knobs in exps:
+            try:
+                row = run_exp(arch, shape, knobs)
+                results[cell].append(row)
+                print(f"{cell} {arch} {shape} {knobs}: "
+                      f"t_comp={row['t_compute_s']:.3f} "
+                      f"t_mem={row['t_memory_s']:.3f} "
+                      f"(pallas_est={row['t_mem_pallas_est']:.3f}) "
+                      f"t_coll={row['t_collective_s']:.3f} "
+                      f"roofline={row['roofline_frac']:.3f} "
+                      f"mem={row['mem_dev_gib']:.1f}GiB", flush=True)
+            except Exception as e:
+                print(f"{cell} {arch} {shape} {knobs}: FAIL {e!r}",
+                      flush=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

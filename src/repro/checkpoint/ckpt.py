@@ -1,0 +1,126 @@
+"""Sharded checkpointing with atomic manifest swap + command replay log.
+
+The paper's reconnect machinery (§4.3: session IDs + replay of the last
+unacked commands, server dedup) maps at training scale to
+checkpoint/restart: the checkpoint is the session state, and the step log
+is the replay buffer — a restarted worker resumes from (checkpoint,
+replayed steps) exactly, including the data-loader cursor.
+
+Layout:
+  <dir>/step_000100/
+    manifest.json         tree structure + per-leaf shape/dtype
+    shard_00000.npz       leaf arrays (per-host shard in real deployment)
+    extras.json           loader cursor, step log
+  <dir>/LATEST            atomic pointer (written last)
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def _flatten_with_names(tree) -> list:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "name", p)))
+                        for p in path)
+        out.append((name, leaf))
+    return out
+
+
+def save(directory: str, step: int, state: Pytree,
+         extras: Optional[dict] = None, keep: int = 3):
+    """Write a checkpoint; the LATEST pointer is flipped atomically last."""
+    tag = f"step_{step:08d}"
+    final = os.path.join(directory, tag)
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+
+    named = _flatten_with_names(state)
+    manifest = {"step": step,
+                "leaves": [{"name": n,
+                            "shape": list(np.shape(a)),
+                            "dtype": str(jnp.asarray(a).dtype)}
+                           for n, a in named]}
+    # npz can't hold ml_dtypes (bf16/f8): store raw bytes, view on load
+    arrays = {f"a{i}": np.frombuffer(
+        np.ascontiguousarray(np.asarray(jax.device_get(a))).tobytes(),
+        np.uint8)
+        for i, (n, a) in enumerate(named)}
+    np.savez(os.path.join(tmp, "shard_00000.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, "extras.json"), "w") as f:
+        json.dump(extras or {}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+
+    # atomic LATEST flip
+    ptr = os.path.join(directory, "LATEST")
+    fd, tmp_ptr = tempfile.mkstemp(dir=directory)
+    with os.fdopen(fd, "w") as f:
+        f.write(tag)
+    os.replace(tmp_ptr, ptr)
+
+    _gc(directory, keep)
+
+
+def _gc(directory: str, keep: int):
+    tags = sorted(t for t in os.listdir(directory) if t.startswith("step_")
+                  and not t.endswith(".tmp"))
+    for t in tags[:-keep]:
+        shutil.rmtree(os.path.join(directory, t), ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    ptr = os.path.join(directory, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        return int(f.read().strip().split("_")[1])
+
+
+def restore(directory: str, like: Pytree, step: Optional[int] = None):
+    """Returns (state, extras, step) with leaves shaped/dtyped like ``like``
+    (and device_put with matching shardings when leaves carry them)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    tag = f"step_{step:08d}"
+    path = os.path.join(directory, tag)
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "shard_00000.npz"))
+    import ml_dtypes
+    arrays = []
+    for i, leaf in enumerate(manifest["leaves"]):
+        raw = data[f"a{i}"]
+        dt = np.dtype(getattr(ml_dtypes, leaf["dtype"], None)
+                      or leaf["dtype"])
+        arrays.append(np.frombuffer(raw.tobytes(), dt).reshape(leaf["shape"]))
+
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    assert len(arrays) == len(leaves_like), "checkpoint/state mismatch"
+    out = []
+    for arr, ref in zip(arrays, leaves_like):
+        a = jnp.asarray(arr, dtype=getattr(ref, "dtype", None))
+        sh = getattr(ref, "sharding", None)
+        if sh is not None and hasattr(sh, "mesh"):
+            a = jax.device_put(a, sh)
+        out.append(a)
+    state = jax.tree_util.tree_unflatten(treedef, out)
+    with open(os.path.join(path, "extras.json")) as f:
+        extras = json.load(f)
+    return state, extras, step

@@ -1,0 +1,105 @@
+"""Architecture registry: the 10 assigned archs + per-arch run overrides.
+
+``RunOverrides`` carries the compile/memory knobs that differ per cell
+(grad-accumulation microbatches, remat policy, prefill chunking, optimizer
+moment dtype) — these are the levers the §Perf hillclimb iterates on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+from repro.configs.shapes import SHAPES, ShapeCell, applicable  # noqa: F401
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "command-r-35b": "command_r_35b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "gemma3-1b": "gemma3_1b",
+    "mamba2-780m": "mamba2_780m",
+    "grok-1-314b": "grok_1_314b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "whisper-small": "whisper_small",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+}
+
+ARCH_IDS = list(_MODULES)
+
+
+@dataclasses.dataclass(frozen=True)
+class RunOverrides:
+    """Per-arch execution knobs (hillclimb levers)."""
+    microbatches: int = 1          # grad-accumulation steps inside train_step
+    remat: str = "full"            # 'full' | 'dots' | 'none'
+    remat_group: int = 1           # nested remat: save every g-th cycle
+    prefill_chunk: Optional[int] = 4096
+    adam_dtype: str = "float32"    # moment dtype; 'bfloat16' for giant archs
+    param_dtype: str = "float32"
+    serve_dtype: str = "bfloat16"  # params dtype when serving
+    # KV cache layout for decode cells: 'kv_rep' (padded kv heads on the
+    # model axis) or 'seq' (sequence-sharded, flash-decoding combines).
+    # long_500k always uses 'seq'. Prefill always uses 'kv_rep'.
+    decode_cache_layout: str = "kv_rep"
+    # sharding strategy: 'megatron' (TP over model axis + FSDP over data)
+    # or 'fsdp' (no TP; model axis = extra DP; per-layer weight gathers)
+    strategy: str = "megatron"
+
+
+_OVERRIDES: dict[str, RunOverrides] = {
+    # giants: bf16 moments + deeper grad accumulation to fit v5e HBM;
+    # 'seq' decode cache where padded-kv-head layout would blow HBM
+    # (96L×hd192, or unshardable head counts H=40/H=12 — see DESIGN.md);
+    # remat_group = nested remat (must divide the arch's cycle count)
+    "llava-next-mistral-7b": RunOverrides(microbatches=2, remat_group=8),
+    "command-r-35b": RunOverrides(microbatches=2, remat_group=8),
+    "tinyllama-1.1b": RunOverrides(remat_group=2),
+    # 340B/314B with fp32 master params cannot fit 256×16 GB (params+
+    # moments+grads alone = 16 GB/dev); production config is pure-bf16
+    # params with stochastic rounding (Gopher-style) — see DESIGN.md.
+    "nemotron-4-340b": RunOverrides(microbatches=16, adam_dtype="bfloat16",
+                                    param_dtype="bfloat16",
+                                    decode_cache_layout="seq",
+                                    remat_group=8),
+    "gemma3-1b": RunOverrides(remat_group=2),
+    "mamba2-780m": RunOverrides(microbatches=2, remat_group=8),
+    "grok-1-314b": RunOverrides(microbatches=8, adam_dtype="bfloat16",
+                                param_dtype="bfloat16",
+                                remat_group=8),
+    "llama4-scout-17b-a16e": RunOverrides(microbatches=4,
+                                          decode_cache_layout="seq",
+                                          remat_group=8),
+    "whisper-small": RunOverrides(microbatches=2,
+                                  decode_cache_layout="seq", remat_group=4),
+    "jamba-v0.1-52b": RunOverrides(microbatches=4, remat_group=2),
+}
+
+
+def arch_module(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return arch_module(arch_id).config()
+
+
+def get_reduced(arch_id: str) -> ModelConfig:
+    return arch_module(arch_id).reduced()
+
+
+def get_overrides(arch_id: str) -> RunOverrides:
+    return _OVERRIDES.get(arch_id, RunOverrides())
+
+
+def long_context_ok(arch_id: str) -> bool:
+    return getattr(arch_module(arch_id), "LONG_CONTEXT_OK", False)
+
+
+def cells(arch_id: str) -> list[ShapeCell]:
+    """All applicable shape cells for an arch."""
+    mod = arch_module(arch_id)
+    return [c for n, c in SHAPES.items() if applicable(mod, n)]

@@ -1,0 +1,28 @@
+"""command-r-35b [dense] — GQA, no-bias, parallel residual blocks, tied
+embeddings, 256k vocab. [hf:CohereForAI/c4ai-command-r-v01]
+
+Deviation noted in DESIGN.md: Cohere uses (non-RMS) LayerNorm; we use
+RMSNorm uniformly across the framework.
+"""
+from repro.models.config import LayerKind, ModelConfig
+
+ARCH_ID = "command-r-35b"
+LONG_CONTEXT_OK = False
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="dense",
+        n_layers=40, d_model=8192, n_heads=64, n_kv=8, d_ff=22528,
+        vocab=256000, pattern=(LayerKind(),),
+        rope_theta=8e6, tie_embeddings=True, parallel_block=True,
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-reduced", family="dense",
+        n_layers=3, d_model=64, n_heads=4, n_kv=2, d_ff=128,
+        vocab=512, pattern=(LayerKind(),),
+        rope_theta=8e6, tie_embeddings=True, parallel_block=True,
+    )

@@ -1,0 +1,38 @@
+"""gemma3-1b [dense] — 5:1 local:global sliding window (512), kv=1,
+head_dim 256, qk-norm, sandwich norms, 262k vocab. [hf:google/gemma-3-1b-pt]
+
+long_500k RUNS for this arch: 5/6 of layers are window-512 local; the
+global layers decode O(L) per token with a sequence-sharded KV cache.
+"""
+from repro.models.config import LayerKind, ModelConfig
+
+ARCH_ID = "gemma3-1b"
+LONG_CONTEXT_OK = True
+
+_LOCAL = LayerKind(window=512, global_rope=False)
+_GLOBAL = LayerKind(window=None, global_rope=True)
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="dense",
+        n_layers=26, d_model=1152, n_heads=4, n_kv=1, d_ff=6912,
+        vocab=262144, head_dim=256,
+        pattern=(_LOCAL, _LOCAL, _LOCAL, _LOCAL, _LOCAL, _GLOBAL),
+        rope_theta=1e6, rope_theta_local=1e4,
+        qk_norm=True, sandwich_norm=True, norm_plus_one=True,
+        embed_scale=True, tie_embeddings=True, norm_eps=1e-6,
+    )
+
+
+def reduced() -> ModelConfig:
+    # 8 layers = 1 full cycle (6) + tail (2) → exercises the tail path
+    return ModelConfig(
+        name=ARCH_ID + "-reduced", family="dense",
+        n_layers=8, d_model=64, n_heads=4, n_kv=1, d_ff=128,
+        vocab=512, head_dim=16,
+        pattern=(LayerKind(window=16, global_rope=False),) * 5 + (_GLOBAL,),
+        rope_theta=1e6, rope_theta_local=1e4,
+        qk_norm=True, sandwich_norm=True, norm_plus_one=True,
+        embed_scale=True, tie_embeddings=True, norm_eps=1e-6,
+    )

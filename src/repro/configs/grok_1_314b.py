@@ -1,0 +1,29 @@
+"""grok-1-314b [moe] — 8 experts top-2, GQA kv=8, attn logit softcap.
+[hf:xai-org/grok-1]
+"""
+from repro.models.config import LayerKind, ModelConfig, MoEConfig
+
+ARCH_ID = "grok-1-314b"
+LONG_CONTEXT_OK = False
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="moe",
+        n_layers=64, d_model=6144, n_heads=48, n_kv=8, d_ff=32768,
+        vocab=131072, pattern=(LayerKind(mlp="moe"),),
+        moe=MoEConfig(n_experts=8, top_k=2),
+        rope_theta=1e4, tie_embeddings=False,
+        attn_logit_softcap=30.0,
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-reduced", family="moe",
+        n_layers=3, d_model=64, n_heads=4, n_kv=2, d_ff=128,
+        vocab=512, pattern=(LayerKind(mlp="moe"),),
+        moe=MoEConfig(n_experts=4, top_k=2),
+        rope_theta=1e4, tie_embeddings=False,
+        attn_logit_softcap=30.0,
+    )

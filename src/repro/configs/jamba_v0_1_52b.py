@@ -1,0 +1,47 @@
+"""jamba-v0.1-52b [hybrid] — Mamba+attention 1:7 interleave, MoE 16e top-2
+every other layer. [arXiv:2403.19887; hf]
+
+Layer pattern (period 8, offsets from the HF config): attention at offset
+4, MoE MLP at odd offsets. Deviation noted in DESIGN.md: SSM layers use
+our Mamba2 SSD block (d_state 16) instead of mamba-1 — SSD subsumes it
+and shares the Pallas kernel.
+
+long_500k RUNS: only 4/32 layers keep a KV cache.
+"""
+from repro.models.config import LayerKind, ModelConfig, MoEConfig, SSMConfig
+
+ARCH_ID = "jamba-v0.1-52b"
+LONG_CONTEXT_OK = True
+
+
+def _pattern(window=None):
+    kinds = []
+    for i in range(8):
+        mixer = "attn" if i == 4 else "ssm"
+        mlp = "moe" if i % 2 == 1 else "swiglu"
+        kinds.append(LayerKind(mixer=mixer, mlp=mlp, window=window))
+    return tuple(kinds)
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="hybrid",
+        n_layers=32, d_model=4096, n_heads=32, n_kv=8, d_ff=14336,
+        vocab=65536, pattern=_pattern(),
+        moe=MoEConfig(n_experts=16, top_k=2),
+        ssm=SSMConfig(d_state=16, head_dim=64, expand=2, n_groups=1,
+                      conv_width=4, chunk=256),
+        rope_theta=1e4, tie_embeddings=False,
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-reduced", family="hybrid",
+        n_layers=8, d_model=64, n_heads=4, n_kv=2, d_ff=128,
+        vocab=512, pattern=_pattern(),
+        moe=MoEConfig(n_experts=4, top_k=2),
+        ssm=SSMConfig(d_state=16, head_dim=16, expand=2, n_groups=1,
+                      conv_width=4, chunk=32),
+        rope_theta=1e4, tie_embeddings=False,
+    )

@@ -1,0 +1,30 @@
+"""llama4-scout-17b-a16e [moe] — 16 experts top-1 + shared expert, early
+fusion. [hf:meta-llama/Llama-4-Scout-17B-16E]
+
+Early-fusion multimodality is a stub per the assignment (text tokens in
+input_specs); the MoE backbone is what is exercised.
+"""
+from repro.models.config import LayerKind, ModelConfig, MoEConfig
+
+ARCH_ID = "llama4-scout-17b-a16e"
+LONG_CONTEXT_OK = False
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="moe",
+        n_layers=48, d_model=5120, n_heads=40, n_kv=8, d_ff=8192,
+        vocab=202048, pattern=(LayerKind(mlp="moe"),),
+        moe=MoEConfig(n_experts=16, top_k=1, shared_expert=True),
+        rope_theta=5e5, tie_embeddings=False,
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-reduced", family="moe",
+        n_layers=3, d_model=64, n_heads=4, n_kv=2, d_ff=128,
+        vocab=512, pattern=(LayerKind(mlp="moe"),),
+        moe=MoEConfig(n_experts=4, top_k=1, shared_expert=True),
+        rope_theta=5e5, tie_embeddings=False,
+    )

@@ -1,0 +1,29 @@
+"""llava-next-mistral-7b [vlm] — mistral-7B backbone, anyres patch tiling.
+[hf:llava-hf/llava-v1.6-mistral-7b-hf]
+
+The vision tower + anyres tiling is a STUB per the assignment:
+``input_specs()`` supplies precomputed patch/text embeddings [B, S, d];
+the backbone below is the transformer that consumes them.
+"""
+from repro.models.config import LayerKind, ModelConfig
+
+ARCH_ID = "llava-next-mistral-7b"
+LONG_CONTEXT_OK = False
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="vlm",
+        n_layers=32, d_model=4096, n_heads=32, n_kv=8, d_ff=14336,
+        vocab=32000, pattern=(LayerKind(),),
+        rope_theta=1e6, tie_embeddings=False, frontend="patches",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-reduced", family="vlm",
+        n_layers=3, d_model=64, n_heads=4, n_kv=2, d_ff=128,
+        vocab=512, pattern=(LayerKind(),),
+        rope_theta=1e6, tie_embeddings=False, frontend="patches",
+    )

@@ -1,0 +1,33 @@
+"""mamba2-780m [ssm] — attention-free SSD (state-space duality), state 128.
+[arXiv:2405.21060]
+
+long_500k RUNS: decode state is constant-size (no KV cache at all).
+"""
+from repro.models.config import LayerKind, ModelConfig, SSMConfig
+
+ARCH_ID = "mamba2-780m"
+LONG_CONTEXT_OK = True
+
+_SSM = LayerKind(mixer="ssm", mlp="none")
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="ssm",
+        n_layers=48, d_model=1536, n_heads=24, n_kv=24, d_ff=0,
+        vocab=50280, pattern=(_SSM,),
+        ssm=SSMConfig(d_state=128, head_dim=64, expand=2, n_groups=1,
+                      conv_width=4, chunk=256),
+        tie_embeddings=True,
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-reduced", family="ssm",
+        n_layers=3, d_model=64, n_heads=4, n_kv=4, d_ff=0,
+        vocab=512, pattern=(_SSM,),
+        ssm=SSMConfig(d_state=16, head_dim=16, expand=2, n_groups=1,
+                      conv_width=4, chunk=32),
+        tie_embeddings=True,
+    )

@@ -1,0 +1,28 @@
+"""nemotron-4-340b [dense] — GQA, squared-ReLU 2-matrix MLP, 256k vocab.
+[arXiv:2402.16819]
+
+Largest dense cell: the FSDP×TP sharding stress test. Optimizer runs with
+bf16 moments (see configs/__init__.py overrides) to fit v5e HBM.
+"""
+from repro.models.config import LayerKind, ModelConfig
+
+ARCH_ID = "nemotron-4-340b"
+LONG_CONTEXT_OK = False
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="dense",
+        n_layers=96, d_model=18432, n_heads=96, n_kv=8, d_ff=73728,
+        vocab=256000, pattern=(LayerKind(mlp="relu2"),),
+        rope_theta=1e4, tie_embeddings=False,
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-reduced", family="dense",
+        n_layers=3, d_model=64, n_heads=4, n_kv=2, d_ff=256,
+        vocab=512, pattern=(LayerKind(mlp="relu2"),),
+        rope_theta=1e4, tie_embeddings=False,
+    )

@@ -1,0 +1,33 @@
+"""Assigned input-shape cells and applicability rules.
+
+Every LM-family arch is paired with the same four shape cells. ``decode_*``
+and ``long_*`` lower ``serve`` steps (one new token against a KV cache of
+``seq``), not ``train_step``. ``long_500k`` requires sub-quadratic
+attention and is skipped for pure full-attention archs (see DESIGN.md
+§Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # 'train' | 'prefill' | 'decode'
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524_288, 1),
+}
+
+
+def applicable(arch_module, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return getattr(arch_module, "LONG_CONTEXT_OK", False)
+    return True

@@ -1,0 +1,23 @@
+"""tinyllama-1.1b [dense] — llama2-arch small. [arXiv:2401.02385; hf]"""
+from repro.models.config import LayerKind, ModelConfig
+
+ARCH_ID = "tinyllama-1.1b"
+LONG_CONTEXT_OK = False  # pure full attention → skip long_500k
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="dense",
+        n_layers=22, d_model=2048, n_heads=32, n_kv=4, d_ff=5632,
+        vocab=32000, pattern=(LayerKind(),),
+        rope_theta=1e4, tie_embeddings=False,
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-reduced", family="dense",
+        n_layers=3, d_model=64, n_heads=4, n_kv=2, d_ff=128,
+        vocab=512, pattern=(LayerKind(),),
+        rope_theta=1e4, tie_embeddings=False,
+    )

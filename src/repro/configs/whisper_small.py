@@ -1,0 +1,31 @@
+"""whisper-small [audio] — encoder-decoder, conv frontend (STUB).
+[arXiv:2212.04356]
+
+``input_specs()`` provides precomputed frame embeddings [B, S, d] (the
+conv1d×2 + sinusoidal-position frontend is stubbed per the assignment).
+Deviations noted in DESIGN.md: RoPE instead of learned absolute positions.
+"""
+from repro.models.config import LayerKind, ModelConfig
+
+ARCH_ID = "whisper-small"
+LONG_CONTEXT_OK = False
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="audio",
+        n_layers=12, d_model=768, n_heads=12, n_kv=12, d_ff=3072,
+        vocab=51865, pattern=(LayerKind(mlp="gelu"),),
+        encoder_layers=12, cross_attention=True,
+        tie_embeddings=True, frontend="audio",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-reduced", family="audio",
+        n_layers=2, d_model=64, n_heads=4, n_kv=4, d_ff=128,
+        vocab=512, pattern=(LayerKind(mlp="gelu"),),
+        encoder_layers=2, cross_attention=True,
+        tie_embeddings=True, frontend="audio",
+    )

@@ -1,0 +1,12 @@
+"""PoCL-R offloading runtime (the paper's core contribution, adapted to a
+deterministic event-loop + JAX execution model — see DESIGN.md §2)."""
+from repro.core.buffers import Buffer  # noqa: F401
+from repro.core.commands import (BuiltinKernel, Marker, MigrateBuffer,  # noqa: F401
+                                 NDRangeKernel, ReadBuffer, WriteBuffer)
+from repro.core.events import (COMPLETE, ERROR, QUEUED, RUNNING,  # noqa: F401
+                               SUBMITTED, Event)
+from repro.core.netsim import DeviceSim, Link, SimClock  # noqa: F401
+from repro.core.runtime import (ClientRuntime, DeviceSpec,  # noqa: F401
+                                DeviceUnavailable, LinkSpec, ServerSpec)
+from repro.core.transport import (RDMATransport, TCPTransport,  # noqa: F401
+                                  make_transport)

@@ -1,0 +1,45 @@
+"""Buffer objects with per-server validity and dynamic content size.
+
+``content_size_buffer`` implements the paper's ``cl_pocl_content_size``
+extension (§5.3): a designated 4-byte buffer holds the number of
+meaningful bytes; migrations move only that prefix. The canonical array
+lives host-side in the simulation (all copies are bit-identical); what
+the runtime tracks is *where* valid copies exist and what moving them
+costs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional
+
+import numpy as np
+
+_buf_ids = itertools.count(1)
+
+
+@dataclasses.dataclass
+class Buffer:
+    nbytes: int
+    content_size_buffer: Optional["Buffer"] = None
+    name: str = ""
+    id: int = dataclasses.field(default_factory=lambda: next(_buf_ids))
+    data: Optional[np.ndarray] = None           # canonical contents
+    valid_on: set = dataclasses.field(default_factory=set)  # server names
+    registered_mr: set = dataclasses.field(default_factory=set)
+
+    def transfer_bytes(self) -> float:
+        """Bytes a migration must move (content-size aware)."""
+        if self.content_size_buffer is not None \
+                and self.content_size_buffer.data is not None:
+            used = int(np.asarray(
+                self.content_size_buffer.data).reshape(-1)[0])
+            return float(min(max(used, 0), self.nbytes))
+        return float(self.nbytes)
+
+    def set_data(self, arr, on: str):
+        self.data = arr
+        self.valid_on = {on}
+
+    def invalidate_except(self, server: str):
+        self.valid_on = {server}

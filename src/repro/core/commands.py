@@ -1,0 +1,66 @@
+"""Command types carried through the runtime (paper §4.2's command union).
+
+The wire representation is kept identical to the in-memory one (the
+paper's zero-translation design) — in the simulation this simply means
+commands are passed by reference and only their *sizes* hit the modeled
+wire.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Optional, Sequence
+
+_cmd_ids = itertools.count(1)
+
+
+@dataclasses.dataclass
+class Command:
+    id: int = dataclasses.field(default_factory=lambda: next(_cmd_ids),
+                                init=False)
+
+
+@dataclasses.dataclass
+class NDRangeKernel(Command):
+    """A compute kernel. ``fn(*input_arrays) -> output_array(s)`` runs
+    functionally; cost comes from flops/bytes or an explicit duration."""
+    fn: Optional[Callable] = None
+    inputs: Sequence = ()
+    outputs: Sequence = ()
+    flops: float = 0.0
+    bytes_moved: float = 0.0
+    duration: Optional[float] = None
+    name: str = "kernel"
+
+
+@dataclasses.dataclass
+class BuiltinKernel(NDRangeKernel):
+    """Paper §7.1: CL_DEVICE_TYPE_CUSTOM built-in kernels (e.g. the HEVC
+    'decode' device, or the stream-source device)."""
+    builtin: str = ""
+
+
+@dataclasses.dataclass
+class MigrateBuffer(Command):
+    buffer: object = None
+    dst_server: str = ""
+    dst_device: str = ""
+
+
+@dataclasses.dataclass
+class WriteBuffer(Command):
+    """Client → server upload."""
+    buffer: object = None
+    data: object = None
+    nbytes: float = 0.0
+
+
+@dataclasses.dataclass
+class ReadBuffer(Command):
+    """Server → client download."""
+    buffer: object = None
+
+
+@dataclasses.dataclass
+class Marker(Command):
+    pass

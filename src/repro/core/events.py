@@ -1,0 +1,58 @@
+"""OpenCL-style events: dependency handles with profiling timestamps."""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Optional
+
+_ids = itertools.count(1)
+
+QUEUED, SUBMITTED, RUNNING, COMPLETE, ERROR = (
+    "queued", "submitted", "running", "complete", "error")
+
+
+@dataclasses.dataclass
+class Event:
+    command: object = None
+    server: Optional[str] = None          # executing server ('' = client)
+    status: str = QUEUED
+    user: bool = False                    # user event (client-controlled)
+    id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    # profiling (sim seconds)
+    t_queued: float = 0.0
+    t_submitted: float = 0.0
+    t_start: float = 0.0
+    t_end: float = 0.0
+    t_client_ack: float = 0.0   # when the client observed completion
+    error: Optional[str] = None
+    _callbacks: list = dataclasses.field(default_factory=list)
+
+    def on_complete(self, fn: Callable):
+        if self.status == COMPLETE:
+            fn(self)
+        else:
+            self._callbacks.append(fn)
+
+    def complete(self, t: float):
+        self.status = COMPLETE
+        self.t_end = t
+        cbs, self._callbacks = self._callbacks, []
+        for fn in cbs:
+            fn(self)
+
+    def fail(self, t: float, reason: str):
+        self.status = ERROR
+        self.error = reason
+        self.t_end = t
+        cbs, self._callbacks = self._callbacks, []
+        for fn in cbs:
+            fn(self)
+
+    @property
+    def duration(self) -> float:
+        return self.t_end - self.t_start
+
+    @property
+    def latency(self) -> float:
+        """Client-observed: queued → complete."""
+        return self.t_end - self.t_queued

@@ -1,0 +1,112 @@
+"""Discrete-event simulation substrate for the PoCL-R runtime.
+
+The paper's daemon is built around blocking-socket reader/writer threads;
+we adapt that to a deterministic event-loop driven by a logical clock
+(DESIGN.md §2, adaptation note 1). Functional compute (real JAX calls)
+executes in causal order as the simulated clock reaches each kernel's
+start time, so timing semantics and numerical semantics stay unified and
+the whole runtime is testable on one CPU device.
+
+Link bandwidth is modeled with per-link FIFO serialization: a message
+occupies the link for ``bytes / bandwidth`` after the sender's protocol
+overheads, then arrives ``latency`` later. This reproduces the paper's
+observation that routing 12 Gb/s of inter-server traffic through the
+client is "impractical at best" (§7.2): the client's single link becomes
+the contended FIFO.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Callable, Optional
+
+
+class SimClock:
+    def __init__(self):
+        self._q: list = []
+        self._seq = itertools.count()
+        self.now = 0.0
+
+    def schedule(self, delay: float, fn: Callable, *args):
+        t = self.now + max(delay, 0.0)
+        heapq.heappush(self._q, (t, next(self._seq), fn, args))
+        return t
+
+    def schedule_at(self, t: float, fn: Callable, *args):
+        heapq.heappush(self._q, (max(t, self.now), next(self._seq), fn, args))
+
+    def run(self, until: Optional[float] = None) -> float:
+        while self._q:
+            t, _, fn, args = self._q[0]
+            if until is not None and t > until:
+                break
+            heapq.heappop(self._q)
+            self.now = t
+            fn(*args)
+        return self.now
+
+
+class Link:
+    """Point-to-point link with FIFO serialization + propagation latency.
+
+    ``latency`` is one-way propagation (s); ``bandwidth`` in B/s.
+    """
+
+    def __init__(self, clock: SimClock, latency: float, bandwidth: float,
+                 name: str = ""):
+        self.clock = clock
+        self.latency = latency
+        self.bandwidth = bandwidth
+        self.name = name
+        self._busy_until = 0.0
+        self.bytes_sent = 0
+        self.up = True
+
+    def rtt(self) -> float:
+        return 2.0 * self.latency
+
+    def send(self, nbytes: float, on_delivered: Callable,
+             serialize_overhead: float = 0.0):
+        """Queue a message; ``on_delivered`` fires at the receiver."""
+        if not self.up:
+            return None  # dropped — sender times out via its own logic
+        start = max(self.clock.now, self._busy_until) + serialize_overhead
+        tx = nbytes / self.bandwidth if self.bandwidth > 0 else 0.0
+        self._busy_until = start + tx
+        self.bytes_sent += nbytes
+        arrive = self._busy_until + self.latency
+        self.clock.schedule_at(arrive, on_delivered)
+        return arrive
+
+
+class DeviceSim:
+    """A compute device with a busy-until timeline and an analytic or
+    measured kernel cost model."""
+
+    def __init__(self, clock: SimClock, name: str,
+                 flops: float = 10e12, mem_bw: float = 500e9):
+        self.clock = clock
+        self.name = name
+        self.flops = flops
+        self.mem_bw = mem_bw
+        self._busy_until = 0.0
+        self.busy_time = 0.0
+
+    def kernel_cost(self, flop_count: float = 0.0, bytes_moved: float = 0.0,
+                    duration: Optional[float] = None) -> float:
+        if duration is not None:
+            return duration
+        return max(flop_count / self.flops if self.flops else 0.0,
+                   bytes_moved / self.mem_bw if self.mem_bw else 0.0)
+
+    def execute(self, cost: float, on_done: Callable) -> tuple[float, float]:
+        """Schedule a kernel; returns (start, end) sim times."""
+        start = max(self.clock.now, self._busy_until)
+        end = start + cost
+        self._busy_until = end
+        self.busy_time += cost
+        self.clock.schedule_at(end, on_done)
+        return start, end
+
+    def utilization(self, horizon: float) -> float:
+        return self.busy_time / horizon if horizon > 0 else 0.0

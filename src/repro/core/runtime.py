@@ -1,0 +1,559 @@
+"""PoCL-R runtime: client driver + server daemons + decentralized
+scheduling over a simulated MEC network (paper §4–§5).
+
+Semantics implemented faithfully:
+
+* Commands are pushed to the target server immediately with their event
+  dependencies (§5.2); the server dispatches as soon as deps resolve —
+  locally-produced events resolve locally, remote ones via peer
+  completion notifications, with NO client round-trip (decentralized
+  mode). ``scheduling='client'`` routes completions through the client
+  instead (the SnuCL-like baseline the paper compares against).
+* Buffer migrations go source-server → destination-server directly over
+  peer links (§5.1); ``p2p_migration=False`` stages them through the
+  client (the naive path: download + upload over the slowest link).
+* ``cl_pocl_content_size`` (§5.3): migrations move only the used prefix.
+* TCP vs RDMA transports (§5.4) with shadow-buffer staging, registration
+  and rkey-exchange costs.
+* Connection loss (§4.3): session IDs, command replay on reconnect,
+  server-side dedup of already-processed commands, device-unavailable
+  status, optional local fallback execution (Fig. 4).
+
+Kernels execute *functionally* (real arrays) in causal simulation order,
+so the same runtime that produces latency numbers also produces bit-exact
+results for the tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import secrets
+from collections import deque
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core import commands as C
+from repro.core.buffers import Buffer
+from repro.core.events import (COMPLETE, ERROR, QUEUED, RUNNING, SUBMITTED,
+                               Event)
+from repro.core.netsim import DeviceSim, Link, SimClock
+from repro.core.transport import (make_transport, wire_scale,
+    CLIENT_SUBMIT, CLIENT_REAP, DISPATCH, COMPLETE_WRITE)
+
+
+@dataclasses.dataclass
+class DeviceSpec:
+    name: str
+    flops: float = 10e12
+    mem_bw: float = 500e9
+
+
+@dataclasses.dataclass
+class ServerSpec:
+    name: str
+    devices: Sequence[DeviceSpec] = (DeviceSpec("gpu0"),)
+
+
+@dataclasses.dataclass
+class LinkSpec:
+    latency: float = 61e-6        # one-way; paper LAN ping 0.122 ms RTT
+    bandwidth: float = 100e6 / 8  # 100 Mbit Ethernet
+
+
+class ServerSim:
+    """The pocld daemon: reader/writer threads become event-loop actors."""
+
+    def __init__(self, rt: "ClientRuntime", spec: ServerSpec):
+        self.rt = rt
+        self.name = spec.name
+        self.devices = {d.name: DeviceSim(rt.clock, d.name, d.flops, d.mem_bw)
+                        for d in spec.devices}
+        self.session_id: Optional[bytes] = None
+        self.processed: set = set()           # command ids (replay dedup)
+        self.known_events: dict = {}          # event id -> Event
+        self.resolved_remote: set = set()     # remote event ids seen complete
+        self.pending: list = []               # (event, dev, remaining_dep_ids)
+
+    # ---- command arrival ----
+    def receive_command(self, ev: Event, dev_name: str, dep_ids: list):
+        cmd = ev.command
+        if cmd.id in self.processed:          # replayed after reconnect
+            return
+        self.processed.add(cmd.id)
+        self.known_events[ev.id] = ev
+        ev.status = SUBMITTED
+        ev.t_submitted = self.rt.clock.now
+        remaining = set()
+        for dep_id in dep_ids:
+            dep = self.rt.events.get(dep_id)
+            if dep is None or dep.status == COMPLETE:
+                continue
+            if dep.server == self.name:
+                dep.on_complete(lambda _e, eid=ev.id: self._dep_done(eid, _e.id))
+                remaining.add(dep_id)
+            elif dep_id in self.resolved_remote:
+                continue
+            else:
+                remaining.add(dep_id)         # waits for peer notification
+        self.pending.append([ev, dev_name, remaining])
+        self._dispatch_ready()
+
+    def _dep_done(self, ev_id: int, dep_id: int):
+        for entry in self.pending:
+            if entry[0].id == ev_id:
+                entry[2].discard(dep_id)
+        self._dispatch_ready()
+
+    def notify_remote_complete(self, dep_id: int):
+        self.resolved_remote.add(dep_id)
+        for entry in self.pending:
+            entry[2].discard(dep_id)
+        self._dispatch_ready()
+
+    def _dispatch_ready(self):
+        # remove ready entries BEFORE executing: execution may complete
+        # synchronously and re-enter this method
+        while True:
+            ready = [e for e in self.pending if not e[2]]
+            if not ready:
+                return
+            self.pending = [e for e in self.pending if e[2]]
+            for ev, dev_name, _ in ready:
+                self._execute(ev, dev_name)
+
+    # ---- execution ----
+    def _execute(self, ev: Event, dev_name: str):
+        cmd = ev.command
+        if isinstance(cmd, C.MigrateBuffer):
+            self.rt._start_p2p_push(self, ev)
+            return
+        if isinstance(cmd, C.ReadBuffer):
+            self.rt._start_read_return(self, ev)
+            return
+        dev = self.devices[dev_name or next(iter(self.devices))]
+        if isinstance(cmd, C.WriteBuffer):
+            cmd.buffer.set_data(np.asarray(cmd.data), self.name)
+            ev.status = RUNNING
+            ev.t_start = self.rt.clock.now
+            self._complete(ev)
+            return
+        # NDRangeKernel / BuiltinKernel / Marker
+        flops = getattr(cmd, "flops", 0.0)
+        bytes_moved = getattr(cmd, "bytes_moved", 0.0)
+        duration = getattr(cmd, "duration", None)
+        cost = dev.kernel_cost(flops, bytes_moved, duration)
+        ev.status = RUNNING
+
+        def done():
+            if isinstance(cmd, C.NDRangeKernel) and cmd.fn is not None:
+                ins = [b.data for b in cmd.inputs]
+                outs = cmd.fn(*ins)
+                if not isinstance(outs, (tuple, list)):
+                    outs = (outs,)
+                for b, arr in zip(cmd.outputs, outs):
+                    b.set_data(np.asarray(arr), self.name)
+            else:
+                for b in getattr(cmd, "outputs", ()):
+                    b.invalidate_except(self.name)
+                    b.valid_on = {self.name}
+            self._complete(ev)
+
+        ev.t_start, _ = dev.execute(cost, done)
+
+    def _complete(self, ev: Event):
+        ev.complete(self.rt.clock.now)
+        # resolve locally first: dependents on THIS server may have
+        # classified the event as remote (e.g. a migration that finishes
+        # on the destination) — no wire cost for self-notification
+        self.notify_remote_complete(ev.id)
+        self.rt._broadcast_completion(self, ev)
+
+
+class Session:
+    """Client-side view of one server connection (paper §4.3)."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.session_id = bytes(16)           # all-zeroes until handshake
+        self.available = False
+        self.replay: deque = deque(maxlen=64)  # last commands (unacked)
+
+
+class ClientRuntime:
+    """The PoCL remote client driver (host side of the OpenCL API)."""
+
+    def __init__(self, servers: Sequence[ServerSpec],
+                 client_link: LinkSpec = LinkSpec(),
+                 peer_link: LinkSpec = LinkSpec(latency=61e-6,
+                                                bandwidth=100e6 / 8),
+                 transport: str = "tcp",
+                 peer_transport: Optional[str] = None,
+                 svm: bool = False,
+                 scheduling: str = "decentralized",   # | 'client'
+                 p2p_migration: bool = True,
+                 local_device: Optional[DeviceSpec] = None):
+        self.clock = SimClock()
+        self.transport = make_transport(transport, svm)
+        self.peer_transport = make_transport(peer_transport or transport, svm)
+        self.scheduling = scheduling
+        self.p2p_migration = p2p_migration
+        self.servers = {s.name: ServerSim(self, s) for s in servers}
+        self.events: dict = {}
+        self.sessions = {s: Session(s) for s in self.servers}
+        self.local_device = DeviceSim(
+            self.clock, "local",
+            *( (local_device.flops, local_device.mem_bw)
+               if local_device else (1e12, 50e9) ))
+        # links
+        self.c_links = {s: Link(self.clock, client_link.latency,
+                                client_link.bandwidth, f"client<->{s}")
+                        for s in self.servers}
+        self.p_links = {}
+        names = list(self.servers)
+        for i, a in enumerate(names):
+            for b in names[i + 1:]:
+                self.p_links[(a, b)] = Link(self.clock, peer_link.latency,
+                                            peer_link.bandwidth, f"{a}<->{b}")
+        self._buffers: list[Buffer] = []
+        self._mr_registered: set = set()
+        # connect (handshake: rtt + session id assignment) — run the
+        # clock until all sessions are established, as clCreateContext
+        # would block
+        for s in self.servers:
+            self._handshake(s)
+        self.clock.run()
+
+    # ------------------------------------------------------------------
+    def peer_link(self, a: str, b: str) -> Link:
+        return self.p_links.get((a, b)) or self.p_links[(b, a)]
+
+    def _handshake(self, server: str):
+        sess = self.sessions[server]
+
+        def done():
+            sess.session_id = secrets.token_bytes(16)
+            self.servers[server].session_id = sess.session_id
+            sess.available = True
+
+        self.c_links[server].send(64, done)
+
+    # ---- buffers ----
+    def create_buffer(self, nbytes: int, content_size_buffer: Buffer = None,
+                      name: str = "") -> Buffer:
+        b = Buffer(nbytes=nbytes, content_size_buffer=content_size_buffer,
+                   name=name)
+        b.valid_on = {"client"}
+        self._buffers.append(b)
+        return b
+
+    # ---- enqueue API ----
+    def _new_event(self, cmd, server: str) -> Event:
+        ev = Event(command=cmd, server=server)
+        ev.t_queued = self.clock.now
+        self.events[ev.id] = ev
+        return ev
+
+    def enqueue_kernel(self, server: str, device: str = "",
+                       fn: Optional[Callable] = None,
+                       inputs: Sequence[Buffer] = (),
+                       outputs: Sequence[Buffer] = (),
+                       flops: float = 0.0, bytes_moved: float = 0.0,
+                       duration: Optional[float] = None,
+                       wait_for: Sequence[Event] = (),
+                       name: str = "kernel") -> Event:
+        """Enqueue a kernel; implicit migrations are added for any input
+        not valid on the target server (standard OpenCL semantics)."""
+        if not self.sessions[server].available:
+            raise DeviceUnavailable(server)
+        deps = list(wait_for)
+        for b in inputs:
+            if server not in b.valid_on:
+                deps.append(self.enqueue_migration(b, server,
+                                                   wait_for=wait_for))
+        cmd = C.NDRangeKernel(fn=fn, inputs=tuple(inputs),
+                              outputs=tuple(outputs), flops=flops,
+                              bytes_moved=bytes_moved, duration=duration,
+                              name=name)
+        ev = self._new_event(cmd, server)
+        self._send_command(ev, server, device, [d.id for d in deps])
+        for b in outputs:
+            b.valid_on = {server}
+        return ev
+
+    def enqueue_write(self, server: str, buf: Buffer, data,
+                      wait_for: Sequence[Event] = ()) -> Event:
+        cmd = C.WriteBuffer(buffer=buf, data=data,
+                            nbytes=np.asarray(data).nbytes)
+        ev = self._new_event(cmd, server)
+        self._send_command(ev, server, "", [d.id for d in wait_for],
+                           payload=cmd.nbytes)
+        buf.valid_on = {server, "client"}
+        return ev
+
+    def enqueue_read(self, server: str, buf: Buffer,
+                     wait_for: Sequence[Event] = ()) -> Event:
+        cmd = C.ReadBuffer(buffer=buf)
+        ev = self._new_event(cmd, server)
+        self._send_command(ev, server, "", [d.id for d in wait_for])
+        return ev
+
+    def enqueue_migration(self, buf: Buffer, dst: str,
+                          wait_for: Sequence[Event] = ()) -> Event:
+        """Migrate to ``dst``. P2P: command goes to the SOURCE server,
+        which pushes directly to the destination (paper §5.1)."""
+        if dst in buf.valid_on:
+            ev = self._new_event(C.Marker(), dst)
+            ev.complete(self.clock.now)
+            return ev
+        srcs = [s for s in buf.valid_on if s != "client"]
+        if not srcs:  # client-held data: plain upload
+            return self.enqueue_write(dst, buf, buf.data
+                                      if buf.data is not None
+                                      else np.zeros(buf.nbytes, np.uint8))
+        src = srcs[0]
+        cmd = C.MigrateBuffer(buffer=buf, dst_server=dst)
+        ev = self._new_event(cmd, src if self.p2p_migration else dst)
+        if self.p2p_migration:
+            self._send_command(ev, src, "", [d.id for d in wait_for])
+        else:
+            # naive: read back to client, then write to dst
+            rd = self.enqueue_read(src, buf, wait_for=wait_for)
+            wr_ev = self._new_event(cmd, dst)
+
+            def after_read(_):
+                nb = buf.transfer_bytes()
+                cost = self.transport.command_cost(nb)
+                self.clock.schedule(CLIENT_SUBMIT + cost.sender_cpu,
+                                    self._deliver_naive_write, wr_ev, dst,
+                                    nb, cost)
+
+            rd.on_complete(after_read)
+            return wr_ev
+        return ev
+
+    def _deliver_naive_write(self, ev, dst, nbytes, cost):
+        def arrived():
+            ev.command.buffer.valid_on.add(dst)
+            ev.complete(self.clock.now)
+            self._broadcast_completion(self.servers[dst], ev)
+        link = self.c_links[dst]
+        link.send(nbytes * wire_scale(self.transport, link.bandwidth),
+                  arrived, serialize_overhead=cost.sender_cpu)
+
+    def marker(self) -> Event:
+        ev = self._new_event(C.Marker(), "client")
+        ev.complete(self.clock.now)
+        return ev
+
+    # ---- wire ----
+    def _send_command(self, ev: Event, server: str, device: str,
+                      dep_ids: list, payload: float = 0.0):
+        sess = self.sessions[server]
+        sess.replay.append((ev, server, device, dep_ids, payload))
+        cost = self.transport.command_cost(payload)
+        link = self.c_links[server]
+
+        def deliver():
+            self.clock.schedule(
+                cost.receiver_cpu + DISPATCH,
+                self.servers[server].receive_command, ev, device, dep_ids)
+
+        link.send(cost.wire_bytes * wire_scale(self.transport,
+                                               link.bandwidth),
+                  deliver,
+                  serialize_overhead=CLIENT_SUBMIT + cost.sender_cpu)
+
+    # ---- migration execution (on source server) ----
+    def _start_p2p_push(self, src_srv: ServerSim, ev: Event):
+        cmd = ev.command
+        buf, dst = cmd.buffer, cmd.dst_server
+        nbytes = buf.transfer_bytes()
+        tr = self.peer_transport
+        reg = 0.0
+        key = (buf.id, src_srv.name, dst)
+        if key not in self._mr_registered:
+            reg = tr.register_buffer(nbytes, peers=len(self.servers) - 1)
+            self._mr_registered.add(key)
+        cost = tr.command_cost(nbytes)
+        link = self.peer_link(src_srv.name, dst)
+        ev.status = RUNNING
+        ev.t_start = self.clock.now
+
+        def arrived():
+            def after_cpu():
+                buf.valid_on.add(dst)
+                ev.server = dst
+                self.servers[dst]._complete(ev)
+            self.clock.schedule(cost.receiver_cpu, after_cpu)
+
+        link.send(cost.wire_bytes * wire_scale(tr, link.bandwidth),
+                  arrived, serialize_overhead=reg + cost.sender_cpu)
+
+    def _start_read_return(self, srv: ServerSim, ev: Event):
+        buf = ev.command.buffer
+        nbytes = buf.transfer_bytes()
+        cost = self.transport.command_cost(nbytes)
+        link = self.c_links[srv.name]
+        ev.status = RUNNING
+        ev.t_start = self.clock.now
+
+        def arrived():
+            buf.valid_on.add("client")
+            ev.complete(self.clock.now)
+
+        link.send(cost.wire_bytes * wire_scale(self.transport,
+                                               link.bandwidth),
+                  arrived, serialize_overhead=COMPLETE_WRITE + cost.sender_cpu)
+
+    # ---- completion propagation ----
+    def _broadcast_completion(self, srv: ServerSim, ev: Event):
+        comp = (self.peer_transport if self.scheduling == "decentralized"
+                else self.transport).completion_cost()
+        # to client (always)
+        self.c_links[srv.name].send(
+            comp.wire_bytes, lambda: self._client_reap(ev),
+            serialize_overhead=COMPLETE_WRITE + comp.sender_cpu)
+        if self.scheduling == "decentralized":
+            for peer in self.servers.values():
+                if peer.name == srv.name:
+                    continue
+                link = self.peer_link(srv.name, peer.name)
+                link.send(comp.wire_bytes,
+                          lambda p=peer: p.notify_remote_complete(ev.id),
+                          serialize_overhead=comp.sender_cpu)
+
+    def _client_reap(self, ev: Event):
+        self.clock.schedule(CLIENT_REAP, self._client_reap2, ev)
+
+    def _set_ack(self, ev: Event):
+        ev.t_client_ack = self.clock.now
+
+    def _client_reap2(self, ev: Event):
+        ev.t_client_ack = self.clock.now
+        if self.scheduling == "client":
+            # SnuCL-like: client forwards resolution to every other server
+            for peer in self.servers.values():
+                if peer.name == ev.server:
+                    continue
+                comp = self.transport.completion_cost()
+                self.c_links[peer.name].send(
+                    comp.wire_bytes,
+                    lambda p=peer: p.notify_remote_complete(ev.id),
+                    serialize_overhead=comp.sender_cpu)
+
+    # ---- fault injection / sessions (paper §4.3) ----
+    def inject_disconnect(self, server: str, at: Optional[float] = None):
+        def go():
+            self.c_links[server].up = False
+            self.sessions[server].available = False
+        if at is None:
+            go()
+        else:
+            self.clock.schedule_at(at, go)
+
+    def reconnect(self, server: str, at: Optional[float] = None):
+        """Restore the link; replay unacknowledged commands (server dedupes
+        by command id). The session ID survives even if the client's
+        address changed."""
+        def go():
+            link = self.c_links[server]
+            link.up = True
+
+            def handshook():
+                self.sessions[server].available = True
+                for (ev, srv, device, dep_ids, payload) in \
+                        list(self.sessions[server].replay):
+                    if ev.status in (COMPLETE, ERROR):
+                        continue
+                    cost = self.transport.command_cost(payload)
+                    link.send(cost.wire_bytes,
+                              lambda e=ev, d=device, dd=dep_ids:
+                              self.servers[server].receive_command(e, d, dd),
+                              serialize_overhead=cost.sender_cpu)
+
+            link.send(64 + 16, handshook)   # handshake incl. session id
+        if at is None:
+            go()
+        else:
+            self.clock.schedule_at(at, go)
+
+    def enqueue_kernel_redundant(self, servers: Sequence[str], **kw) -> Event:
+        """Straggler mitigation: dispatch the same kernel to several
+        servers; the first completion wins and late copies are ignored
+        (the client simply reaps the winner — the OpenCL semantics make
+        duplicate side-effect-free kernels safe to race).
+
+        Returns a user event that completes with the winner."""
+        race = Event(user=True, server="client")
+        race.t_queued = self.clock.now
+        self.events[race.id] = race
+        outputs = kw.get("outputs", ())
+        fn = kw.pop("fn", None)
+
+        def on_done(ev):
+            if race.status != COMPLETE:
+                # winner executes the functional payload; losers are void
+                if fn is not None:
+                    ins = [b.data for b in kw.get("inputs", ())]
+                    outs = fn(*ins)
+                    if not isinstance(outs, (tuple, list)):
+                        outs = (outs,)
+                    for b, arr in zip(outputs, outs):
+                        b.set_data(np.asarray(arr), ev.server)
+                race.server = ev.server
+                race.complete(self.clock.now)
+
+        for s in servers:
+            if not self.sessions[s].available:
+                continue
+            ev = self.enqueue_kernel(s, fn=None, **kw)
+            ev.on_complete(on_done)
+        return race
+
+    def run_local_fallback(self, fn, inputs, outputs, flops=0.0,
+                           duration=None) -> Event:
+        """Fig. 4: compute locally (reduced model) while remotes are gone."""
+        ev = self._new_event(C.NDRangeKernel(fn=fn, inputs=tuple(inputs),
+                                             outputs=tuple(outputs),
+                                             flops=flops, duration=duration),
+                             "client")
+
+        def done():
+            cmd = ev.command
+            if cmd.fn is not None:
+                ins = [b.data for b in cmd.inputs]
+                outs = cmd.fn(*ins)
+                if not isinstance(outs, (tuple, list)):
+                    outs = (outs,)
+                for b, arr in zip(cmd.outputs, outs):
+                    b.set_data(np.asarray(arr), "client")
+            ev.complete(self.clock.now)
+
+        cost = self.local_device.kernel_cost(flops, 0.0, duration)
+        ev.t_start, _ = self.local_device.execute(cost, done)
+        return ev
+
+    # ---- control ----
+    def finish(self) -> float:
+        """Drain the simulation; returns the final clock time."""
+        return self.clock.run()
+
+    def stats(self) -> dict:
+        return {
+            "time": self.clock.now,
+            "client_link_bytes": {s: l.bytes_sent
+                                  for s, l in self.c_links.items()},
+            "peer_link_bytes": {f"{a}-{b}": l.bytes_sent
+                                for (a, b), l in self.p_links.items()},
+            "device_busy": {f"{s}/{d}": dev.busy_time
+                            for s, srv in self.servers.items()
+                            for d, dev in srv.devices.items()},
+        }
+
+
+class DeviceUnavailable(RuntimeError):
+    """CL_DEVICE_NOT_AVAILABLE analogue."""
+    def __init__(self, server):
+        super().__init__(f"server {server} unavailable")
+        self.server = server

@@ -1,0 +1,66 @@
+"""Elastic scaling: re-mesh a running job onto surviving hardware.
+
+The paper handles UE↔MEC connection loss with sessions + replay (§4.3);
+at cluster scale the analogous event is losing a pod (or slice). The
+recovery path implemented here:
+
+  1. failure detected (heartbeat timeout → ``PodFailure``),
+  2. rebuild the mesh over the surviving pods (same axis names),
+  3. re-shard the last checkpoint onto the new mesh (restore() device_puts
+     to the new shardings),
+  4. rescale the data plan (smaller global batch or more grad-accum
+     microbatches, keeping the *effective* batch constant),
+  5. replay the step log from the checkpoint step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+from repro.distributed.context import MeshContext
+
+
+class PodFailure(RuntimeError):
+    def __init__(self, pod_index: int):
+        super().__init__(f"pod {pod_index} lost")
+        self.pod_index = pod_index
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    """How to keep the same effective batch on fewer pods."""
+    microbatches: int
+    global_batch: int
+
+    @staticmethod
+    def rescale(microbatches: int, global_batch: int,
+                old_pods: int, new_pods: int) -> "ElasticPlan":
+        # keep effective batch: scale grad-accum up by the pod ratio
+        assert old_pods % max(new_pods, 1) == 0
+        factor = old_pods // max(new_pods, 1)
+        return ElasticPlan(microbatches=microbatches * factor,
+                           global_batch=global_batch)
+
+
+def surviving_mesh(devices, pods_total: int, lost_pods: set,
+                   data: int, model: int):
+    """Mesh over surviving pods (same axis names, smaller 'pod' extent)."""
+    import numpy as np
+    alive = [p for p in range(pods_total) if p not in lost_pods]
+    per_pod = data * model
+    dev = np.asarray(devices)[: pods_total * per_pod]
+    dev = dev.reshape(pods_total, data, model)[alive]
+    return jax.sharding.Mesh(dev, ("pod", "data", "model"))
+
+
+def remesh_state(state, new_ctx: MeshContext, param_specs_tree):
+    """Re-shard a state pytree onto a new mesh context."""
+    from repro.models.specs import ParamSpec, is_spec
+
+    def f(leaf, spec):
+        sh = new_ctx.sharding(spec.axes, spec.shape)
+        return jax.device_put(leaf, sh)
+
+    return jax.tree.map(f, state, param_specs_tree, is_leaf=is_spec)

@@ -1,0 +1,36 @@
+"""Jitted dispatch wrapper: Pallas kernel on TPU, interpret-mode on CPU
+(validation), with the blockwise-XLA path as the production fallback."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "q_offset", "kv_len", "logit_softcap",
+    "q_chunk", "kv_chunk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, q_offset: int = 0,
+                    kv_len: Optional[int] = None,
+                    logit_softcap: Optional[float] = None,
+                    q_chunk: int = 256, kv_chunk: int = 256,
+                    interpret: bool = False):
+    """Flash attention forward. On non-TPU backends, ``interpret=True``
+    runs the kernel body in the Pallas interpreter for validation."""
+    return flash_attention_fwd(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        kv_len=kv_len, logit_softcap=logit_softcap,
+        q_chunk=q_chunk, kv_chunk=kv_chunk,
+        interpret=interpret or not _on_tpu())
+
+
+__all__ = ["flash_attention", "attention_ref"]

@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the flash attention kernel: naive dense attention
+with explicit masking (materializes the full score matrix — small shapes
+only)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,                # [B, Sq, H, hd]
+    k: jax.Array,                # [B, Sk, KV, hd]
+    v: jax.Array,                # [B, Sk, KV, hd]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    kv_len: Optional[int] = None,
+    logit_softcap: Optional[float] = None,
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    k = jnp.repeat(k, H // KV, axis=2)
+    v = jnp.repeat(v, H // KV, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    if logit_softcap is not None:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    if kv_len is not None:
+        mask &= kpos[None, :] < kv_len
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[None, None], p, 0.0)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,23 @@
+"""Jitted dispatch wrapper for the SSD scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dA, Bm, Cm, *, chunk: int = 128, interpret: bool = False):
+    """Returns (y, final_state) for the head-major SSD recurrence."""
+    return ssd_scan(x, dA, Bm, Cm, chunk=chunk,
+                    interpret=interpret or not _on_tpu())
+
+
+__all__ = ["ssd", "ssd_ref"]

@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for the SSD scan kernel — per-head chunked SSD,
+identical math to repro.models.ssm.ssd_chunked but head-major layout."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dA, Bm, Cm, chunk: int, initial_state=None):
+    """Head-major SSD.
+
+    x:  [BH, S, P]   (pre-scaled by dt)
+    dA: [BH, S]      log-decay per step (negative)
+    Bm: [BH, S, N]
+    Cm: [BH, S, N]
+    Returns (y [BH, S, P], final_state [BH, P, N]).
+    """
+    BH, S, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+    f32 = jnp.float32
+
+    xc = x.reshape(BH, nc, Q, P).astype(f32)
+    dAc = dA.reshape(BH, nc, Q).astype(f32)
+    Bc = Bm.reshape(BH, nc, Q, N).astype(f32)
+    Cc = Cm.reshape(BH, nc, Q, N).astype(f32)
+
+    cs = jnp.cumsum(dAc, axis=2)                           # [BH,nc,Q]
+    diff = cs[..., :, None] - cs[..., None, :]
+    L = jnp.where(jnp.tril(jnp.ones((Q, Q), bool)), jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc) * L
+    y_diag = jnp.einsum("bcqk,bckp->bcqp", scores, xc)
+
+    decay_states = jnp.exp(cs[..., -1:] - cs)              # [BH,nc,Q]
+    states = jnp.einsum("bcqn,bcq,bcqp->bcpn", Bc, decay_states, xc)
+
+    chunk_decay = jnp.exp(cs[..., -1])                     # [BH,nc]
+    h0 = (initial_state.astype(f32) if initial_state is not None
+          else jnp.zeros((BH, P, N), f32))
+
+    def step(h, inp):
+        dec, st = inp
+        return h * dec[:, None, None] + st, h
+
+    final, h_prev = jax.lax.scan(
+        step, h0, (jnp.moveaxis(chunk_decay, 1, 0),
+                   jnp.moveaxis(states, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                    # [BH,nc,P,N]
+
+    y_off = jnp.einsum("bcqn,bcpn,bcq->bcqp", Cc, h_prev, jnp.exp(cs))
+    y = (y_diag + y_off).reshape(BH, S, P)
+    return y.astype(x.dtype), final

@@ -1,0 +1,44 @@
+"""Jitted wrappers + the full compress/decompress pipeline used by the
+cross-pod gradient reducer (repro.distributed.compression)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk_compress.kernel import topk_pack
+from repro.kernels.topk_compress.ref import topk_pack_ref, unpack_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("k_per_block", "block",
+                                             "interpret", "use_kernel"))
+def compress(x, *, k_per_block: int, block: int = 1024,
+             interpret: bool = False, use_kernel: bool = True):
+    """→ (values [nb,k], idx [nb,k], residual [n], content_bytes scalar).
+
+    ``content_bytes`` is the cl_pocl_content_size analogue: the number of
+    meaningful payload bytes a migration of this buffer must move.
+    """
+    if use_kernel and (_on_tpu() or interpret):
+        vals, idx, resid = topk_pack(x, k_per_block, block,
+                                     interpret=interpret or not _on_tpu())
+    else:
+        vals, idx = topk_pack_ref(x, k_per_block, block)
+        resid = x - unpack_ref(vals, idx, block, x.shape[0])
+    content = jnp.int32(vals.size * vals.dtype.itemsize
+                        + idx.size * idx.dtype.itemsize)
+    return vals, idx, resid, content
+
+
+@functools.partial(jax.jit, static_argnames=("block", "n"))
+def decompress(vals, idx, *, block: int, n: int):
+    return unpack_ref(vals, idx, block, n)
+
+
+__all__ = ["compress", "decompress", "topk_pack", "topk_pack_ref",
+           "unpack_ref"]

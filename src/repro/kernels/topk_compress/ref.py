@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for block-local top-k compression packing."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_pack_ref(x: jax.Array, k_per_block: int, block: int):
+    """x: [n] (n % block == 0) → (values [nb, k], local_idx [nb, k] int32).
+
+    Per block of ``block`` elements, select the k largest |x| (ties by
+    lower index, matching lax.top_k) and return values + block-local
+    indices.
+    """
+    n = x.shape[0]
+    nb = n // block
+    xb = x.reshape(nb, block)
+    mag = jnp.abs(xb)
+    _, idx = jax.lax.top_k(mag, k_per_block)        # [nb, k]
+    vals = jnp.take_along_axis(xb, idx, axis=1)
+    return vals, idx.astype(jnp.int32)
+
+
+def unpack_ref(vals: jax.Array, idx: jax.Array, block: int, n: int):
+    """Inverse of topk_pack_ref: scatter into a dense [n] array."""
+    nb, k = vals.shape
+    out = jnp.zeros((nb, block), vals.dtype)
+    out = out.at[jnp.arange(nb)[:, None], idx].set(vals)
+    return out.reshape(n)

@@ -1,0 +1,199 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ["REPRO_DTYPE_BARRIER"] = "1"   # keep bf16 storage visible in HLO
+
+# Multi-pod dry-run: lower + compile every (architecture × input shape)
+# cell on the production meshes and extract memory/cost/collective data.
+#
+# The two lines above MUST run before any other import (jax locks the
+# device count on first initialization).
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+#       --shape train_4k [--multi-pod] [--out results.json]
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro import configs                       # noqa: E402
+from repro.configs.shapes import SHAPES         # noqa: E402
+from repro.distributed.context import MeshContext, mesh_context  # noqa: E402
+from repro.launch import specs as lspecs        # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_desc  # noqa: E402
+from repro.models import lm                     # noqa: E402
+from repro.optim import AdamW, cosine_schedule  # noqa: E402
+from repro.roofline import analyze_hlo, from_totals  # noqa: E402
+from repro.training.step import make_train_step  # noqa: E402
+
+_DT = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+
+
+def lower_cell(arch_id: str, shape_name: str, multi_pod: bool = False,
+               ctx_overrides: dict | None = None,
+               strategy: str | None = None,
+               microbatches: int | None = None):
+    """Lower + compile one cell. Returns (compiled, lowered, meta dict)."""
+    cfg = configs.get_config(arch_id)
+    run = configs.get_overrides(arch_id)
+    if microbatches is not None:
+        import dataclasses as _dc
+        run = _dc.replace(run, microbatches=microbatches)
+    if strategy is None:
+        strategy = run.strategy
+    cell = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    if cell.kind == "decode":
+        layout = "seq" if cell.name == "long_500k" else run.decode_cache_layout
+    else:
+        layout = "kv_rep"
+    ctx = MeshContext(mesh, rules=ctx_overrides, cache_layout=layout,
+                      strategy=strategy)
+
+    with mesh_context(ctx):
+        if cell.kind == "train":
+            opt = AdamW(cosine_schedule(3e-4, 100, 10_000),
+                        moment_dtype=_DT[run.adam_dtype])
+            step = make_train_step(cfg, opt, microbatches=run.microbatches,
+                                   remat=run.remat,
+                                   remat_group=run.remat_group)
+            state = lspecs.abstract_train_state(cfg, ctx, run)
+            batch = lspecs.train_batch_specs(cfg, cell, ctx, run)
+            lowered = jax.jit(step, donate_argnums=(0,)).lower(state, batch)
+            mode = "train"
+            tokens = cell.batch * cell.seq
+        elif cell.kind == "prefill":
+            params = lspecs.abstract_params(cfg, ctx, _DT[run.serve_dtype])
+            cache = lspecs.abstract_cache(
+                cfg, ctx, cell.batch, cell.seq,
+                enc_len=cell.seq if cfg.is_encdec else 0)
+            inputs = lspecs.prefill_input_specs(cfg, cell, ctx)
+
+            def prefill_fn(params, cache, inputs):
+                return lm.prefill(params, cfg, cache, **inputs,
+                                  chunk=run.prefill_chunk)
+
+            lowered = jax.jit(prefill_fn, donate_argnums=(1,)).lower(
+                params, cache, inputs)
+            mode = "prefill"
+            tokens = cell.batch * cell.seq
+        else:  # decode
+            params = lspecs.abstract_params(cfg, ctx, _DT[run.serve_dtype])
+            cache = lspecs.abstract_cache(
+                cfg, ctx, cell.batch, cell.seq,
+                enc_len=cell.seq if cfg.is_encdec else 0)
+            # the cache holds `seq` tokens; mark pos near the end
+            token = lspecs.decode_token_specs(cfg, cell, ctx)
+
+            def decode_fn(params, cache, token):
+                return lm.decode_step(params, cfg, cache, token)
+
+            lowered = jax.jit(decode_fn, donate_argnums=(1,)).lower(
+                params, cache, token)
+            mode = "decode"
+            tokens = cell.batch
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+    meta = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_desc(mesh),
+        "mode": mode, "layout": layout, "compile_s": compile_s,
+        "strategy": strategy, "microbatches": run.microbatches,
+        "chips": mesh.devices.size,
+        "model_flops_global": cfg.model_flops_per_token(cell.seq, mode) * tokens,
+    }
+    return compiled, lowered, meta
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             keep_hlo: bool = False, strategy: str | None = None,
+             microbatches: int | None = None) -> dict:
+    compiled, lowered, meta = lower_cell(arch_id, shape_name, multi_pod,
+                                         strategy=strategy,
+                                         microbatches=microbatches)
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    tot = analyze_hlo(hlo)
+    rf = from_totals(arch_id, shape_name, meta["mesh"], meta["chips"],
+                     tot, meta["model_flops_global"],
+                     arg_bytes=getattr(mem, "argument_size_in_bytes", 0),
+                     temp_bytes=getattr(mem, "temp_size_in_bytes", 0),
+                     xla_flops_raw=float(ca.get("flops", 0.0)))
+    out = dict(meta)
+    out.update(rf.row())
+    out["coll_by_type"] = {k: float(v) for k, v in tot.coll_by_type.items()}
+    out["custom_calls"] = tot.custom_calls
+    out["unknown_while"] = tot.unknown_while
+    out["per_dev_bytes"] = {
+        "args": getattr(mem, "argument_size_in_bytes", 0),
+        "temps": getattr(mem, "temp_size_in_bytes", 0),
+        "output": getattr(mem, "output_size_in_bytes", 0),
+        "alias": getattr(mem, "alias_size_in_bytes", 0),
+    }
+    if keep_hlo:
+        out["hlo"] = hlo
+    return out
+
+
+def all_cells():
+    for arch in configs.ARCH_IDS:
+        mod = configs.arch_module(arch)
+        for name in SHAPES:
+            if configs.shapes.applicable(mod, name):
+                yield arch, name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--strategy", default=None,
+                    choices=[None, "megatron", "fsdp"])
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = list(all_cells()) if args.all else [(args.arch, args.shape)]
+    results, failures = [], []
+    for arch, shape in cells:
+        t0 = time.time()
+        try:
+            r = run_cell(arch, shape, args.multi_pod,
+                         strategy=args.strategy,
+                         microbatches=args.microbatches)
+            results.append(r)
+            print(f"OK   {arch:26s} {shape:12s} mesh={r['mesh']} "
+                  f"compile={r['compile_s']:.1f}s "
+                  f"t_comp={r['t_compute_s']:.4f}s t_mem={r['t_memory_s']:.4f}s "
+                  f"t_coll={r['t_collective_s']:.4f}s bound={r['bottleneck']} "
+                  f"useful={r['useful_ratio']:.3f} "
+                  f"roofline={r['roofline_frac']:.3f} "
+                  f"mem/dev={(r['per_dev_bytes']['args']+r['per_dev_bytes']['temps'])/2**30:.2f}GiB",
+                  flush=True)
+        except Exception as e:
+            failures.append((arch, shape, repr(e)))
+            print(f"FAIL {arch:26s} {shape:12s} {time.time()-t0:.1f}s {e!r}",
+                  flush=True)
+            traceback.print_exc()
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"results": results,
+                       "failures": [list(f_) for f_ in failures]}, f, indent=1)
+    print(f"\n{len(results)} ok, {len(failures)} failed")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+Kept as FUNCTIONS so importing this module never touches jax device
+state. The dry-run sets ``--xla_force_host_platform_device_count=512``
+before any jax import; smoke tests and benchmarks see 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1-device mesh with the production axis names (smoke tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+def mesh_desc(mesh) -> str:
+    return "x".join(f"{a}={s}" for a, s
+                    in zip(mesh.axis_names, mesh.devices.shape))

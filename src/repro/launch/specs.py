@@ -1,0 +1,169 @@
+"""Abstract input/state builders for the multi-pod dry-run.
+
+Everything is ``jax.ShapeDtypeStruct`` stand-ins with NamedShardings —
+weak-type-correct, shardable, no device allocation. The same builders
+drive ``launch/train.py`` / ``launch/serve.py`` with real arrays.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import RunOverrides
+from repro.configs.shapes import ShapeCell
+from repro.distributed.context import MeshContext, mesh_context
+from repro.models import lm, specs as pspecs
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamW, AdamWState, TrainState
+
+_DT = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+
+
+def _sds(shape, dtype, ctx: MeshContext, names) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=ctx.sharding(names, shape))
+
+
+# --------------------------------------------------------------------------
+# training inputs + state
+# --------------------------------------------------------------------------
+
+def train_batch_specs(cfg: ModelConfig, cell: ShapeCell, ctx: MeshContext,
+                      run: RunOverrides) -> dict:
+    """Microbatch-major batch: leaves [A, GB/A, ...]."""
+    A = run.microbatches
+    gb, S = cell.batch, cell.seq
+    assert gb % A == 0, (gb, A)
+    b = gb // A
+    tok = lambda: _sds((A, b, S), jnp.int32, ctx, (None, "batch", None))
+    emb = lambda: _sds((A, b, S, cfg.d_model), jnp.bfloat16, ctx,
+                       (None, "batch", None, None))
+    batch = {"labels": tok()}
+    if cfg.is_encdec:
+        batch["enc_embeds"] = emb()
+        batch["tokens"] = tok()
+    elif cfg.frontend is not None:
+        batch["embeds"] = emb()
+    else:
+        batch["tokens"] = tok()
+    return batch
+
+
+def param_sharding_fn(ctx: MeshContext):
+    return lambda axes, shape: ctx.sharding(axes, shape)
+
+
+def abstract_params(cfg: ModelConfig, ctx: MeshContext, dtype=jnp.float32):
+    sp = pspecs.model_param_specs(cfg)
+    return pspecs.abstract_from_specs(sp, dtype=dtype,
+                                      sharding_fn=param_sharding_fn(ctx))
+
+
+def abstract_train_state(cfg: ModelConfig, ctx: MeshContext,
+                         run: RunOverrides) -> TrainState:
+    params = abstract_params(cfg, ctx, _DT[run.param_dtype])
+    mdt = _DT[run.adam_dtype]
+    mom = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, mdt, sharding=p.sharding),
+        params)
+    opt = AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32), m=mom, v=mom)
+    return TrainState(params=params, opt=opt)
+
+
+def init_train_state(cfg: ModelConfig, ctx: Optional[MeshContext],
+                     run: RunOverrides, optimizer: AdamW, rng) -> TrainState:
+    """Real (materialized) train state, sharded if a ctx is given."""
+    sp = pspecs.model_param_specs(cfg)
+    params = pspecs.init_from_specs(rng, sp, _DT[run.param_dtype])
+    if ctx is not None:
+        shard = lambda p, s: jax.device_put(
+            p, ctx.sharding(s.axes, s.shape))
+        params = jax.tree.map(shard, params, sp,
+                              is_leaf=lambda x: hasattr(x, "shape")
+                              and not isinstance(x, pspecs.ParamSpec))
+    return TrainState(params=params, opt=optimizer.init(params))
+
+
+# --------------------------------------------------------------------------
+# serving state (KV cache) + inputs
+# --------------------------------------------------------------------------
+
+def _cache_axes_from_path(path) -> tuple:
+    keys = []
+    for p in path:
+        keys.append(getattr(p, "key", None) or getattr(p, "name", ""))
+    leaf = keys[-1]
+    parents = keys[:-1]
+    if leaf == "pos":
+        return ()
+    if "xattn" in parents:
+        axes = ("batch", None, None, None)
+    elif leaf in ("k", "v"):
+        axes = ("batch", "kv_seq", "kv_heads", None)
+    elif leaf == "state":
+        axes = ("batch", "hssm", None, None)
+    elif leaf == "conv_x":
+        axes = ("batch", None, "act_inner")
+    elif leaf in ("conv_B", "conv_C"):
+        axes = ("batch", None, None)
+    else:
+        raise ValueError(f"unknown cache leaf {keys}")
+    if "blocks" in parents:
+        axes = ("stack",) + axes
+    return axes
+
+
+def abstract_cache(cfg: ModelConfig, ctx: MeshContext, batch: int,
+                   max_len: int, dtype=jnp.bfloat16, enc_len: int = 0):
+    """ShapeDtypeStruct cache tree with shardings attached per leaf."""
+    with mesh_context(ctx):
+        shapes = jax.eval_shape(
+            functools.partial(lm.init_cache, cfg, batch, max_len,
+                              dtype, enc_len))
+
+    def attach(path, sds):
+        axes = _cache_axes_from_path(path)
+        return jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype,
+            sharding=ctx.sharding(axes, sds.shape))
+
+    return jax.tree_util.tree_map_with_path(attach, shapes)
+
+
+def decode_token_specs(cfg: ModelConfig, cell: ShapeCell, ctx: MeshContext):
+    return _sds((cell.batch,), jnp.int32, ctx, ("batch",))
+
+
+def prefill_input_specs(cfg: ModelConfig, cell: ShapeCell, ctx: MeshContext):
+    B, S = cell.batch, cell.seq
+    out = {}
+    if cfg.is_encdec:
+        out["enc_embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16, ctx,
+                                 ("batch", None, None))
+        out["tokens"] = _sds((B, S), jnp.int32, ctx, ("batch", None))
+    elif cfg.frontend is not None:
+        out["embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16, ctx,
+                             ("batch", None, None))
+    else:
+        out["tokens"] = _sds((B, S), jnp.int32, ctx, ("batch", None))
+    return out
+
+
+def input_specs(arch_cfg: ModelConfig, cell: ShapeCell, ctx: MeshContext,
+                run: RunOverrides) -> dict:
+    """All abstract inputs for a cell (convenience dispatcher)."""
+    if cell.kind == "train":
+        return {"batch": train_batch_specs(arch_cfg, cell, ctx, run)}
+    if cell.kind == "prefill":
+        return {"inputs": prefill_input_specs(arch_cfg, cell, ctx),
+                "cache": abstract_cache(
+                    arch_cfg, ctx, cell.batch, cell.seq,
+                    enc_len=cell.seq if arch_cfg.is_encdec else 0)}
+    # decode
+    return {"token": decode_token_specs(arch_cfg, cell, ctx),
+            "cache": abstract_cache(
+                arch_cfg, ctx, cell.batch, cell.seq,
+                enc_len=cell.seq if arch_cfg.is_encdec else 0)}

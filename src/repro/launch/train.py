@@ -1,0 +1,87 @@
+"""Training driver.
+
+CPU-scale (reduced configs) runs locally in this container; the same
+driver drives the production mesh when pods are attached (the dry-run
+validates those lowerings). Example:
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --reduced --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.shapes import ShapeCell
+from repro.data.pipeline import DataLoader
+from repro.distributed.context import MeshContext, mesh_context
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.launch import specs as lspecs
+from repro.optim import AdamW, cosine_schedule
+from repro.training.loop import LoopConfig, Trainer
+from repro.training.step import make_train_step
+
+_DT = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+
+
+def build(arch: str, reduced: bool, batch: int, seq: int, steps: int,
+          microbatches: int = 1, lr: float = 3e-4, seed: int = 0,
+          production_mesh: bool = False, compress_pods: bool = False):
+    cfg = configs.get_reduced(arch) if reduced else configs.get_config(arch)
+    run = configs.get_overrides(arch)
+    mb = microbatches if reduced else run.microbatches
+    mesh = (make_production_mesh(multi_pod=True) if production_mesh
+            else make_local_mesh())
+    ctx = MeshContext(mesh)
+    cell = ShapeCell("custom", "train", seq, batch)
+    opt = AdamW(cosine_schedule(lr, max(steps // 10, 1), steps),
+                moment_dtype=_DT[run.adam_dtype])
+    step_fn = make_train_step(cfg, opt, microbatches=mb,
+                              remat=run.remat if not reduced else "full",
+                              remat_group=run.remat_group if not reduced else 1)
+    loader = DataLoader(cfg, cell, mb, seed=seed)
+    rng = jax.random.PRNGKey(seed)
+    state = lspecs.init_train_state(cfg, None, run, opt, rng)
+    return cfg, ctx, jax.jit(step_fn, donate_argnums=(0,)), state, loader
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cfg, ctx, step_fn, state, loader = build(
+        args.arch, args.reduced, args.batch, args.seq, args.steps,
+        args.microbatches, args.lr)
+    loop_cfg = LoopConfig(total_steps=args.steps,
+                          ckpt_every=args.ckpt_every or args.steps,
+                          ckpt_dir=args.ckpt_dir, log_every=10)
+    with mesh_context(ctx):
+        tr = Trainer(step_fn, state, loader, loop_cfg)
+        tr.maybe_restore()
+        result = tr.run()
+    loader.stop()
+    for row in result["log"]:
+        print(json.dumps(row))
+    print(f"final_loss={result['final_loss']:.4f}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

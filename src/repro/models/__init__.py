@@ -1,0 +1,2 @@
+from repro.models.config import LayerKind, ModelConfig, MoEConfig, SSMConfig  # noqa: F401
+from repro.models import lm  # noqa: F401

@@ -1,0 +1,333 @@
+"""Memory-efficient blockwise attention with a flash-style custom VJP.
+
+This is the lowering used on CPU and in the multi-pod dry-run; on TPU the
+Pallas flash kernel (``repro.kernels.flash_attention``) replaces the
+inner blocks, and this module doubles as its numerical oracle.
+
+Design notes
+------------
+* Forward: online-softmax over KV chunks inside ``lax.scan`` → peak
+  memory O(q_chunk × kv_chunk); only the output O and the row-wise
+  logsumexp L are saved for backward.
+* Backward: flash-attention recomputation — P is rebuilt per block from
+  (q, k, L); dQ/dK/dV accumulate blockwise. Without this, scan-VJP stacks
+  every fp32 P block ([nq, nkv, B, H, qc, kc] ≈ 2 GB/layer at 4k) and the
+  dry-run showed it dominating HBM traffic 10× over everything else.
+* K/V are repeated to the full query-head count up front. Under tensor
+  parallelism all head-indexed tensors then shard cleanly on the 'model'
+  axis (the repeat is sharded too, so per-device memory is unchanged);
+  this mirrors Megatron's KV-head replication for TP > n_kv.
+* Sliding-window attention only *visits* the KV chunks inside the window
+  (plus one boundary chunk), so local-attention layers (gemma3) pay
+  O(S·W) FLOPs, not O(S²).
+* Causal full attention visits all chunks up to the query block and masks
+  the rest; the FLOP overshoot is bounded by 2× of the attention term,
+  <3 % of total step FLOPs for every assigned cell. The Pallas kernel
+  skips fully-masked blocks.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import shard_act
+from repro.utils import grad_cast, vma_like
+
+NEG_INF = -1e30
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """[B, S, KV, hd] → [B, S, H, hd] by repeating each kv head."""
+    kv = k.shape[2]
+    if kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // kv, axis=2)
+
+
+def _block_mask(q_pos, k_pos, kv_len, causal: bool, window):
+    """mask [B, qc, kc] (True = attend)."""
+    m = (k_pos[None, None, :] < kv_len[:, None, None])
+    if causal:
+        m = m & (q_pos[:, None] >= k_pos[None, :])[None]
+    if window is not None:
+        m = m & (q_pos[:, None] - k_pos[None, :] < window)[None]
+    return m
+
+
+def _apply_softcap(s, cap):
+    return cap * jnp.tanh(s / cap) if cap is not None else s
+
+
+def _softcap_grad(s_raw, cap):
+    if cap is None:
+        return 1.0
+    t = jnp.tanh(s_raw / cap)
+    return 1.0 - jnp.square(t)
+
+
+def _n_inner(Skp, kv_chunk, q_chunk, window):
+    if window is not None:
+        return min(-(-(window + q_chunk) // kv_chunk) + 1, Skp // kv_chunk)
+    return Skp // kv_chunk
+
+
+def _lo_chunk(q_pos0, kv_chunk, window):
+    if window is None:
+        return jnp.array(0, jnp.int32)
+    return (jnp.maximum(q_pos0 - window + 1, 0) // kv_chunk).astype(jnp.int32)
+
+
+def _flash_fwd(q, k, v, kv_len, *, causal, window, q_offset, softcap,
+               q_chunk, kv_chunk):
+    """Returns (out [B,Sq,H,hd], lse [B,H,Sq]) — padded inputs required."""
+    B, Sqp, H, hd = q.shape
+    Skp = k.shape[1]
+    nq = Sqp // q_chunk
+    scale = 1.0 / math.sqrt(hd)
+    n_inner = _n_inner(Skp, kv_chunk, q_chunk, window)
+
+    qs = jnp.moveaxis(q.reshape(B, nq, q_chunk, H, hd), 1, 0)
+
+    def q_block(qi, qb):
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+        qb = qb * jnp.asarray(scale, qb.dtype)
+        lo = _lo_chunk(q_pos[0], kv_chunk, window)
+
+        m0 = vma_like(jnp.full((B, H, q_chunk), NEG_INF, jnp.float32), qb)
+        l0 = vma_like(jnp.zeros((B, H, q_chunk), jnp.float32), qb)
+        a0 = vma_like(jnp.zeros((B, H, q_chunk, hd), jnp.float32), qb)
+
+        def kv_step(carry, j):
+            m, l, acc = carry
+            ki = lo + j
+            start = jnp.clip(ki * kv_chunk, 0, Skp - kv_chunk)
+            kb = jax.lax.dynamic_slice_in_dim(k, start, kv_chunk, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, start, kv_chunk, axis=1)
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+
+            s = jnp.einsum("bqhd,bchd->bhqc", qb, kb,
+                           preferred_element_type=jnp.float32)
+            s = _apply_softcap(s, softcap)
+            mask = _block_mask(q_pos, k_pos, kv_len, causal, window)
+            s = jnp.where(mask[:, None], s, NEG_INF)
+
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(mask[:, None], p, 0.0)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqc,bchd->bhqd", p, vb.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(n_inner, dtype=jnp.int32))
+        out = (acc / jnp.maximum(l, 1e-20)[..., None]).astype(q.dtype)
+        lse = m + jnp.log(jnp.maximum(l, 1e-20))        # [B,H,qc]
+        return jnp.transpose(out, (0, 2, 1, 3)), lse
+
+    outs, lses = jax.lax.map(lambda a: q_block(*a),
+                             (jnp.arange(nq, dtype=jnp.int32), qs))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sqp, H, hd)
+    lse = jnp.moveaxis(lses, 0, 2).reshape(B, H, Sqp)   # [nq,B,H,qc] → [B,H,S]
+    return out, lse
+
+
+def _flash_bwd(q, k, v, kv_len, out, lse, dout, *, causal, window, q_offset,
+               softcap, q_chunk, kv_chunk):
+    """Flash backward: recompute P per block. Returns (dq, dk, dv)."""
+    B, Sqp, H, hd = q.shape
+    Skp = k.shape[1]
+    nq = Sqp // q_chunk
+    scale = 1.0 / math.sqrt(hd)
+    n_inner = _n_inner(Skp, kv_chunk, q_chunk, window)
+
+    # D_i = rowsum(dO * O)  [B,H,Sq]
+    delta = jnp.einsum("bqhd,bqhd->bhq", dout.astype(jnp.float32),
+                       out.astype(jnp.float32))
+
+    qs = jnp.moveaxis(q.reshape(B, nq, q_chunk, H, hd), 1, 0)
+    dos = jnp.moveaxis(dout.reshape(B, nq, q_chunk, H, hd), 1, 0)
+    lses = jnp.moveaxis(lse.reshape(B, H, nq, q_chunk), 2, 0)
+    deltas = jnp.moveaxis(delta.reshape(B, H, nq, q_chunk), 2, 0)
+
+    dk0 = vma_like(jnp.zeros((B, Skp, H, hd), jnp.float32), k)
+    dv0 = vma_like(jnp.zeros((B, Skp, H, hd), jnp.float32), k)
+
+    def q_block(carry, xs):
+        dk_acc, dv_acc = carry
+        qi, qb, dob, lseb, delb = xs
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+        qb_s = qb * jnp.asarray(scale, qb.dtype)
+        lo = _lo_chunk(q_pos[0], kv_chunk, window)
+        dob = dob.astype(jnp.float32)
+
+        dq0 = vma_like(jnp.zeros((B, q_chunk, H, hd), jnp.float32), qb)
+
+        def kv_step(carry2, j):
+            dq, dk_acc, dv_acc = carry2
+            ki = lo + j
+            start = jnp.clip(ki * kv_chunk, 0, Skp - kv_chunk)
+            kb = jax.lax.dynamic_slice_in_dim(k, start, kv_chunk, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, start, kv_chunk, axis=1)
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+
+            s_raw = jnp.einsum("bqhd,bchd->bhqc", qb_s, kb,
+                               preferred_element_type=jnp.float32)
+            s = _apply_softcap(s_raw, softcap)
+            mask = _block_mask(q_pos, k_pos, kv_len, causal, window)
+            s = jnp.where(mask[:, None], s, NEG_INF)
+            p = jnp.exp(s - lseb[..., None])                  # [B,H,qc,kc]
+            p = jnp.where(mask[:, None], p, 0.0)
+
+            dv_blk = jnp.einsum("bhqc,bqhd->bchd", p, dob)
+            dp = jnp.einsum("bqhd,bchd->bhqc", dob,
+                            vb.astype(jnp.float32))
+            ds = p * (dp - delb[..., None])
+            ds = ds * _softcap_grad(s_raw, softcap) * scale
+
+            dq = dq + jnp.einsum("bhqc,bchd->bqhd", ds,
+                                 kb.astype(jnp.float32))
+            dk_blk = jnp.einsum("bhqc,bqhd->bchd", ds,
+                                qb.astype(jnp.float32))
+            dk_acc = jax.lax.dynamic_update_slice_in_dim(
+                dk_acc, jax.lax.dynamic_slice_in_dim(
+                    dk_acc, start, kv_chunk, 1) + dk_blk, start, axis=1)
+            dv_acc = jax.lax.dynamic_update_slice_in_dim(
+                dv_acc, jax.lax.dynamic_slice_in_dim(
+                    dv_acc, start, kv_chunk, 1) + dv_blk, start, axis=1)
+            return (dq, dk_acc, dv_acc), None
+
+        (dq, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_step, (dq0, dk_acc, dv_acc),
+            jnp.arange(n_inner, dtype=jnp.int32))
+        return (dk_acc, dv_acc), dq
+
+    (dk, dv), dqs = jax.lax.scan(
+        q_block, (dk0, dv0),
+        (jnp.arange(nq, dtype=jnp.int32), qs, dos, lses, deltas))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(B, Sqp, H, hd)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+def _attention_padded(q, k, v, kv_len, *, causal, window, q_offset, softcap,
+                      q_chunk, kv_chunk):
+    """custom-vjp core on padded [B,S,H,hd] inputs."""
+    kw = dict(causal=causal, window=window, q_offset=q_offset,
+              softcap=softcap, q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+    @jax.custom_vjp
+    def core(q, k, v, kv_len):
+        out, _ = _flash_fwd(q, k, v, kv_len, **kw)
+        return out
+
+    def fwd(q, k, v, kv_len):
+        out, lse = _flash_fwd(q, k, v, kv_len, **kw)
+        return out, (q, k, v, kv_len, out, lse)
+
+    def bwd(res, dout):
+        q, k, v, kv_len, out, lse = res
+        dq, dk, dv = _flash_bwd(q, k, v, kv_len, out, lse, dout, **kw)
+        return dq, dk, dv, None
+
+    core.defvjp(fwd, bwd)
+    return core(q, k, v, kv_len)
+
+
+def attention(
+    q: jax.Array,                 # [B, Sq, H, hd]
+    k: jax.Array,                 # [B, Sk, KV, hd]   (KV | H heads)
+    v: jax.Array,                 # [B, Sk, KV, hd]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset=0,                   # global position of q[0] (chunked prefill)
+    kv_len=None,                  # valid kv length (int or [B]); None → Sk
+    logit_softcap: Optional[float] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+) -> jax.Array:
+    """Blockwise flash attention. Returns [B, Sq, H, hd]."""
+    assert causal or window is None, \
+        "sliding-window attention requires causal=True (a backward-only " \
+        "window is ill-defined for bidirectional attention)"
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    q = grad_cast(shard_act(q, ("batch", None, "heads", None)))
+    k = grad_cast(shard_act(k, ("batch", None, "heads", None)))
+    v = grad_cast(shard_act(v, ("batch", None, "heads", None)))
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+
+    if kv_len is None:
+        kv_len = Sk
+    kv_len = jnp.asarray(kv_len)
+    if kv_len.ndim == 0:
+        kv_len = jnp.broadcast_to(kv_len, (B,))
+
+    qp = _pad_to(q, 1, q_chunk)
+    kp = _pad_to(k, 1, kv_chunk)
+    vp = _pad_to(v, 1, kv_chunk)
+
+    out = _attention_padded(qp, kp, vp, kv_len, causal=causal, window=window,
+                            q_offset=q_offset, softcap=logit_softcap,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk)
+    return out[:, :Sq]
+
+
+def decode_attention(
+    q: jax.Array,                 # [B, 1, H, hd]
+    k_cache: jax.Array,           # [B, S, KV, hd]
+    v_cache: jax.Array,           # [B, S, KV, hd]
+    pos,                          # scalar or [B]: index of the current token
+    *,
+    window: Optional[int] = None,
+    logit_softcap: Optional[float] = None,
+) -> jax.Array:
+    """Single-token attention against the cache.
+
+    With a sequence-sharded cache ('seq' layout) the softmax reductions
+    over S become cross-device collectives — exactly the flash-decoding
+    partial-softmax pattern, with XLA inserting the (tiny) combines.
+    """
+    B, S, KV, hd = k_cache.shape
+    H = q.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (B,))
+
+    kc = _expand_kv(k_cache, H)
+    vc = _expand_kv(v_cache, H)
+    qr = q.reshape(B, H, hd) * jnp.asarray(scale, q.dtype)
+    s = jnp.einsum("bhd,bshd->bhs", qr, kc,
+                   preferred_element_type=jnp.float32)
+    if logit_softcap is not None:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+
+    idx = jnp.arange(S)
+    mask = idx[None, :] <= pos[:, None]
+    if window is not None:
+        mask = mask & (idx[None, :] > pos[:, None] - window)
+    s = jnp.where(mask[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", p.astype(vc.dtype), vc)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)

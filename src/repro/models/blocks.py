@@ -1,0 +1,210 @@
+"""Residual block application for every layer kind (attn/ssm × mlp/moe,
+sequential or parallel residual, optional sandwich norms, cross-attn)."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import kv_pad, shard_act
+from repro.utils import storage_barrier
+from repro.models import attention as attn_lib
+from repro.models.config import LayerKind, ModelConfig
+from repro.models.moe import moe_mlp
+from repro.models.nn import apply_rope, relu2, rms_norm, swiglu
+from repro.models.ssm import SSMCache, init_ssm_cache, mamba_mixer
+
+CACHE_AXES = ("batch", "kv_seq", "kv_heads", None)
+
+
+class AttnCache(NamedTuple):
+    k: jax.Array   # [B, max_len, KV*kv_pad, hd]
+    v: jax.Array
+
+
+class XAttnCache(NamedTuple):
+    k: jax.Array   # [B, enc_len, KV, hd]
+    v: jax.Array
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> AttnCache:
+    r = kv_pad(cfg.n_heads, cfg.n_kv)
+    shape = (batch, max_len, cfg.n_kv * r, cfg.hd)
+    z = shard_act(jnp.zeros(shape, dtype), CACHE_AXES)
+    return AttnCache(z, z)
+
+
+def _norm(x, p, cfg):
+    return rms_norm(x, p, cfg.norm_eps, plus_one=cfg.norm_plus_one)
+
+
+def cast_params(p, dtype):
+    """Mixed precision: cast fp32 weights to the compute dtype at use-site
+    (inside remat, so the bf16 copies are rematerialized, not saved)."""
+    def f(a):
+        if hasattr(a, "dtype") and a.dtype == jnp.float32:
+            return a.astype(dtype)
+        return a
+    return storage_barrier(jax.tree.map(f, p))
+
+
+def attention_mixer(
+    p: dict,
+    x: jax.Array,                      # [B, S, d]
+    cfg: ModelConfig,
+    kind: LayerKind,
+    positions: jax.Array,              # rope positions for this slice
+    cache: Optional[AttnCache] = None,
+    pos=None,                          # scalar write offset into the cache
+):
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(B, S, cfg.n_kv, hd)
+    v = (x @ p["wv"]).reshape(B, S, cfg.n_kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps, plus_one=cfg.norm_plus_one)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps, plus_one=cfg.norm_plus_one)
+    theta = cfg.rope_theta if kind.global_rope else (cfg.rope_theta_local or cfg.rope_theta)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+
+    cap = cfg.attn_logit_softcap
+    if cache is None:
+        out = attn_lib.attention(q, k, v, causal=kind.causal, window=kind.window,
+                                 logit_softcap=cap)
+        new_cache = None
+    else:
+        r = cache.k.shape[2] // cfg.n_kv   # kv_rep padding factor
+        if r > 1:
+            k = jnp.repeat(k, r, axis=2)
+            v = jnp.repeat(v, r, axis=2)
+        new_k = shard_act(jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), pos, axis=1), CACHE_AXES)
+        new_v = shard_act(jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), pos, axis=1), CACHE_AXES)
+        new_cache = AttnCache(new_k, new_v)
+        if S == 1:
+            out = attn_lib.decode_attention(q, new_k, new_v, pos,
+                                            window=kind.window, logit_softcap=cap)
+        else:  # chunked prefill
+            out = attn_lib.attention(q, new_k, new_v, causal=True,
+                                     window=kind.window, q_offset=pos,
+                                     kv_len=pos + S, logit_softcap=cap)
+    out = out.reshape(B, S, cfg.n_heads * hd) @ p["wo"]
+    return out, new_cache
+
+
+def cross_attention_mixer(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    enc_out: Optional[jax.Array] = None,    # [B, S_enc, d] (training)
+    cache: Optional[XAttnCache] = None,     # precomputed cross K/V (serving)
+):
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    if cache is not None:
+        k, v = cache.k, cache.v
+    else:
+        k = (enc_out @ p["wk"]).reshape(B, -1, cfg.n_kv, hd)
+        v = (enc_out @ p["wv"]).reshape(B, -1, cfg.n_kv, hd)
+    out = attn_lib.attention(q, k, v, causal=False)
+    return out.reshape(B, S, cfg.n_heads * hd) @ p["wo"]
+
+
+def build_xattn_cache(p: dict, cfg: ModelConfig, enc_out: jax.Array) -> XAttnCache:
+    B = enc_out.shape[0]
+    k = (enc_out @ p["wk"]).reshape(B, -1, cfg.n_kv, cfg.hd)
+    v = (enc_out @ p["wv"]).reshape(B, -1, cfg.n_kv, cfg.hd)
+    return XAttnCache(k, v)
+
+
+def mlp_apply(p: dict, x: jax.Array, cfg: ModelConfig, kind: LayerKind):
+    """Returns (y, aux_loss)."""
+    if kind.mlp == "swiglu":
+        h = shard_act(swiglu(x @ p["wg"], x @ p["wu"]),
+                      ("batch", None, "act_mlp"))
+        return h @ p["wd"], jnp.float32(0)
+    if kind.mlp == "relu2":
+        h = shard_act(relu2(x @ p["wu"]), ("batch", None, "act_mlp"))
+        return h @ p["wd"], jnp.float32(0)
+    if kind.mlp == "gelu":
+        h = shard_act(jax.nn.gelu(x @ p["wu"]), ("batch", None, "act_mlp"))
+        return h @ p["wd"], jnp.float32(0)
+    if kind.mlp == "moe":
+        out = moe_mlp(p, x, cfg)
+        return out.y, out.aux_loss
+    raise ValueError(kind.mlp)
+
+
+def apply_block(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    kind: LayerKind,
+    positions: jax.Array,
+    cache: Optional[dict] = None,
+    pos=None,
+    enc_out: Optional[jax.Array] = None,
+):
+    """One residual block. Returns (x, new_cache_or_None, aux_loss)."""
+    p = cast_params(p, x.dtype)
+    x = shard_act(x, ("batch", None, None))
+    aux = jnp.float32(0)
+    h = _norm(x, p["ln1"], cfg)
+
+    if kind.mixer == "ssm":
+        mix, new_mixer_cache = mamba_mixer(
+            p["ssm"], h, cfg, cache["ssm"] if cache is not None else None)
+        cache_key = "ssm"
+    else:
+        mix, new_mixer_cache = attention_mixer(
+            p["attn"], h, cfg, kind, positions,
+            cache["attn"] if cache is not None else None, pos)
+        cache_key = "attn"
+
+    if cfg.sandwich_norm:
+        mix = _norm(mix, p["ln1_post"], cfg)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(cache)
+        new_cache[cache_key] = new_mixer_cache
+
+    if cfg.parallel_block and "mlp" in p:
+        mlp_out, aux = mlp_apply(p["mlp"], h, cfg, kind)
+        x = x + mix + mlp_out
+        return x, new_cache, aux
+
+    x = x + mix
+
+    if cfg.cross_attention and "xattn" in p:
+        hx = _norm(x, p["ln_x"], cfg)
+        xout = cross_attention_mixer(
+            p["xattn"], hx, cfg, enc_out=enc_out,
+            cache=cache.get("xattn") if cache is not None else None)
+        x = x + xout
+
+    if "mlp" in p:
+        h2 = _norm(x, p["ln2"], cfg)
+        mlp_out, aux = mlp_apply(p["mlp"], h2, cfg, kind)
+        if cfg.sandwich_norm:
+            mlp_out = _norm(mlp_out, p["ln2_post"], cfg)
+        x = x + mlp_out
+    return x, new_cache, aux
+
+
+def init_block_cache(cfg: ModelConfig, kind: LayerKind, batch: int,
+                     max_len: int, dtype, enc_len: int = 0) -> dict:
+    c: dict = {}
+    if kind.mixer == "ssm":
+        c["ssm"] = init_ssm_cache(cfg, batch, dtype)
+    else:
+        c["attn"] = init_attn_cache(cfg, batch, max_len, dtype)
+    if cfg.cross_attention and enc_len:
+        shape = (batch, enc_len, cfg.n_kv, cfg.hd)
+        c["xattn"] = XAttnCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+    return c

@@ -1,0 +1,188 @@
+"""Model configuration dataclasses + derived quantities (param counts, FLOPs).
+
+A single ``ModelConfig`` describes every assigned architecture family:
+dense / MoE / SSM / hybrid / enc-dec / VLM. Heterogeneous layer stacks
+(gemma3's 5:1 local:global, jamba's 1:7 mamba:attn with alternating MoE)
+are expressed as a repeating ``pattern`` of ``LayerKind``s; the model is
+executed as ``lax.scan`` over full pattern cycles plus an unrolled tail,
+which keeps the HLO size independent of depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerKind:
+    """Static description of one layer position inside the pattern."""
+    mixer: str = "attn"          # 'attn' | 'ssm'
+    window: Optional[int] = None  # sliding-window size; None = full causal
+    mlp: str = "swiglu"          # 'swiglu' | 'relu2' | 'moe' | 'none'
+    global_rope: bool = True      # use rope_theta (True) or rope_theta_local
+    causal: bool = True           # False only for encoder stacks
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    shared_expert: bool = False   # llama4-style always-on shared expert
+    router_jitter: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    n_groups: int = 1
+    conv_width: int = 4
+    chunk: int = 256              # SSD chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense|moe|ssm|hybrid|audio|vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    pattern: tuple = (LayerKind(),)
+    head_dim: Optional[int] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # numerics / architectural variants
+    norm_eps: float = 1e-5
+    rope_theta: float = 1e4
+    rope_theta_local: Optional[float] = None
+    qk_norm: bool = False
+    sandwich_norm: bool = False   # gemma3: post-attn/post-mlp norms
+    parallel_block: bool = False  # command-r: attn & mlp in parallel
+    tie_embeddings: bool = True
+    embed_scale: bool = False     # multiply embeds by sqrt(d_model)
+    norm_plus_one: bool = False   # gemma-style (1 + w) RMSNorm
+    attn_logit_softcap: Optional[float] = None
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    cross_attention: bool = False
+    # modality frontend stub: None → token ids; 'patches'/'audio' → embeds
+    frontend: Optional[str] = None
+    max_seq: int = 131072
+
+    # ---- derived ----
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    def layer_kinds(self) -> list:
+        """LayerKind per decoder layer (pattern repeated, truncated)."""
+        reps = -(-self.n_layers // len(self.pattern))
+        return list(self.pattern * reps)[: self.n_layers]
+
+    def cycles(self) -> tuple[int, int]:
+        """(n_full_pattern_cycles, tail_layers)."""
+        p = len(self.pattern)
+        return self.n_layers // p, self.n_layers % p
+
+    # ---------------- parameter counting ----------------
+    def _mixer_params(self, kind: LayerKind) -> int:
+        d = self.d_model
+        if kind.mixer == "ssm":
+            s = self.ssm
+            d_in = s.expand * d
+            nheads = d_in // s.head_dim
+            conv_dim = d_in + 2 * s.n_groups * s.d_state
+            return (
+                d * (2 * d_in + 2 * s.n_groups * s.d_state + nheads)  # in_proj
+                + conv_dim * s.conv_width                             # conv1d
+                + 2 * nheads                                          # A_log, dt_bias
+                + d_in                                                # gated norm
+                + d_in * d                                            # out_proj
+            )
+        hd = self.hd
+        qk_extra = 2 * hd if self.qk_norm else 0
+        return d * (self.n_heads * hd) * 2 + d * (self.n_kv * hd) * 2 + qk_extra
+
+    def _mlp_params(self, kind: LayerKind) -> int:
+        d, f = self.d_model, self.d_ff
+        if kind.mlp == "none":
+            return 0
+        if kind.mlp in ("relu2", "gelu"):
+            return 2 * d * f
+        if kind.mlp == "moe":
+            m = self.moe
+            per = 3 * d * f
+            total = m.n_experts * per + d * m.n_experts  # experts + router
+            if m.shared_expert:
+                total += per
+            return total
+        return 3 * d * f  # swiglu
+
+    def _mlp_active_params(self, kind: LayerKind) -> int:
+        if kind.mlp == "moe":
+            m = self.moe
+            per = 3 * self.d_model * self.d_ff
+            act = m.top_k * per + self.d_model * m.n_experts
+            if m.shared_expert:
+                act += per
+            return act
+        return self._mlp_params(kind)
+
+    def _norm_params(self, kind: LayerKind) -> int:
+        n = 0 if kind.mixer == "ssm" and kind.mlp == "none" else 2
+        if kind.mixer == "ssm" and kind.mlp == "none":
+            n = 1
+        if self.sandwich_norm:
+            n *= 2
+        return n * self.d_model
+
+    def param_count(self, active_only: bool = False) -> int:
+        total = self.vocab * self.d_model  # embeddings
+        if not self.tie_embeddings:
+            total += self.vocab * self.d_model
+        for kind in self.layer_kinds():
+            total += self._mixer_params(kind) + self._norm_params(kind)
+            total += (self._mlp_active_params(kind) if active_only
+                      else self._mlp_params(kind))
+        # encoder stack (whisper): same width, full attention, swiglu → we
+        # count with the same block structure plus cross-attention in decoder
+        if self.is_encdec:
+            enc_kind = LayerKind(mixer="attn", mlp=self.pattern[0].mlp)
+            per_enc = self._mixer_params(enc_kind) + self._mlp_params(enc_kind) + 2 * self.d_model
+            total += self.encoder_layers * per_enc + self.d_model  # + enc final norm
+            # decoder cross-attention blocks
+            total += self.n_layers * (self._mixer_params(enc_kind) + self.d_model)
+        total += self.d_model  # final norm
+        return total
+
+    def model_flops_per_token(self, seq_len: int, mode: str = "train") -> float:
+        """'Useful' FLOPs per token: {6,2,2}·N_active + attention term.
+
+        MODEL_FLOPS for the roofline table uses 6·N·D (dense) or
+        6·N_active·D (MoE) per the assignment (2·N for forward-only
+        serving); the attention score/value term is added so long-context
+        cells stay honest. mode ∈ {'train', 'prefill', 'decode'}.
+        """
+        n_active = self.param_count(active_only=True)
+        matmul_factor = 6.0 if mode == "train" else 2.0
+        flops = matmul_factor * n_active
+        attn_factor = 12.0 if mode == "train" else 4.0
+        for kind in self.layer_kinds():
+            if kind.mixer != "attn":
+                continue
+            if mode == "decode":
+                eff = seq_len if kind.window is None else min(kind.window, seq_len)
+            else:
+                eff = (seq_len if kind.window is None
+                       else min(kind.window, seq_len)) / 2.0  # causal avg
+            flops += attn_factor * self.n_heads * self.hd * eff
+        return flops

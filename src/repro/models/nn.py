@@ -1,0 +1,51 @@
+"""Primitive NN ops shared by all families: RMSNorm, RoPE, activations."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float, plus_one: bool = False) -> jax.Array:
+    """RMSNorm in fp32 with cast back to input dtype."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    wf = w.astype(jnp.float32)
+    scale = (1.0 + wf) if plus_one else wf  # gemma stores w as offset from 1
+    return (y * scale).astype(dt)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding, half-split convention.
+
+    x: [..., S, H, hd]; positions: [S] or [B, S] int32.
+    """
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs   # [(B,)S, hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    # broadcast over head dim: [..., S, 1, hd/2]
+    cos = jnp.expand_dims(cos, -2)
+    sin = jnp.expand_dims(sin, -2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate) * up
+
+
+def relu2(x: jax.Array) -> jax.Array:
+    r = jax.nn.relu(x)
+    return r * r
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return cap * jnp.tanh(x / cap)

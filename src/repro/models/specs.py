@@ -1,0 +1,226 @@
+"""Parameter specifications: a single source of truth for shapes, logical
+sharding axes and initializers.
+
+Every materialization path derives from the same spec tree:
+  * ``init_from_specs``      → real arrays (smoke tests, examples, training)
+  * ``abstract_from_specs``  → ShapeDtypeStruct stand-ins (multi-pod dry-run)
+
+Logical axis names (mapped to mesh axes by ``repro.distributed.sharding``):
+  stack   scan-cycle dim                    → never sharded
+  embed   d_model                           → 'data'   (FSDP / ZeRO-3)
+  q       fused q/o head dim (H*hd)         → 'model'  (tensor parallel)
+  kvh     fused kv head dim (n_kv*hd)       → 'model' when n_kv divisible
+  mlp     d_ff                              → 'model'
+  vocab   vocabulary                        → 'model'
+  expert  MoE expert dim                    → None (E is small/odd)
+  inner   SSM inner dim (expand*d_model)    → 'model'
+  hssm    SSM head count                    → 'model' when divisible
+  None    anything else                     → replicated
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import LayerKind, ModelConfig
+
+
+class ParamSpec(NamedTuple):
+    shape: tuple
+    axes: tuple          # logical axis names, len == len(shape)
+    init: str = "normal"  # normal|zeros|ones|ssm_a|ssm_dt|small
+    scale: float = 1.0    # multiplier on the fan-in normal stddev
+
+
+def _proj(d_in: int, d_out: int, ax_in, ax_out, scale: float = 1.0) -> ParamSpec:
+    return ParamSpec((d_in, d_out), (ax_in, ax_out), "normal", scale)
+
+
+def _norm(d: int, ax=None) -> ParamSpec:
+    return ParamSpec((d,), (ax,), "ones")
+
+
+# --------------------------------------------------------------------------
+# per-block specs
+# --------------------------------------------------------------------------
+
+def attn_specs(cfg: ModelConfig, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    s = {
+        "wq": _proj(d, cfg.n_heads * hd, "embed", "q"),
+        "wk": _proj(d, cfg.n_kv * hd, "embed", "kvh"),
+        "wv": _proj(d, cfg.n_kv * hd, "embed", "kvh"),
+        "wo": _proj(cfg.n_heads * hd, d, "q", "embed"),
+    }
+    if cfg.qk_norm and not cross:
+        s["q_norm"] = _norm(hd)
+        s["k_norm"] = _norm(hd)
+    return s
+
+
+def mlp_specs(cfg: ModelConfig, kind: LayerKind) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if kind.mlp == "none":
+        return {}
+    if kind.mlp in ("relu2", "gelu"):
+        return {"wu": _proj(d, f, "embed", "mlp"),
+                "wd": _proj(f, d, "mlp", "embed")}
+    if kind.mlp == "moe":
+        m = cfg.moe
+        E = m.n_experts
+        s = {
+            "router": ParamSpec((d, E), ("embed", None), "normal", 1.0),
+            "wg": ParamSpec((E, d, f), ("expert", "embed", "mlp"), "normal", 1.0),
+            "wu": ParamSpec((E, d, f), ("expert", "embed", "mlp"), "normal", 1.0),
+            "wd": ParamSpec((E, f, d), ("expert", "mlp", "embed"), "normal", 1.0),
+        }
+        if m.shared_expert:
+            s["shared_wg"] = _proj(d, f, "embed", "mlp")
+            s["shared_wu"] = _proj(d, f, "embed", "mlp")
+            s["shared_wd"] = _proj(f, d, "mlp", "embed")
+        return s
+    # swiglu
+    return {"wg": _proj(d, f, "embed", "mlp"),
+            "wu": _proj(d, f, "embed", "mlp"),
+            "wd": _proj(f, d, "mlp", "embed")}
+
+
+def ssm_specs(cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    nheads = d_in // s.head_dim
+    gn = s.n_groups * s.d_state
+    return {
+        "wz": _proj(d, d_in, "embed", "inner"),
+        "wx": _proj(d, d_in, "embed", "inner"),
+        "wB": _proj(d, gn, "embed", None),
+        "wC": _proj(d, gn, "embed", None),
+        "wdt": _proj(d, nheads, "embed", "hssm"),
+        "conv_x": ParamSpec((s.conv_width, d_in), (None, "inner"), "normal", 1.0),
+        "conv_B": ParamSpec((s.conv_width, gn), (None, None), "normal", 1.0),
+        "conv_C": ParamSpec((s.conv_width, gn), (None, None), "normal", 1.0),
+        "A_log": ParamSpec((nheads,), ("hssm",), "ssm_a"),
+        "dt_bias": ParamSpec((nheads,), ("hssm",), "ssm_dt"),
+        "norm": ParamSpec((d_in,), ("inner",), "ones"),
+        "wo": _proj(d_in, d, "inner", "embed"),
+    }
+
+
+def block_specs(cfg: ModelConfig, kind: LayerKind, cross_attention: bool = False) -> dict:
+    """Specs for one transformer/ssm block (pre-norm residual)."""
+    d = cfg.d_model
+    s: dict[str, Any] = {"ln1": _norm(d)}
+    if kind.mixer == "ssm":
+        s["ssm"] = ssm_specs(cfg)
+    else:
+        s["attn"] = attn_specs(cfg)
+    if cfg.sandwich_norm:
+        s["ln1_post"] = _norm(d)
+    mlp = mlp_specs(cfg, kind)
+    if mlp:
+        s["ln2"] = _norm(d)
+        s["mlp"] = mlp
+        if cfg.sandwich_norm:
+            s["ln2_post"] = _norm(d)
+    if cross_attention:
+        s["ln_x"] = _norm(d)
+        s["xattn"] = attn_specs(cfg, cross=True)
+    return s
+
+
+def _stack(tree, n: int):
+    """Add a leading 'stack' dim of length n to every spec in the tree."""
+    def f(p: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + p.shape, ("stack",) + p.axes, p.init, p.scale)
+    return jax.tree.map(f, tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# --------------------------------------------------------------------------
+# whole-model specs
+# --------------------------------------------------------------------------
+
+def model_param_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    n_cycles, tail = cfg.cycles()
+    kinds = cfg.layer_kinds()
+    p = len(cfg.pattern)
+
+    specs: dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab, d), ("vocab", "embed"), "normal", 1.0),
+        "final_norm": _norm(d),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((cfg.vocab, d), ("vocab", "embed"), "normal", 1.0)
+
+    cross = cfg.cross_attention
+    if n_cycles > 0:
+        specs["blocks"] = {
+            f"p{i}": _stack(block_specs(cfg, cfg.pattern[i], cross), n_cycles)
+            for i in range(p)
+        }
+    if tail:
+        specs["tail"] = {
+            f"t{i}": block_specs(cfg, kinds[n_cycles * p + i], cross)
+            for i in range(tail)
+        }
+    if cfg.is_encdec:
+        enc_kind = LayerKind(mixer="attn", mlp=cfg.pattern[0].mlp)
+        specs["encoder"] = {
+            "blocks": _stack(block_specs(cfg, enc_kind), cfg.encoder_layers),
+            "final_norm": _norm(d),
+        }
+    return specs
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+# --------------------------------------------------------------------------
+# materialization
+# --------------------------------------------------------------------------
+
+def _init_one(key, p: ParamSpec, dtype) -> jax.Array:
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "ssm_a":
+        # A = -exp(A_log); init A_log ~ log(U[1, 16])
+        u = jax.random.uniform(key, p.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if p.init == "ssm_dt":
+        # inverse-softplus of U[1e-3, 1e-1]
+        dt = jax.random.uniform(key, p.shape, jnp.float32, 1e-3, 1e-1)
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)
+    # fan-in scaled normal over the second-to-last meaningful dim
+    fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+    std = p.scale / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, p.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_from_specs(rng, specs, dtype=jnp.float32) -> dict:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_init_one(k, p, dtype) for k, p in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_from_specs(specs, dtype=jnp.float32, sharding_fn=None) -> dict:
+    """ShapeDtypeStruct tree; ``sharding_fn(axes, shape) -> Sharding|None``."""
+    def f(p: ParamSpec):
+        sh = sharding_fn(p.axes, p.shape) if sharding_fn is not None else None
+        if sh is not None:
+            return jax.ShapeDtypeStruct(p.shape, dtype, sharding=sh)
+        return jax.ShapeDtypeStruct(p.shape, dtype)
+    return jax.tree.map(f, specs, is_leaf=is_spec)
+
+
+def spec_param_count(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return sum(int(np.prod(p.shape)) for p in leaves)

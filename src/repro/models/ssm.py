@@ -1,0 +1,209 @@
+"""Mamba2 state-space duality (SSD) blocks: chunked training scan,
+single-token decode recurrence, and the surrounding gated block.
+
+The chunked SSD follows the minimal discrete formulation of the Mamba2
+paper (arXiv:2405.21060): intra-chunk quadratic term + inter-chunk state
+recurrence. The pure-jnp implementation here is the oracle for the
+``repro.kernels.ssd_scan`` Pallas kernel and the lowering used on CPU.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import shard_act
+from repro.models.config import ModelConfig
+from repro.models.nn import rms_norm
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: [..., Q] → [..., Q, Q] lower-triangular pairwise cumsums.
+
+    out[i, j] = sum(a[j+1 .. i]) for i >= j, -inf elsewhere.
+    """
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # [..., i, j]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,      # [B, S, H, P]  (pre-scaled by dt)
+    dA: jax.Array,     # [B, S, H]     log-decay per step (negative)
+    Bm: jax.Array,     # [B, S, G, N]
+    Cm: jax.Array,     # [B, S, G, N]
+    chunk: int,
+    initial_state: Optional[jax.Array] = None,  # [B, H, P, N]
+):
+    """Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    B_, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = min(chunk, S)
+    assert S % Q == 0, f"seq {S} must divide chunk {Q}"
+    nc = S // Q
+
+    f32 = jnp.float32
+    xc = x.reshape(B_, nc, Q, H, P).astype(f32)
+    dAc = dA.reshape(B_, nc, Q, H).astype(f32)
+    Bc = Bm.reshape(B_, nc, Q, G, N).astype(f32)
+    Cc = Cm.reshape(B_, nc, Q, G, N).astype(f32)
+
+    # expand groups → heads once (G is tiny; N,P are small)
+    Bh = jnp.repeat(Bc, rep, axis=3)                    # [B,nc,Q,H,N]
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    # ---- intra-chunk (diagonal blocks) ----
+    L = jnp.exp(_segsum(jnp.moveaxis(dAc, -1, -2)))     # [B,nc,H,Q,Q]
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh)   # [B,nc,H,Q,Q]
+    y_diag = jnp.einsum("bchqk,bchqk,bckhp->bcqhp",
+                        scores, L, xc)
+
+    # ---- per-chunk states ----
+    cums = jnp.cumsum(dAc, axis=2)                      # [B,nc,Q,H]
+    decay_states = jnp.exp(cums[:, :, -1:, :] - cums)   # [B,nc,Q,H]
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn",
+                        Bh, decay_states, xc)           # [B,nc,H,P,N]
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(cums[:, :, -1, :])            # [B,nc,H]
+    from repro.utils import vma_like
+    h0 = (initial_state.astype(f32) if initial_state is not None
+          else vma_like(jnp.zeros((B_, H, P, N), f32), x))
+
+    def step(h, inp):
+        dec, st = inp                                   # dec [B,H], st [B,H,P,N]
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h                                  # emit state *entering* the chunk
+
+    final, h_prev = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                 # [B,nc,H,P,N]
+
+    # ---- inter-chunk contribution to outputs ----
+    decay_out = jnp.exp(cums)                           # [B,nc,Q,H]
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                       Ch, h_prev, decay_out)
+
+    y = (y_diag + y_off).reshape(B_, S, H, P)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(
+    state: jax.Array,  # [B, H, P, N]
+    x_t: jax.Array,    # [B, H, P] (pre-scaled by dt)
+    dA_t: jax.Array,   # [B, H] log-decay
+    B_t: jax.Array,    # [B, G, N]
+    C_t: jax.Array,    # [B, G, N]
+):
+    """One recurrence step. Returns (y [B,H,P], new_state)."""
+    H = state.shape[1]
+    G = B_t.shape[1]
+    rep = H // G
+    f32 = jnp.float32
+    Bh = jnp.repeat(B_t.astype(f32), rep, axis=1)       # [B,H,N]
+    Ch = jnp.repeat(C_t.astype(f32), rep, axis=1)
+    dec = jnp.exp(dA_t.astype(f32))                     # [B,H]
+    new_state = (state.astype(f32) * dec[:, :, None, None]
+                 + jnp.einsum("bhp,bhn->bhpn", x_t.astype(f32), Bh))
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y.astype(x_t.dtype), new_state.astype(state.dtype)
+
+
+# --------------------------------------------------------------------------
+# full mamba block
+# --------------------------------------------------------------------------
+
+class SSMCache(NamedTuple):
+    conv_x: jax.Array   # [B, W-1, d_inner]
+    conv_B: jax.Array   # [B, W-1, G*N]
+    conv_C: jax.Array   # [B, W-1, G*N]
+    state: jax.Array    # [B, H, P, N]
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    gn = s.n_groups * s.d_state
+    w = s.conv_width - 1
+    return SSMCache(
+        conv_x=jnp.zeros((batch, w, d_in), dtype),
+        conv_B=jnp.zeros((batch, w, gn), dtype),
+        conv_C=jnp.zeros((batch, w, gn), dtype),
+        state=jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+    )
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, hist: Optional[jax.Array] = None):
+    """Depthwise causal conv. x [B,S,D], w [W,D], hist [B,W-1,D] → (y, new_hist)."""
+    W = w.shape[0]
+    if hist is None:
+        hist = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([hist, x], axis=1)             # [B, S+W-1, D]
+    S = x.shape[1]
+    y = sum(xp[:, i : i + S] * w[i] for i in range(W))
+    new_hist = xp[:, -(W - 1):] if W > 1 else hist
+    return y, new_hist
+
+
+def mamba_mixer(
+    p: dict,
+    x: jax.Array,                   # [B, S, d_model]
+    cfg: ModelConfig,
+    cache: Optional[SSMCache] = None,
+):
+    """Full mamba2 mixer: projections → conv → SSD → gated norm → out.
+
+    Works for training (cache=None), chunked prefill and decode (S=1) —
+    the recurrence path is picked automatically for S == 1 with a cache.
+    """
+    s = cfg.ssm
+    B_, S, _ = x.shape
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    P = s.head_dim
+    G, N = s.n_groups, s.d_state
+
+    z = x @ p["wz"]
+    xs = x @ p["wx"]
+    Bm = x @ p["wB"]
+    Cm = x @ p["wC"]
+    dt = jax.nn.softplus(
+        (x @ p["wdt"]).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+
+    hx = hB = hC = None
+    if cache is not None:
+        hx, hB, hC = cache.conv_x, cache.conv_B, cache.conv_C
+    xs, hx = _causal_conv(xs, p["conv_x"], hx)
+    Bm, hB = _causal_conv(Bm, p["conv_B"], hB)
+    Cm, hC = _causal_conv(Cm, p["conv_C"], hC)
+    xs, Bm, Cm = jax.nn.silu(xs), jax.nn.silu(Bm), jax.nn.silu(Cm)
+    xs = shard_act(xs, ("batch", None, "act_inner"))
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))        # [H]
+    dA = dt * A                                          # [B,S,H]
+    xh = xs.reshape(B_, S, H, P) * dt[..., None].astype(xs.dtype)
+    Bm = Bm.reshape(B_, S, G, N)
+    Cm = Cm.reshape(B_, S, G, N)
+
+    if cache is not None and S == 1:
+        y, new_state = ssd_decode_step(
+            cache.state, xh[:, 0], dA[:, 0], Bm[:, 0], Cm[:, 0])
+        y = y[:, None]                                  # [B,1,H,P]
+    else:
+        init = cache.state if cache is not None else None
+        y, new_state = ssd_chunked(xh, dA, Bm, Cm, s.chunk, init)
+
+    y = y.reshape(B_, S, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["wo"]
+
+    new_cache = None
+    if cache is not None:
+        new_cache = SSMCache(hx, hB, hC, new_state.astype(cache.state.dtype))
+    return out, new_cache

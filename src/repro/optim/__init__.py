@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamW, AdamWState, TrainState  # noqa: F401
+from repro.optim.schedules import cosine_schedule, constant_schedule  # noqa: F401

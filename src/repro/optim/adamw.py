@@ -1,0 +1,81 @@
+"""AdamW with global-norm clipping and optional low-precision moments.
+
+Moments inherit each parameter's sharding (they are ``zeros_like`` the
+params), so optimizer state is fully ZeRO-sharded across the mesh for
+free. ``moment_dtype='bfloat16'`` halves optimizer HBM for the giant
+archs (nemotron-340b, grok-314b) — a standard production trade-off; the
+update math always runs in fp32.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import tree_global_norm
+
+Pytree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Pytree
+    v: Pytree
+
+
+class TrainState(NamedTuple):
+    params: Pytree
+    opt: AdamWState
+
+
+class AdamW:
+    def __init__(self, lr_schedule: Callable, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, clip_norm: float = 1.0,
+                 moment_dtype=jnp.float32):
+        self.lr_schedule = lr_schedule
+        self.b1, self.b2, self.eps = b1, b2, eps
+        self.weight_decay = weight_decay
+        self.clip_norm = clip_norm
+        self.moment_dtype = moment_dtype
+
+    def init(self, params: Pytree) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, self.moment_dtype)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params))
+
+    def update(self, grads: Pytree, state: AdamWState, params: Pytree):
+        """Returns (new_params, new_state, metrics)."""
+        gnorm = tree_global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+        step = state.step + 1
+        lr = self.lr_schedule(step)
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            mf = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            vf = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+            mhat = mf / c1
+            vhat = vf / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr * delta
+            return (newp.astype(p.dtype), mf.astype(m.dtype),
+                    vf.astype(v.dtype))
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state.m)
+        flat_v = jax.tree.leaves(state.v)
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_p, AdamWState(step, new_m, new_v), metrics

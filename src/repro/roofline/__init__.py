@@ -1,0 +1,3 @@
+from repro.roofline.hlo_cost import analyze_hlo, CostTotals  # noqa: F401
+from repro.roofline.terms import (Roofline, from_totals,  # noqa: F401
+                                  PEAK_FLOPS_BF16, HBM_BW, LINK_BW)

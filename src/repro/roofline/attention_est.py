@@ -1,0 +1,54 @@
+"""Estimate attention-interior HBM traffic in an analyzed module.
+
+The XLA attention path materializes per-block score/probability tensors
+(shape [..., q_chunk, kv_chunk]) at fusion boundaries; the Pallas flash
+kernel keeps them in VMEM. This helper sums the bytes of exactly those
+tensors so the §Perf log can report a 'with-Pallas-kernel' memory term
+for TPU, which the CPU dry-run cannot lower directly.
+"""
+from __future__ import annotations
+
+import re
+
+from repro.roofline import hlo_cost as hc
+
+
+def attention_interior_bytes(text: str, q_chunk: int = 512,
+                             kv_chunk: int = 512) -> float:
+    comps = hc.parse_module(text)
+    memos: dict = {}
+    total = 0.0
+
+    def is_score_shape(type_str: str) -> bool:
+        dims = hc.shape_dims(type_str)
+        return (len(dims) >= 2 and dims[-1] in (q_chunk, kv_chunk)
+                and dims[-2] in (q_chunk, kv_chunk))
+
+    def walk(comp, mult):
+        nonlocal total
+        memo = memos.setdefault(comp.name, {})
+        for name in comp.order:
+            op = comp.ops[name]
+            oc = op.opcode
+            if oc == "while":
+                t = hc._trip_count(op.attrs)
+                m = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                if m and m.group(1) in comps:
+                    walk(comps[m.group(1)], mult * t)
+                continue
+            if oc in ("call", "conditional"):
+                for m in re.finditer(r"calls=\{?%?([\w.\-]+)", op.attrs):
+                    if m.group(1) in comps:
+                        walk(comps[m.group(1)], mult)
+                continue
+            if oc in hc._SKIP_BYTES:
+                continue
+            if is_score_shape(op.type_str):
+                total += hc._eff_bytes(comp, name, memo, comps) * mult
+            # operand side: score-shaped inputs read by this op
+            for o in op.operands:
+                if o in comp.ops and is_score_shape(comp.ops[o].type_str):
+                    total += hc._eff_bytes(comp, o, memo, comps) * mult
+
+    walk(comps["__entry__"], 1.0)
+    return total

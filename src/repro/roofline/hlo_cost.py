@@ -1,0 +1,480 @@
+"""HLO-text cost model with loop trip-count awareness.
+
+``compiled.cost_analysis()`` counts every computation ONCE — a scan over
+48 layer-cycles reports 1/48th of the real FLOPs. This module parses the
+optimized (post-SPMD) HLO text and walks the call graph from ENTRY,
+multiplying ``while`` bodies by their ``known_trip_count``, so the roofline
+terms reflect what a device actually executes.
+
+Cost conventions (documented in EXPERIMENTS.md §Roofline):
+* FLOPs: 2·result_elems·contraction for every ``dot`` (including dots
+  inside fusions); elementwise FLOPs are ignored (dots dominate ≫10³×).
+* HBM bytes: per op, operands + result; fusions count only their external
+  operands/result (internals live in registers/VMEM — the right model for
+  TPU). In-place dynamic-update-slice is counted as 2×update bytes, not a
+  full read+write of the target buffer (critical for KV caches).
+* Collective wire bytes per device, ring model over group size s:
+    all-gather: result·(s-1)/s      reduce-scatter: operand·(s-1)/s
+    all-reduce: 2·operand·(s-1)/s   all-to-all:  operand·(s-1)/s
+    collective-permute: result
+  The raw Σ(operand bytes) figure (assignment spec) is reported alongside.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1, "f8e4m3b11fnuz": 1,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0, "u1": 1, "s1": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def shape_bytes(type_str: str) -> float:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list
+    attrs: str
+    is_root: bool = False
+    args_raw: str = ""
+
+    @property
+    def param_index(self) -> Optional[int]:
+        if self.opcode != "parameter":
+            return None
+        m = re.match(r"\s*(\d+)", self.args_raw)
+        return int(m.group(1)) if m else None
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: dict            # name -> Op
+    order: list          # op names in order
+
+
+_COMP_HEAD = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_OP_LINE = re.compile(
+    r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+
+
+def _split_type_op(rest: str):
+    """'f32[2,3]{1,0} dot(%a, %b), attrs' → (type, opcode, args, attrs)."""
+    rest = rest.strip()
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                break
+        type_str, rest2 = rest[: i + 1], rest[i + 1:].strip()
+    else:
+        sp = rest.index(" ")
+        type_str, rest2 = rest[:sp], rest[sp + 1:].strip()
+    m = re.match(r"([\w\-]+)\((.*)$", rest2, re.S)
+    if not m:
+        return type_str, None, "", ""
+    opcode = m.group(1)
+    tail = m.group(2)
+    depth = 1
+    for i, ch in enumerate(tail):
+        depth += ch == "("
+        depth -= ch == ")"
+        if depth == 0:
+            break
+    args = tail[:i]
+    attrs = tail[i + 1:]
+    return type_str, opcode, args, attrs
+
+
+def parse_module(text: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HEAD.match(line.strip())
+            if m:
+                cur = Computation(m.group(1), {}, [])
+                if line.strip().startswith("ENTRY"):
+                    entry = m.group(1)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        is_root = bool(m.group(1))
+        name = m.group(2)
+        type_str, opcode, args, attrs = _split_type_op(m.group(3))
+        if opcode is None:
+            continue
+        operands = re.findall(r"%([\w.\-]+)", args)
+        cur.ops[name] = Op(name, type_str, opcode, operands, attrs, is_root,
+                           args_raw=args)
+        cur.order.append(name)
+    comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _operand_bytes(comp: Computation, op: Op, comps: dict) -> float:
+    total = 0.0
+    for o in op.operands:
+        if o in comp.ops:
+            total += shape_bytes(comp.ops[o].type_str)
+    return total
+
+
+_SLICING = {"dynamic-slice", "gather", "slice"}
+
+
+def _fusion_param_access(callee: Computation, param_idx: int) -> Optional[float]:
+    """Bytes a fusion actually reads of parameter `param_idx`, if every use
+    is a slicing op (dynamic-slice/gather/slice): the slice result size per
+    use. Returns None when any use reads the full operand.
+
+    This matters enormously inside scan loops: a fused dynamic-slice of a
+    [S, ...] buffer reads one block per iteration, not the whole buffer.
+    """
+    pname = None
+    for name in callee.order:
+        o = callee.ops[name]
+        if o.opcode == "parameter" and o.param_index == param_idx:
+            pname = name
+            break
+    if pname is None:
+        return None
+    total = 0.0
+    used = False
+    for name in callee.order:
+        o = callee.ops[name]
+        if pname in o.operands:
+            used = True
+            if o.opcode in _SLICING and o.operands[0] == pname:
+                total += shape_bytes(o.type_str)
+            elif o.opcode == "dynamic-update-slice" and o.operands[0] == pname:
+                # reads only the region it overwrites
+                upd = callee.ops.get(o.operands[1])
+                total += shape_bytes(upd.type_str) if upd else 0.0
+            else:
+                return None
+    return total if used else 0.0
+
+
+def _itemsize(type_str: str) -> float:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 4.0
+    return _DTYPE_BYTES.get(m.group(1), 4.0)
+
+
+def _elems(type_str: str) -> float:
+    total = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        if m.group(1) not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in (m.group(2).split(",") if m.group(2) else []):
+            n *= int(d)
+        total += n
+    return total
+
+
+_UNARY_PASS = {"convert", "bitcast", "copy", "transpose", "reshape",
+               "broadcast", "negate", "abs", "exponential", "tanh", "log",
+               "logistic", "sqrt", "rsqrt", "floor", "ceil",
+               "round-nearest-afz", "sign", "expm1", "log1p", "sine",
+               "cosine", "not"}
+_NARY_PASS = {"add", "multiply", "subtract", "divide", "maximum", "minimum",
+              "power", "select", "clamp", "and", "or", "xor",
+              "dynamic-slice", "slice", "concatenate", "pad",
+              "dynamic-update-slice", "fusion"}
+
+
+def _internal_convert_min(callee: Computation) -> float:
+    """Narrowest convert target inside a fused computation.
+
+    With REPRO_DTYPE_BARRIER, mixed-precision down-casts survive CPU
+    legalization as f32→bf16→f32 convert pairs *inside* fusions (e.g.
+    ``convert_convert_fusion``): the value passes through bf16, which is
+    what a TPU compilation would keep end-to-end."""
+    best = 8.0
+    for name in callee.order:
+        o = callee.ops[name]
+        if o.opcode == "convert":
+            best = min(best, _itemsize(o.type_str))
+    return best
+
+
+def _effective_itemsize(comp: Computation, name: str,
+                        memo: dict, depth: int = 12, comps: dict = None) -> float:
+    """TPU-honest dtype of a value, in bytes per element.
+
+    XLA-CPU legalizes ALL bf16 compute to f32 (converts at storage
+    boundaries) and emits bf16×bf16 dots with f32 outputs; TPU keeps bf16
+    end-to-end. Recursively take the narrowest dtype consistent with the
+    producer chain: at a ``dot``, the TPU output dtype is the widest
+    operand dtype; elementwise ops inherit the widest (effective) operand;
+    parameters/constants are authoritative storage dtypes; fusions that
+    squeeze through an internal bf16 convert count as bf16."""
+    if name in memo:
+        return memo[name]
+    op = comp.ops.get(name)
+    if op is None:
+        return 4.0
+    own = _itemsize(op.type_str)
+    memo[name] = own  # cycle guard
+    if depth <= 0 or op.opcode in ("parameter", "constant", "iota"):
+        return own
+    if op.opcode == "fusion" and comps is not None:
+        m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+        callee = comps.get(m.group(1)) if m else None
+        if callee is not None:
+            own = min(own, max(_internal_convert_min(callee),
+                               _MIN_TRACKED_ITEMSIZE))
+    if op.opcode == "dot" or op.opcode in _NARY_PASS or op.opcode in _UNARY_PASS:
+        effs = [_effective_itemsize(comp, o, memo, depth - 1, comps)
+                for o in op.operands if o in comp.ops]
+        effs = [e for e in effs if e > 0]
+        if effs:
+            own = min(own, max(effs))
+    memo[name] = own
+    return own
+
+
+# never squeeze below bf16 via the convert heuristic (int8 masks etc. are
+# not evidence that the main value path is int8)
+_MIN_TRACKED_ITEMSIZE = 2.0
+
+
+def _eff_bytes(comp: Computation, name: str, memo: dict,
+               comps: dict = None) -> float:
+    op = comp.ops.get(name)
+    if op is None:
+        return 0.0
+    return _elems(op.type_str) * _effective_itemsize(comp, name, memo,
+                                                     comps=comps)
+
+
+def _collective_operand_bytes(comp: Computation, op: Op, memo: dict,
+                              comps: dict = None) -> float:
+    """Wire bytes entering a collective, with TPU-effective dtypes."""
+    return sum(_eff_bytes(comp, o, memo, comps) for o in op.operands
+               if o in comp.ops)
+
+
+def _fusion_operand_bytes(comp: Computation, op: Op, comps: dict,
+                          memo: dict) -> float:
+    """Operand bytes for a fusion op, slice-aware per parameter and with
+    TPU-effective dtypes."""
+    m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+    callee = comps.get(m.group(1)) if m else None
+    total = 0.0
+    for idx, o in enumerate(op.operands):
+        if o not in comp.ops:
+            continue
+        full = _eff_bytes(comp, o, memo, comps)
+        if callee is not None:
+            acc = _fusion_param_access(callee, idx)
+            if acc is not None:
+                eff = _effective_itemsize(comp, o, memo, comps=comps)
+                its = _itemsize(comp.ops[o].type_str)
+                total += min(full, acc * eff / max(its, 1e-9))
+                continue
+        total += full
+    return total
+
+
+def _dot_flops(comp: Computation, op: Op) -> float:
+    result_elems = 1
+    for d in shape_dims(op.type_str):
+        result_elems *= d
+    # contraction size from lhs shape + lhs_contracting_dims
+    lhs = comp.ops.get(op.operands[0]) if op.operands else None
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    contract = 1
+    if lhs is not None and m and m.group(1):
+        ldims = shape_dims(lhs.type_str)
+        for idx in m.group(1).split(","):
+            contract *= ldims[int(idx)]
+    return 2.0 * result_elems * contract
+
+
+def _group_size(attrs: str) -> int:
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    return 1
+
+
+def _trip_count(attrs: str) -> int:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', attrs)
+    return int(m.group(1)) if m else 1
+
+
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "partition-id", "replica-id",
+               "while", "conditional", "call"}
+
+
+@dataclasses.dataclass
+class CostTotals:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_wire_bytes: float = 0.0
+    coll_operand_bytes: float = 0.0
+    coll_by_type: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    dus_bytes: float = 0.0
+    unknown_while: int = 0
+    custom_calls: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+
+
+def _fusion_dot_flops(comp: Computation, comps: dict) -> float:
+    total = 0.0
+    for name in comp.order:
+        op = comp.ops[name]
+        if op.opcode == "dot":
+            total += _dot_flops(comp, op)
+        elif op.opcode == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+            if m and m.group(1) in comps:
+                total += _fusion_dot_flops(comps[m.group(1)], comps)
+    return total
+
+
+def _fused_root_is_dus(comp: Computation) -> Optional[Op]:
+    for name in comp.order:
+        op = comp.ops[name]
+        if op.is_root and op.opcode == "dynamic-update-slice":
+            return op
+    return None
+
+
+def walk(comps: dict, comp: Computation, mult: float, tot: CostTotals,
+         memos: dict):
+    memo = memos.setdefault(comp.name, {})
+    for name in comp.order:
+        op = comp.ops[name]
+        oc = op.opcode
+        if oc == "while":
+            trips = _trip_count(op.attrs)
+            if trips == 1 and '"known_trip_count"' not in op.attrs:
+                tot.unknown_while += 1
+            m = re.search(r"body=%?([\w.\-]+)", op.attrs)
+            if m and m.group(1) in comps:
+                walk(comps, comps[m.group(1)], mult * trips, tot, memos)
+            continue
+        if oc in ("call", "conditional", "async-start"):
+            for m in re.finditer(r"(?:calls|branch_computations)=\{?%?([\w.\-]+)", op.attrs):
+                if m.group(1) in comps:
+                    walk(comps, comps[m.group(1)], mult, tot, memos)
+            continue
+        if oc == "custom-call":
+            m = re.search(r'custom_call_target="([^"]+)"', op.attrs)
+            tot.custom_calls[m.group(1) if m else "?"] += 1
+
+        base = oc.replace("-start", "")
+        if any(base == c for c in COLLECTIVES):
+            ob = _collective_operand_bytes(comp, op, memo, comps)
+            s = max(_group_size(op.attrs), 1)
+            ring = {
+                "all-gather": ob * (s - 1),
+                "all-reduce": 2.0 * ob * (s - 1) / s,
+                "reduce-scatter": ob * (s - 1) / s,
+                "all-to-all": ob * (s - 1) / s,
+                "collective-permute": ob,
+            }[base]
+            tot.coll_wire_bytes += ring * mult
+            tot.coll_operand_bytes += ob * mult
+            tot.coll_by_type[base] += ring * mult
+            tot.hbm_bytes += (_eff_bytes(comp, name, memo, comps) + ob) * mult
+            continue
+        if oc.endswith("-done"):
+            continue
+
+        if oc == "dot":
+            tot.flops += _dot_flops(comp, op) * mult
+        elif oc == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+            callee = comps.get(m.group(1)) if m else None
+            if callee is not None:
+                tot.flops += _fusion_dot_flops(callee, comps) * mult
+                dus = _fused_root_is_dus(callee)
+                result_b = _eff_bytes(comp, name, memo, comps)
+                if dus is not None:
+                    # in-place cache update: write only the update region
+                    upd = callee.ops.get(dus.operands[1])
+                    if upd is not None:
+                        result_b = min(result_b, shape_bytes(upd.type_str))
+                    tot.dus_bytes += result_b * mult
+                b = result_b + _fusion_operand_bytes(comp, op, comps, memo)
+                tot.hbm_bytes += b * mult
+                continue
+
+        if oc in _SKIP_BYTES:
+            continue
+        if oc == "dynamic-update-slice":
+            upd = comp.ops.get(op.operands[1])
+            ub = (_eff_bytes(comp, op.operands[1], memo, comps) if upd
+                  else _eff_bytes(comp, name, memo, comps))
+            tot.hbm_bytes += 2.0 * ub * mult
+            tot.dus_bytes += 2.0 * ub * mult
+            continue
+        if oc in _SLICING:
+            tot.hbm_bytes += 2.0 * _eff_bytes(comp, name, memo, comps) * mult
+            continue
+        tot.hbm_bytes += (_eff_bytes(comp, name, memo, comps)
+                          + sum(_eff_bytes(comp, o, memo, comps)
+                                for o in op.operands if o in comp.ops)) * mult
+
+
+def analyze_hlo(text: str) -> CostTotals:
+    comps = parse_module(text)
+    tot = CostTotals()
+    walk(comps, comps["__entry__"], 1.0, tot, {})
+    tot.coll_by_type = dict(tot.coll_by_type)
+    tot.custom_calls = dict(tot.custom_calls)
+    return tot

@@ -1,0 +1,101 @@
+"""Roofline terms from analyzed HLO + TPU v5e hardware constants."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.roofline.hlo_cost import CostTotals
+
+# TPU v5e (per chip) — constants from the assignment
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s
+HBM_BW = 819e9               # B/s
+LINK_BW = 50e9               # B/s per ICI link
+DCN_BW = 25e9                # B/s cross-pod (assumed; pod axis collectives)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device quantities (the SPMD module is a per-device program)
+    hlo_flops: float
+    hbm_bytes: float
+    coll_wire_bytes: float
+    coll_operand_bytes: float
+    coll_by_type: dict
+    # useful work
+    model_flops_global: float
+    # memory_analysis
+    arg_bytes: float = 0.0
+    temp_bytes: float = 0.0
+    # xla raw (per-invocation of each computation once; reference only)
+    xla_flops_raw: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_wire_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def model_flops_per_dev(self) -> float:
+        return self.model_flops_global / self.chips
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        return self.model_flops_per_dev / max(self.hlo_flops, 1.0)
+
+    @property
+    def roofline_frac(self) -> float:
+        """Useful-FLOPs time vs the binding roofline term (≈ achievable MFU)."""
+        t_useful = self.model_flops_per_dev / PEAK_FLOPS_BF16
+        return t_useful / max(self.t_bound, 1e-30)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "hlo_flops_per_dev": self.hlo_flops,
+            "hbm_bytes_per_dev": self.hbm_bytes,
+            "coll_wire_bytes_per_dev": self.coll_wire_bytes,
+            "coll_operand_bytes_per_dev": self.coll_operand_bytes,
+            "model_flops_global": self.model_flops_global,
+            "useful_ratio": self.useful_ratio,
+            "roofline_frac": self.roofline_frac,
+            "arg_bytes": self.arg_bytes, "temp_bytes": self.temp_bytes,
+        }
+
+
+def from_totals(arch: str, shape: str, mesh_desc: str, chips: int,
+                tot: CostTotals, model_flops_global: float,
+                arg_bytes: float = 0.0, temp_bytes: float = 0.0,
+                xla_flops_raw: float = 0.0) -> Roofline:
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_desc, chips=chips,
+        hlo_flops=tot.flops, hbm_bytes=tot.hbm_bytes,
+        coll_wire_bytes=tot.coll_wire_bytes,
+        coll_operand_bytes=tot.coll_operand_bytes,
+        coll_by_type=dict(tot.coll_by_type),
+        model_flops_global=model_flops_global,
+        arg_bytes=arg_bytes, temp_bytes=temp_bytes,
+        xla_flops_raw=xla_flops_raw)

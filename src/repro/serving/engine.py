@@ -1,0 +1,90 @@
+"""Batched serving engine: wave-scheduled prefill/decode over the LM.
+
+Requests are grouped into aligned *waves* (all slots share the position
+counter, so cache updates stay a single dynamic_update_slice — the
+engine's batching model; noted in DESIGN.md). Per-request completion is
+tracked with an EOS/max-token mask; finished slots emit and the wave
+retires when all slots are done or the wave budget expires.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray              # [S] int32
+    max_new_tokens: int = 32
+    eos_id: int = 0
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, batch_slots: int = 8,
+                 max_len: int = 512, prefill_chunk: Optional[int] = None,
+                 greedy: bool = True, cache_dtype=jnp.bfloat16):
+        self.params = params
+        self.cfg = cfg
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.prefill_chunk = prefill_chunk
+        self.greedy = greedy
+        self.cache_dtype = cache_dtype
+
+        self._prefill = jax.jit(
+            lambda p, c, t: lm.prefill(p, cfg, c, tokens=t,
+                                       chunk=prefill_chunk))
+        self._decode = jax.jit(lambda p, c, t: lm.decode_step(p, cfg, c, t))
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def run_wave(self, requests: List[Request]) -> List[Request]:
+        """Serve up to ``slots`` requests with aligned positions."""
+        assert len(requests) <= self.slots
+        B = self.slots
+        plen = max(len(r.prompt) for r in requests)
+        prompts = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(requests):
+            prompts[i, plen - len(r.prompt):] = r.prompt  # left-pad
+
+        cache = lm.init_cache(self.cfg, B, self.max_len,
+                              dtype=self.cache_dtype)
+        logits, cache = self._prefill(self.params, cache,
+                                      jnp.asarray(prompts))
+        tok = self._sample(logits)
+        live = np.array([not r.done for r in requests] + [False] * (B - len(requests)))
+        budget = max(r.max_new_tokens for r in requests)
+
+        for step in range(budget):
+            t_np = np.asarray(tok)
+            for i, r in enumerate(requests):
+                if live[i]:
+                    t = int(t_np[i])
+                    r.out_tokens.append(t)
+                    if t == r.eos_id or len(r.out_tokens) >= r.max_new_tokens:
+                        r.done = True
+                        live[i] = False
+            if not live.any():
+                break
+            logits, cache = self._decode(self.params, cache, tok)
+            tok = self._sample(logits)
+        for r in requests:
+            r.done = True
+        return requests
+
+    def serve(self, requests: List[Request]) -> List[Request]:
+        """Wave-batched serving of an arbitrary request list."""
+        out = []
+        for i in range(0, len(requests), self.slots):
+            out.extend(self.run_wave(requests[i:i + self.slots]))
+        return out

@@ -1,0 +1,94 @@
+"""Fault-tolerant training loop: checkpoint/restart, heartbeat failure
+detection, step log (the paper's command-replay idea at training scale),
+straggler-aware step timing."""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro import checkpoint as ckpt_lib
+from repro.data.pipeline import DataLoader
+from repro.optim.adamw import TrainState
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    log_every: int = 10
+    keep: int = 3
+    # straggler mitigation: steps slower than median×threshold are logged
+    # and (on real fleets) trigger hot-spare promotion
+    straggler_threshold: float = 2.0
+
+
+class Trainer:
+    def __init__(self, train_step: Callable, state: TrainState,
+                 loader: DataLoader, cfg: LoopConfig,
+                 failure_hook: Optional[Callable] = None):
+        self.train_step = train_step
+        self.state = state
+        self.loader = loader
+        self.cfg = cfg
+        self.failure_hook = failure_hook
+        self.step = 0
+        self.metrics_log: list = []
+        self.step_times: list = []
+        self.stragglers: list = []
+
+    # ---- checkpoint/restart ----
+    def maybe_restore(self):
+        d = self.cfg.ckpt_dir
+        if d and ckpt_lib.latest_step(d) is not None:
+            self.state, extras, self.step = ckpt_lib.restore(d, self.state)
+            if "loader" in extras:
+                self.loader.restore(extras["loader"])
+            return True
+        return False
+
+    def save(self):
+        if self.cfg.ckpt_dir:
+            ckpt_lib.save(self.cfg.ckpt_dir, self.step, self.state,
+                          extras={"loader": self.loader.snapshot()},
+                          keep=self.cfg.keep)
+
+    # ---- main loop ----
+    def run(self) -> dict:
+        it = iter(self.loader)
+        last_loss = None
+        while self.step < self.cfg.total_steps:
+            batch = next(it)
+            t0 = time.perf_counter()
+            try:
+                self.state, metrics = self.train_step(self.state, batch)
+                jax.block_until_ready(metrics["loss"])
+            except Exception:
+                # device loss / preemption: persist nothing (the last
+                # checkpoint is the recovery point), notify orchestrator
+                if self.failure_hook is not None:
+                    self.failure_hook(self.step)
+                raise
+            dt = time.perf_counter() - t0
+            self.step_times.append(dt)
+            med = float(np.median(self.step_times[-50:]))
+            if len(self.step_times) > 5 and dt > med * self.cfg.straggler_threshold:
+                self.stragglers.append((self.step, dt, med))
+            self.step += 1
+            last_loss = float(metrics["loss"])
+            if self.step % self.cfg.log_every == 0 or \
+                    self.step == self.cfg.total_steps:
+                self.metrics_log.append(
+                    {"step": self.step, "loss": last_loss,
+                     "grad_norm": float(metrics["grad_norm"]),
+                     "lr": float(metrics["lr"]), "sec_per_step": dt})
+            if self.cfg.ckpt_every and self.step % self.cfg.ckpt_every == 0:
+                self.save()
+        self.save()
+        return {"final_loss": last_loss, "log": self.metrics_log,
+                "stragglers": self.stragglers}

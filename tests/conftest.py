@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run, and ONLY the
+# dry-run, uses forced host devices — see launch/dryrun.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,150 @@
+"""Pallas kernels validated in interpret mode against pure-jnp oracles,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd_scan.ops import ssd
+from repro.kernels.ssd_scan.ref import ssd_ref
+from repro.kernels.topk_compress.ops import compress, decompress
+from repro.kernels.topk_compress.ref import topk_pack_ref, unpack_ref
+
+
+# ---------------- flash attention ----------------
+
+FA_SHAPES = [
+    (2, 256, 4, 2, 64),
+    (1, 512, 4, 1, 64),
+    (1, 256, 8, 2, 128),
+    (2, 128, 2, 2, 32),
+]
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd", FA_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_kernel_shapes_dtypes(B, S, H, KV, hd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), dtype)
+    out = flash_attention(q, k, v, causal=True, q_chunk=64, kv_chunk=64,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    atol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("case", [
+    dict(window=100), dict(causal=False), dict(logit_softcap=30.0),
+    dict(q_offset=128, kv_len=200),
+])
+def test_flash_kernel_masking_variants(case):
+    B, S, H, KV, hd = 1, 256, 4, 2, 64
+    Sq = 128 if case.get("q_offset") else S
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    kv_len = case.pop("kv_len", None)
+    out = flash_attention(q, k, v, kv_len=kv_len, q_chunk=64, kv_chunk=64,
+                          interpret=True, **case)
+    ref = attention_ref(q, k, v, kv_len=kv_len, **case)
+    np.testing.assert_allclose(out, ref, atol=3e-5)
+
+
+# ---------------- SSD scan ----------------
+
+@pytest.mark.parametrize("BH,S,P,N,Q", [
+    (4, 256, 64, 128, 64), (2, 512, 64, 64, 128), (8, 128, 128, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel_vs_ref(BH, S, P, N, Q, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    x = jax.random.normal(ks[0], (BH, S, P), dtype)
+    dA = -jax.nn.softplus(jax.random.normal(ks[1], (BH, S))).astype(jnp.float32)
+    Bm = jax.random.normal(ks[2], (BH, S, N), dtype)
+    Cm = jax.random.normal(ks[3], (BH, S, N), dtype)
+    y, fin = ssd(x, dA, Bm, Cm, chunk=Q, interpret=True)
+    yr, finr = ssd_ref(x, dA, Bm, Cm, chunk=Q)
+    atol = 2e-4 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=atol)
+    np.testing.assert_allclose(fin, finr, atol=2e-4 if dtype == jnp.float32
+                               else 0.15)
+
+
+def test_ssd_chunk_invariance():
+    """The chunked algorithm must equal the single-chunk (dense) result."""
+    BH, S, P, N = 2, 256, 64, 64
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    x = jax.random.normal(ks[0], (BH, S, P))
+    dA = -jax.nn.softplus(jax.random.normal(ks[1], (BH, S)))
+    Bm = jax.random.normal(ks[2], (BH, S, N))
+    Cm = jax.random.normal(ks[3], (BH, S, N))
+    y64, f64 = ssd_ref(x, dA, Bm, Cm, chunk=64)
+    y256, f256 = ssd_ref(x, dA, Bm, Cm, chunk=256)
+    np.testing.assert_allclose(y64, y256, atol=2e-3, rtol=1e-4)
+    np.testing.assert_allclose(f64, f256, atol=2e-3, rtol=1e-4)
+
+
+def test_ssd_decode_step_matches_scan():
+    from repro.models.ssm import ssd_decode_step
+    BH, S, P, N = 2, 16, 8, 8
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    x = jax.random.normal(ks[0], (BH, S, P))
+    dA = -jax.nn.softplus(jax.random.normal(ks[1], (BH, S)))
+    Bm = jax.random.normal(ks[2], (BH, S, N))
+    Cm = jax.random.normal(ks[3], (BH, S, N))
+    y_ref, fin_ref = ssd_ref(x, dA, Bm, Cm, chunk=16)
+    # step one token at a time (B, H folded: treat BH as B with H=1)
+    state = jnp.zeros((BH, 1, P, N))
+    ys = []
+    for t in range(S):
+        y, state = ssd_decode_step(state, x[:, t, None], dA[:, t, None],
+                                   Bm[:, t, None], Cm[:, t, None])
+        ys.append(y[:, 0])
+    np.testing.assert_allclose(jnp.stack(ys, 1), y_ref, atol=2e-4)
+    np.testing.assert_allclose(state[:, 0], fin_ref, atol=2e-4)
+
+
+# ---------------- topk compress ----------------
+
+@pytest.mark.parametrize("n,block,k", [(4096, 512, 16), (8192, 1024, 32),
+                                       (2048, 256, 8), (1024, 1024, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_topk_kernel_vs_ref(n, block, k, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(5), (n,), dtype)
+    v1, i1, r1, c1 = compress(x, k_per_block=k, block=block, interpret=True)
+    v2, i2 = topk_pack_ref(x, k, block)
+    np.testing.assert_allclose(np.asarray(v1, np.float32),
+                               np.asarray(v2, np.float32), atol=0)
+    assert bool(jnp.array_equal(i1, i2))
+    dense = decompress(v1, i1, block=block, n=n)
+    np.testing.assert_allclose(np.asarray(x - dense, np.float32),
+                               np.asarray(r1, np.float32), atol=1e-6)
+    assert int(c1) == v1.size * v1.dtype.itemsize + i1.size * 4
+
+
+@settings(max_examples=10, deadline=None)
+@given(nb=st.integers(1, 4), k=st.sampled_from([4, 16]),
+       seed=st.integers(0, 2**16))
+def test_topk_property_reconstruction(nb, k, seed):
+    """residual + unpack(pack(x)) == x, and packed values are the k
+    largest magnitudes of each block."""
+    block = 256
+    n = nb * block
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    vals, idx, resid, _ = compress(x, k_per_block=k, block=block,
+                                   interpret=True)
+    dense = decompress(vals, idx, block=block, n=n)
+    np.testing.assert_allclose(dense + resid, x, atol=1e-6)
+    xb = np.asarray(x).reshape(nb, block)
+    for b in range(nb):
+        top_ref = np.sort(np.abs(xb[b]))[-k:]
+        np.testing.assert_allclose(np.sort(np.abs(np.asarray(vals[b]))),
+                                   top_ref, atol=1e-6)

@@ -1,0 +1,65 @@
+"""HLO cost-model unit tests on hand-built programs with known costs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline import analyze_hlo
+from repro.roofline.hlo_cost import (parse_module, shape_bytes, shape_dims,
+                                     _group_size, _trip_count)
+
+
+def test_shape_parsing():
+    assert shape_bytes("f32[128,512]{1,0}") == 128 * 512 * 4
+    assert shape_bytes("bf16[3]{0}") == 6
+    assert shape_bytes("(s32[], f32[2,2]{1,0})") == 4 + 16
+    assert shape_dims("bf16[4,8]{1,0}") == [4, 8]
+
+
+def test_group_size_formats():
+    assert _group_size("replica_groups={{0,1,2,3},{4,5,6,7}}") == 4
+    assert _group_size("replica_groups=[2,4]<=[8]") == 4
+    assert _group_size("replica_groups=[4,2]<=[2,4]T(1,0)") == 2
+
+
+def test_trip_count():
+    assert _trip_count('backend_config={"known_trip_count":{"n":"12"}}') == 12
+    assert _trip_count("") == 1
+
+
+def test_matmul_flops_exact():
+    M = N = K = 256
+
+    @jax.jit
+    def f(a, b):
+        return a @ b
+
+    hlo = f.lower(jnp.zeros((M, K)), jnp.zeros((K, N))).compile().as_text()
+    tot = analyze_hlo(hlo)
+    assert tot.flops == 2 * M * N * K
+
+
+def test_scan_trip_count_multiplies_flops():
+    T, M = 8, 64
+
+    @jax.jit
+    def f(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    hlo = f.lower(jnp.zeros((M, M)),
+                  jnp.zeros((T, M, M))).compile().as_text()
+    tot = analyze_hlo(hlo)
+    expected = 2 * M * M * M * T
+    assert abs(tot.flops - expected) / expected < 0.01, tot.flops
+
+
+def test_parse_module_entry():
+    @jax.jit
+    def f(x):
+        return x * 2
+
+    hlo = f.lower(jnp.zeros((4,))).compile().as_text()
+    comps = parse_module(hlo)
+    assert "__entry__" in comps
