@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
+import random
 
 from repro.core import DeviceSpec, LinkSpec
 
@@ -39,3 +40,23 @@ def emit(rows):
     for r in rows:
         print(r.csv())
     return rows
+
+
+def build_dag(rt, n_cmds: int, n_srv: int, seed: int = 0, fanin: int = 3,
+              window: int = 50, duration: float = 1e-7):
+    """Enqueue a deterministic random command DAG: pure dispatch load
+    (fn=None, no buffers). Command i runs on a seeded-random server and
+    waits on 1..``fanin`` events drawn from the last ``window`` commands,
+    so the graph stays deep and cross-server the whole run."""
+    rng = random.Random(seed)
+    events = []
+    for i in range(n_cmds):
+        srv = f"s{rng.randrange(n_srv)}"
+        deps = []
+        if events:
+            lo = max(0, len(events) - window)
+            for _ in range(rng.randint(1, fanin)):
+                deps.append(events[rng.randrange(lo, len(events))])
+        events.append(rt.enqueue_kernel(srv, fn=None, duration=duration,
+                                        wait_for=deps, name=f"k{i}"))
+    return events

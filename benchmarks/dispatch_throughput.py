@@ -1,0 +1,129 @@
+"""Dispatch/completion hot-path throughput: deep random command DAGs
+over 1/4/8 servers, subscription routing vs all-peers broadcast.
+
+Reports wall-clock commands/sec (the Python runtime's own dispatch cost,
+not simulated time), peer completion-message counts, and the live-event
+count after the drain (0 ⇒ retirement keeps tables bounded).
+
+  PYTHONPATH=src python -m benchmarks.dispatch_throughput \
+      [--n 10000] [--smoke] [--baseline benchmarks/BENCH_dispatch.json]
+
+With ``--baseline``, exits non-zero if any measured cmds_per_sec
+regresses more than 20% below the checked-in baseline (used by
+scripts/ci.sh).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import logging
+import sys
+import time
+
+from benchmarks.common import LOOPBACK, Row, build_dag, emit
+from repro.core import ClientRuntime, DeviceSpec, ServerSpec
+
+SERVER_COUNTS = (1, 4, 8)
+ROUTINGS = ("subscription", "broadcast")
+REGRESSION_TOLERANCE = 0.20
+
+
+def _measure(n_cmds: int, n_srv: int, routing: str) -> Row:
+    rt = ClientRuntime(
+        servers=[ServerSpec(f"s{i}", [DeviceSpec("gpu0")])
+                 for i in range(n_srv)],
+        client_link=LOOPBACK, peer_link=LOOPBACK,
+        completion_routing=routing)
+    t0 = time.perf_counter()
+    build_dag(rt, n_cmds, n_srv, seed=42)
+    rt.finish()
+    wall = time.perf_counter() - t0
+    st = rt.stats()
+    return Row(f"dispatch_{n_srv}srv_{routing}", wall / n_cmds * 1e6,
+               f"cmds_per_sec={n_cmds / wall:.0f};"
+               f"peer_completion_msgs={st['peer_completion_msgs']};"
+               f"events_live={st['events_live']}")
+
+
+def run(n_cmds: int = 10000):
+    # deep enqueue-ahead DAGs overflow the replay window by design; the
+    # (expected) once-per-session warning would drown the CSV output —
+    # silence it for the sweep only (run.py shares this process with
+    # benchmarks that should keep the warning)
+    rt_log = logging.getLogger("repro.core.runtime")
+    prev_level = rt_log.level
+    rt_log.setLevel(logging.ERROR)
+    try:
+        rows = []
+        for n_srv in SERVER_COUNTS:
+            for routing in ROUTINGS:
+                rows.append(_measure(n_cmds, n_srv, routing))
+    finally:
+        rt_log.setLevel(prev_level)
+    return emit(rows)
+
+
+def _cmds_per_sec(row: Row) -> float:
+    for part in row.derived.split(";"):
+        if part.startswith("cmds_per_sec="):
+            return float(part.split("=")[1])
+    raise ValueError(f"no cmds_per_sec in {row.derived!r}")
+
+
+def check_baseline(rows, baseline_path: str) -> bool:
+    """Gate only the subscription rows — that is the shipped dispatch
+    path; the broadcast rows exist as a comparison baseline and their
+    absolute wall-clock speed is not a product property."""
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    ok = True
+    for row in rows:
+        want = baseline.get(row.name)
+        if want is None:
+            continue
+        got = _cmds_per_sec(row)
+        floor = want * (1.0 - REGRESSION_TOLERANCE)
+        gated = row.name.endswith("_subscription")
+        status = "ok" if got >= floor else (
+            "REGRESSION" if gated else "slow (ungated)")
+        print(f"# {row.name}: {got:.0f} cmds/s vs baseline {want:.0f} "
+              f"(floor {floor:.0f}) {status}", file=sys.stderr)
+        if gated and got < floor:
+            ok = False
+    return ok
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=10000)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small command count for CI")
+    ap.add_argument("--baseline", default=None,
+                    help="JSON {row_name: cmds_per_sec}; fail on >20%% "
+                         "regression")
+    ap.add_argument("--write-baseline", default=None,
+                    help="write measured cmds/sec to this JSON path")
+    ap.add_argument("--trials", type=int, default=1,
+                    help="repeat the sweep N times and keep the best "
+                         "cmds/sec per row (damps wall-clock noise when "
+                         "gating)")
+    args = ap.parse_args()
+    n = 2000 if args.smoke else args.n
+    rows = run(n)
+    for _ in range(args.trials - 1):
+        best = {r.name: r for r in rows}
+        for r in run(n):
+            if _cmds_per_sec(r) > _cmds_per_sec(best[r.name]):
+                best[r.name] = r
+        rows = [best[r.name] for r in rows]
+    if args.write_baseline:
+        with open(args.write_baseline, "w") as f:
+            json.dump({r.name: _cmds_per_sec(r) for r in rows}, f, indent=1)
+        print(f"# baseline written to {args.write_baseline}",
+              file=sys.stderr)
+    if args.baseline and not check_baseline(rows, args.baseline):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

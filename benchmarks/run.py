@@ -18,6 +18,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 MODULES = [
     ("fig8", "benchmarks.cmd_overhead"),
+    ("dispatch", "benchmarks.dispatch_throughput"),
     ("fig9", "benchmarks.passthrough"),
     ("fig10", "benchmarks.migration_latency"),
     ("fig11", "benchmarks.rdma_vs_tcp"),

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Tier-1 tests + dispatch hot-path smoke with throughput regression gate.
+#
+#   scripts/ci.sh
+#
+# Fails if any test fails, either benchmark errors, or dispatch
+# throughput regresses >20% below benchmarks/BENCH_dispatch.json
+# (regenerate the baseline on the CI host with:
+#   python -m benchmarks.dispatch_throughput --smoke \
+#       --write-baseline benchmarks/BENCH_dispatch.json).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== fig8 command-overhead smoke =="
+python -m benchmarks.cmd_overhead
+
+echo "== dispatch throughput smoke (20% regression gate) =="
+python -m benchmarks.dispatch_throughput --smoke --trials 3 \
+    --baseline benchmarks/BENCH_dispatch.json
+
+echo "ci.sh: all checks passed"

@@ -26,6 +26,30 @@ class Event:
     t_client_ack: float = 0.0   # when the client observed completion
     error: Optional[str] = None
     _callbacks: list = dataclasses.field(default_factory=list)
+    # ---- lifecycle refcounting (runtime table retirement) ----
+    # Holders: the client (until it observes completion) and every
+    # not-yet-resolved dependent command. When the count drops to zero on
+    # a finished event, ``on_retire`` fires once so the runtime can drop
+    # the event from its lookup tables. The Event object itself is never
+    # mutated by retirement — user code can keep reading timestamps.
+    _refs: int = 0
+    retired: bool = False
+    on_retire: Optional[Callable] = None
+
+    def retain(self):
+        self._refs += 1
+
+    def release(self):
+        self._refs -= 1
+        self._maybe_retire()
+
+    def _maybe_retire(self):
+        if self._refs <= 0 and not self.retired \
+                and self.status in (COMPLETE, ERROR):
+            self.retired = True
+            cb, self.on_retire = self.on_retire, None
+            if cb is not None:
+                cb(self)
 
     def on_complete(self, fn: Callable):
         if self.status == COMPLETE:
@@ -39,6 +63,7 @@ class Event:
         cbs, self._callbacks = self._callbacks, []
         for fn in cbs:
             fn(self)
+        self._maybe_retire()
 
     def fail(self, t: float, reason: str):
         self.status = ERROR
@@ -47,6 +72,7 @@ class Event:
         cbs, self._callbacks = self._callbacks, []
         for fn in cbs:
             fn(self)
+        self._maybe_retire()
 
     @property
     def duration(self) -> float:

@@ -17,32 +17,50 @@ the contended FIFO.
 from __future__ import annotations
 
 import heapq
-import itertools
 from typing import Callable, Optional
 
 
 class SimClock:
+    """Logical clock over a binary heap. This is the innermost loop of
+    every benchmark, so the hot methods avoid per-call allocation beyond
+    the heap entry itself: a plain int sequence counter (no itertools
+    iterator), module functions bound once, and ``run`` keeps the queue
+    and pop in locals instead of re-reading attributes per event."""
+
+    __slots__ = ("_q", "_seq", "now", "_push")
+
     def __init__(self):
         self._q: list = []
-        self._seq = itertools.count()
+        self._seq = 0
         self.now = 0.0
+        self._push = heapq.heappush
 
     def schedule(self, delay: float, fn: Callable, *args):
-        t = self.now + max(delay, 0.0)
-        heapq.heappush(self._q, (t, next(self._seq), fn, args))
+        t = self.now + delay if delay > 0.0 else self.now
+        self._seq = seq = self._seq + 1
+        self._push(self._q, (t, seq, fn, args))
         return t
 
     def schedule_at(self, t: float, fn: Callable, *args):
-        heapq.heappush(self._q, (max(t, self.now), next(self._seq), fn, args))
+        now = self.now
+        if t < now:
+            t = now
+        self._seq = seq = self._seq + 1
+        self._push(self._q, (t, seq, fn, args))
 
     def run(self, until: Optional[float] = None) -> float:
-        while self._q:
-            t, _, fn, args = self._q[0]
-            if until is not None and t > until:
-                break
-            heapq.heappop(self._q)
-            self.now = t
-            fn(*args)
+        q = self._q
+        pop = heapq.heappop
+        if until is None:
+            while q:
+                t, _, fn, args = pop(q)
+                self.now = t
+                fn(*args)
+        else:
+            while q and q[0][0] <= until:
+                t, _, fn, args = pop(q)
+                self.now = t
+                fn(*args)
         return self.now
 
 
@@ -51,6 +69,9 @@ class Link:
 
     ``latency`` is one-way propagation (s); ``bandwidth`` in B/s.
     """
+
+    __slots__ = ("clock", "latency", "bandwidth", "name", "_busy_until",
+                 "bytes_sent", "up", "_schedule_at")
 
     def __init__(self, clock: SimClock, latency: float, bandwidth: float,
                  name: str = ""):
@@ -61,6 +82,7 @@ class Link:
         self._busy_until = 0.0
         self.bytes_sent = 0
         self.up = True
+        self._schedule_at = clock.schedule_at   # bound once: send is hot
 
     def rtt(self) -> float:
         return 2.0 * self.latency
@@ -70,18 +92,26 @@ class Link:
         """Queue a message; ``on_delivered`` fires at the receiver."""
         if not self.up:
             return None  # dropped — sender times out via its own logic
-        start = max(self.clock.now, self._busy_until) + serialize_overhead
-        tx = nbytes / self.bandwidth if self.bandwidth > 0 else 0.0
-        self._busy_until = start + tx
+        start = self.clock.now
+        busy = self._busy_until
+        if busy > start:
+            start = busy
+        start += serialize_overhead
+        bw = self.bandwidth
+        busy = start + (nbytes / bw if bw > 0 else 0.0)
+        self._busy_until = busy
         self.bytes_sent += nbytes
-        arrive = self._busy_until + self.latency
-        self.clock.schedule_at(arrive, on_delivered)
+        arrive = busy + self.latency
+        self._schedule_at(arrive, on_delivered)
         return arrive
 
 
 class DeviceSim:
     """A compute device with a busy-until timeline and an analytic or
     measured kernel cost model."""
+
+    __slots__ = ("clock", "name", "flops", "mem_bw", "_busy_until",
+                 "busy_time", "_schedule_at")
 
     def __init__(self, clock: SimClock, name: str,
                  flops: float = 10e12, mem_bw: float = 500e9):
@@ -91,6 +121,7 @@ class DeviceSim:
         self.mem_bw = mem_bw
         self._busy_until = 0.0
         self.busy_time = 0.0
+        self._schedule_at = clock.schedule_at   # bound once: execute is hot
 
     def kernel_cost(self, flop_count: float = 0.0, bytes_moved: float = 0.0,
                     duration: Optional[float] = None) -> float:
@@ -101,11 +132,14 @@ class DeviceSim:
 
     def execute(self, cost: float, on_done: Callable) -> tuple[float, float]:
         """Schedule a kernel; returns (start, end) sim times."""
-        start = max(self.clock.now, self._busy_until)
+        start = self.clock.now
+        busy = self._busy_until
+        if busy > start:
+            start = busy
         end = start + cost
         self._busy_until = end
         self.busy_time += cost
-        self.clock.schedule_at(end, on_done)
+        self._schedule_at(end, on_done)
         return start, end
 
     def utilization(self, horizon: float) -> float:

@@ -22,11 +22,20 @@ Semantics implemented faithfully:
 Kernels execute *functionally* (real arrays) in causal simulation order,
 so the same runtime that produces latency numbers also produces bit-exact
 results for the tests.
+
+Dispatch is O(1) per command (DESIGN.md §1): each server keeps an
+indexed waiter table (dep event id → waiting commands, with per-command
+remaining-dep counters) and an explicit ready queue instead of rescanning
+a pending list; completions are routed only to servers that registered a
+dependent on the event (``completion_routing='subscription'``, matching
+the paper's direct P2P signaling) instead of broadcast to every peer; and
+finished events are retired from all runtime tables once nobody holds a
+reference, so long runs stay memory-bounded.
 """
 from __future__ import annotations
 
 import dataclasses
-import os
+import logging
 import secrets
 from collections import deque
 from typing import Callable, Optional, Sequence
@@ -40,6 +49,8 @@ from repro.core.events import (COMPLETE, ERROR, QUEUED, RUNNING, SUBMITTED,
 from repro.core.netsim import DeviceSim, Link, SimClock
 from repro.core.transport import (make_transport, wire_scale,
     CLIENT_SUBMIT, CLIENT_REAP, DISPATCH, COMPLETE_WRITE)
+
+log = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
@@ -61,6 +72,16 @@ class LinkSpec:
     bandwidth: float = 100e6 / 8  # 100 Mbit Ethernet
 
 
+class _Waiter:
+    """One submitted command waiting on unresolved dependencies."""
+    __slots__ = ("ev", "dev_name", "remaining")
+
+    def __init__(self, ev: Event, dev_name: str):
+        self.ev = ev
+        self.dev_name = dev_name
+        self.remaining = 0
+
+
 class ServerSim:
     """The pocld daemon: reader/writer threads become event-loop actors."""
 
@@ -71,56 +92,79 @@ class ServerSim:
                         for d in spec.devices}
         self.session_id: Optional[bytes] = None
         self.processed: set = set()           # command ids (replay dedup)
-        self.known_events: dict = {}          # event id -> Event
         self.resolved_remote: set = set()     # remote event ids seen complete
-        self.pending: list = []               # (event, dev, remaining_dep_ids)
+        # dep event id -> [_Waiter, ...] in command-arrival order
+        self._waiters: dict = {}
+        self._ready: deque = deque()          # waiters with remaining == 0
 
     # ---- command arrival ----
-    def receive_command(self, ev: Event, dev_name: str, dep_ids: list):
-        cmd = ev.command
-        if cmd.id in self.processed:          # replayed after reconnect
+    def receive_command(self, ev: Event, dev_name: str, deps: list):
+        """``deps`` is [(dep_event_id, is_local_to_this_server), ...] as
+        classified by the client at enqueue time."""
+        if ev.command.id in self.processed:   # replayed after reconnect
             return
-        self.processed.add(cmd.id)
-        self.known_events[ev.id] = ev
+        self.processed.add(ev.command.id)
         ev.status = SUBMITTED
         ev.t_submitted = self.rt.clock.now
-        remaining = set()
-        for dep_id in dep_ids:
-            dep = self.rt.events.get(dep_id)
-            if dep is None or dep.status == COMPLETE:
+        w = _Waiter(ev, dev_name)
+        events = self.rt.events
+        for dep_id, local in deps:
+            dep = events.get(dep_id)
+            if dep is None or dep.status == COMPLETE or \
+                    (not local and dep_id in self.resolved_remote):
+                if dep is not None:
+                    dep.release()             # retained at _send_command
                 continue
-            if dep.server == self.name:
-                dep.on_complete(lambda _e, eid=ev.id: self._dep_done(eid, _e.id))
-                remaining.add(dep_id)
-            elif dep_id in self.resolved_remote:
-                continue
-            else:
-                remaining.add(dep_id)         # waits for peer notification
-        self.pending.append([ev, dev_name, remaining])
+            lst = self._waiters.get(dep_id)
+            if lst is None:
+                lst = self._waiters[dep_id] = []
+                if local:
+                    # one callback per dep regardless of waiter count;
+                    # fires wherever the event eventually completes
+                    dep.on_complete(self._local_dep_complete)
+            lst.append(w)
+            w.remaining += 1
+        if not w.remaining:
+            self._ready.append(w)
         self._dispatch_ready()
 
-    def _dep_done(self, ev_id: int, dep_id: int):
-        for entry in self.pending:
-            if entry[0].id == ev_id:
-                entry[2].discard(dep_id)
+    def _local_dep_complete(self, dep: Event):
+        self._resolve_dep(dep.id)
         self._dispatch_ready()
+
+    def _resolve_dep(self, dep_id: int):
+        lst = self._waiters.pop(dep_id, None)
+        if not lst:
+            return
+        dep = self.rt.events.get(dep_id)
+        ready = self._ready
+        for w in lst:
+            w.remaining -= 1
+            if not w.remaining:
+                ready.append(w)
+            if dep is not None:
+                dep.release()                 # retained at _send_command
+        # caller runs _dispatch_ready (keeps resolve usable mid-dispatch)
 
     def notify_remote_complete(self, dep_id: int):
-        self.resolved_remote.add(dep_id)
-        for entry in self.pending:
-            entry[2].discard(dep_id)
+        # record only while the event is live: once retired, any command
+        # arriving later resolves via the events-table miss, and a stale
+        # entry here would never be cleaned (retirement already ran)
+        if dep_id in self.rt.events:
+            self.resolved_remote.add(dep_id)
+        self._resolve_dep(dep_id)
         self._dispatch_ready()
 
     def _dispatch_ready(self):
-        # remove ready entries BEFORE executing: execution may complete
-        # synchronously and re-enter this method
-        while True:
-            ready = [e for e in self.pending if not e[2]]
-            if not ready:
-                return
-            self.pending = [e for e in self.pending if e[2]]
-            for ev, dev_name, _ in ready:
-                self._execute(ev, dev_name)
+        # drain in waves: execution may complete synchronously and
+        # re-enter this method; a nested call drains the entries IT made
+        # ready before the outer wave continues (matching the recursive
+        # semantics of the pre-indexed implementation)
+        while self._ready:
+            wave = self._ready
+            self._ready = deque()
+            for w in wave:
+                self._execute(w.ev, w.dev_name)
 
     # ---- execution ----
     def _execute(self, ev: Event, dev_name: str):
@@ -178,6 +222,24 @@ class Session:
         self.session_id = bytes(16)           # all-zeroes until handshake
         self.available = False
         self.replay: deque = deque(maxlen=64)  # last commands (unacked)
+        self.lost_unacked = 0                  # overflowed replay slots
+
+    def record(self, item):
+        """Append to the replay window, dropping already-finished entries
+        first. Overflow means an UNACKED command falls out of the window
+        and could not be replayed after a reconnect — that loss used to
+        be silent; now it is counted and logged once per session."""
+        buf = self.replay
+        while buf and buf[0][0].status in (COMPLETE, ERROR):
+            buf.popleft()
+        if buf.maxlen is not None and len(buf) == buf.maxlen:
+            if not self.lost_unacked:
+                log.warning(
+                    "session %s: replay window full (maxlen=%d); dropping "
+                    "oldest unacked command — it cannot be replayed after "
+                    "a reconnect", self.name, buf.maxlen)
+            self.lost_unacked += 1
+        buf.append(item)
 
 
 class ClientRuntime:
@@ -192,14 +254,26 @@ class ClientRuntime:
                  svm: bool = False,
                  scheduling: str = "decentralized",   # | 'client'
                  p2p_migration: bool = True,
+                 completion_routing: str = "subscription",  # | 'broadcast'
                  local_device: Optional[DeviceSpec] = None):
+        if completion_routing not in ("subscription", "broadcast"):
+            raise ValueError(f"unknown completion_routing "
+                             f"{completion_routing!r}")
         self.clock = SimClock()
         self.transport = make_transport(transport, svm)
         self.peer_transport = make_transport(peer_transport or transport, svm)
         self.scheduling = scheduling
         self.p2p_migration = p2p_migration
+        self.completion_routing = completion_routing
         self.servers = {s.name: ServerSim(self, s) for s in servers}
         self.events: dict = {}
+        # event id -> {server names holding dependents of it}; registered
+        # at enqueue time so a completion is signaled "directly to the
+        # target server" (§5.2) instead of broadcast to every peer
+        self._subs: dict = {}
+        self.client_completion_msgs = 0       # server → client completes
+        self.peer_completion_msgs = 0         # server → peer notifications
+        self.client_routed_completion_msgs = 0  # client → server forwards
         self.sessions = {s: Session(s) for s in self.servers}
         self.local_device = DeviceSim(
             self.clock, "local",
@@ -247,13 +321,30 @@ class ClientRuntime:
         self._buffers.append(b)
         return b
 
-    # ---- enqueue API ----
-    def _new_event(self, cmd, server: str) -> Event:
-        ev = Event(command=cmd, server=server)
+    # ---- event lifecycle ----
+    def _register_event(self, ev: Event) -> Event:
         ev.t_queued = self.clock.now
+        ev.retain()                 # client hold until completion observed
+        ev.on_retire = self._retire
         self.events[ev.id] = ev
         return ev
 
+    def _new_event(self, cmd, server: str) -> Event:
+        return self._register_event(Event(command=cmd, server=server))
+
+    def _retire(self, ev: Event):
+        """Last reference dropped on a finished event: remove it from
+        every runtime table so long runs stay memory-bounded. The Event
+        object itself stays valid for user-held handles."""
+        self.events.pop(ev.id, None)
+        self._subs.pop(ev.id, None)
+        cmd_id = getattr(ev.command, "id", None)
+        for srv in self.servers.values():
+            srv.resolved_remote.discard(ev.id)
+            if cmd_id is not None:
+                srv.processed.discard(cmd_id)
+
+    # ---- enqueue API ----
     def enqueue_kernel(self, server: str, device: str = "",
                        fn: Optional[Callable] = None,
                        inputs: Sequence[Buffer] = (),
@@ -305,6 +396,7 @@ class ClientRuntime:
         if dst in buf.valid_on:
             ev = self._new_event(C.Marker(), dst)
             ev.complete(self.clock.now)
+            ev.release()            # completed on the client: no ack cycle
             return ev
         srcs = [s for s in buf.valid_on if s != "client"]
         if not srcs:  # client-held data: plain upload
@@ -313,24 +405,23 @@ class ClientRuntime:
                                       else np.zeros(buf.nbytes, np.uint8))
         src = srcs[0]
         cmd = C.MigrateBuffer(buffer=buf, dst_server=dst)
-        ev = self._new_event(cmd, src if self.p2p_migration else dst)
         if self.p2p_migration:
+            ev = self._new_event(cmd, src)
             self._send_command(ev, src, "", [d.id for d in wait_for])
-        else:
-            # naive: read back to client, then write to dst
-            rd = self.enqueue_read(src, buf, wait_for=wait_for)
-            wr_ev = self._new_event(cmd, dst)
+            return ev
+        # naive: read back to client, then write to dst
+        rd = self.enqueue_read(src, buf, wait_for=wait_for)
+        wr_ev = self._new_event(cmd, dst)
 
-            def after_read(_):
-                nb = buf.transfer_bytes()
-                cost = self.transport.command_cost(nb)
-                self.clock.schedule(CLIENT_SUBMIT + cost.sender_cpu,
-                                    self._deliver_naive_write, wr_ev, dst,
-                                    nb, cost)
+        def after_read(_):
+            nb = buf.transfer_bytes()
+            cost = self.transport.command_cost(nb)
+            self.clock.schedule(CLIENT_SUBMIT + cost.sender_cpu,
+                                self._deliver_naive_write, wr_ev, dst,
+                                nb, cost)
 
-            rd.on_complete(after_read)
-            return wr_ev
-        return ev
+        rd.on_complete(after_read)
+        return wr_ev
 
     def _deliver_naive_write(self, ev, dst, nbytes, cost):
         def arrived():
@@ -344,20 +435,40 @@ class ClientRuntime:
     def marker(self) -> Event:
         ev = self._new_event(C.Marker(), "client")
         ev.complete(self.clock.now)
+        ev.release()                # completed on the client: no ack cycle
         return ev
 
     # ---- wire ----
     def _send_command(self, ev: Event, server: str, device: str,
                       dep_ids: list, payload: float = 0.0):
+        # classify deps at enqueue time: already-finished ones are
+        # dropped from the wire message; live ones are retained (they
+        # must stay resolvable until this command dispatches) and, when
+        # remote, the target server subscribes to their completion
+        deps = []
+        if dep_ids:
+            seen = set()
+            for dep_id in dep_ids:
+                if dep_id in seen:
+                    continue
+                seen.add(dep_id)
+                dep = self.events.get(dep_id)
+                if dep is None or dep.status == COMPLETE:
+                    continue
+                dep.retain()
+                local = dep.server == server
+                if not local and self.completion_routing == "subscription":
+                    self._subs.setdefault(dep_id, set()).add(server)
+                deps.append((dep_id, local))
         sess = self.sessions[server]
-        sess.replay.append((ev, server, device, dep_ids, payload))
+        sess.record((ev, server, device, deps, payload))
         cost = self.transport.command_cost(payload)
         link = self.c_links[server]
 
         def deliver():
             self.clock.schedule(
                 cost.receiver_cpu + DISPATCH,
-                self.servers[server].receive_command, ev, device, dep_ids)
+                self.servers[server].receive_command, ev, device, deps)
 
         link.send(cost.wire_bytes * wire_scale(self.transport,
                                                link.bandwidth),
@@ -401,6 +512,8 @@ class ClientRuntime:
         def arrived():
             buf.valid_on.add("client")
             ev.complete(self.clock.now)
+            self._route_completion_via_client(ev)
+            ev.release()            # client observed completion directly
 
         link.send(cost.wire_bytes * wire_scale(self.transport,
                                                link.bandwidth),
@@ -414,33 +527,60 @@ class ClientRuntime:
         self.c_links[srv.name].send(
             comp.wire_bytes, lambda: self._client_reap(ev),
             serialize_overhead=COMPLETE_WRITE + comp.sender_cpu)
-        if self.scheduling == "decentralized":
-            for peer in self.servers.values():
-                if peer.name == srv.name:
-                    continue
-                link = self.peer_link(srv.name, peer.name)
-                link.send(comp.wire_bytes,
-                          lambda p=peer: p.notify_remote_complete(ev.id),
-                          serialize_overhead=comp.sender_cpu)
+        self.client_completion_msgs += 1
+        if self.scheduling != "decentralized":
+            return
+        if self.completion_routing == "subscription":
+            targets = sorted(self._subs.pop(ev.id, ()))
+        else:
+            targets = [p for p in self.servers if p != srv.name]
+        for name in targets:
+            if name == srv.name:
+                continue
+            link = self.peer_link(srv.name, name)
+            link.send(comp.wire_bytes,
+                      lambda p=self.servers[name]:
+                      p.notify_remote_complete(ev.id),
+                      serialize_overhead=comp.sender_cpu)
+            self.peer_completion_msgs += 1
+
+    def _route_completion_via_client(self, ev: Event):
+        """Events that complete on the client itself (reads, user/race
+        events, local fallback) have no server to signal from; notify any
+        subscribed servers over their client links."""
+        subs = self._subs.pop(ev.id, None)
+        if not subs:
+            return
+        comp = self.transport.completion_cost()
+        for name in sorted(subs):
+            self.c_links[name].send(
+                comp.wire_bytes,
+                lambda p=self.servers[name]: p.notify_remote_complete(ev.id),
+                serialize_overhead=comp.sender_cpu)
+            self.client_routed_completion_msgs += 1
 
     def _client_reap(self, ev: Event):
         self.clock.schedule(CLIENT_REAP, self._client_reap2, ev)
 
-    def _set_ack(self, ev: Event):
-        ev.t_client_ack = self.clock.now
-
     def _client_reap2(self, ev: Event):
         ev.t_client_ack = self.clock.now
         if self.scheduling == "client":
-            # SnuCL-like: client forwards resolution to every other server
-            for peer in self.servers.values():
-                if peer.name == ev.server:
+            # SnuCL-like: client forwards resolution to the other servers
+            if self.completion_routing == "subscription":
+                targets = sorted(self._subs.pop(ev.id, ()))
+            else:
+                targets = [p for p in self.servers if p != ev.server]
+            comp = self.transport.completion_cost()
+            for name in targets:
+                if name == ev.server:
                     continue
-                comp = self.transport.completion_cost()
-                self.c_links[peer.name].send(
+                self.c_links[name].send(
                     comp.wire_bytes,
-                    lambda p=peer: p.notify_remote_complete(ev.id),
+                    lambda p=self.servers[name]:
+                    p.notify_remote_complete(ev.id),
                     serialize_overhead=comp.sender_cpu)
+                self.client_routed_completion_msgs += 1
+        ev.release()                # client hold: completion observed
 
     # ---- fault injection / sessions (paper §4.3) ----
     def inject_disconnect(self, server: str, at: Optional[float] = None):
@@ -462,13 +602,13 @@ class ClientRuntime:
 
             def handshook():
                 self.sessions[server].available = True
-                for (ev, srv, device, dep_ids, payload) in \
+                for (ev, srv, device, deps, payload) in \
                         list(self.sessions[server].replay):
                     if ev.status in (COMPLETE, ERROR):
                         continue
                     cost = self.transport.command_cost(payload)
                     link.send(cost.wire_bytes,
-                              lambda e=ev, d=device, dd=dep_ids:
+                              lambda e=ev, d=device, dd=deps:
                               self.servers[server].receive_command(e, d, dd),
                               serialize_overhead=cost.sender_cpu)
 
@@ -485,9 +625,7 @@ class ClientRuntime:
         duplicate side-effect-free kernels safe to race).
 
         Returns a user event that completes with the winner."""
-        race = Event(user=True, server="client")
-        race.t_queued = self.clock.now
-        self.events[race.id] = race
+        race = self._register_event(Event(user=True, server="client"))
         outputs = kw.get("outputs", ())
         fn = kw.pop("fn", None)
 
@@ -503,6 +641,8 @@ class ClientRuntime:
                         b.set_data(np.asarray(arr), ev.server)
                 race.server = ev.server
                 race.complete(self.clock.now)
+                self._route_completion_via_client(race)
+                race.release()      # client observed completion directly
 
         for s in servers:
             if not self.sessions[s].available:
@@ -529,6 +669,8 @@ class ClientRuntime:
                 for b, arr in zip(cmd.outputs, outs):
                     b.set_data(np.asarray(arr), "client")
             ev.complete(self.clock.now)
+            self._route_completion_via_client(ev)
+            ev.release()            # client observed completion directly
 
         cost = self.local_device.kernel_cost(flops, 0.0, duration)
         ev.t_start, _ = self.local_device.execute(cost, done)
@@ -549,6 +691,13 @@ class ClientRuntime:
             "device_busy": {f"{s}/{d}": dev.busy_time
                             for s, srv in self.servers.items()
                             for d, dev in srv.devices.items()},
+            "client_completion_msgs": self.client_completion_msgs,
+            "peer_completion_msgs": self.peer_completion_msgs,
+            "client_routed_completion_msgs":
+                self.client_routed_completion_msgs,
+            "events_live": len(self.events),
+            "replay_overflows": {s: sess.lost_unacked
+                                 for s, sess in self.sessions.items()},
         }
 
 

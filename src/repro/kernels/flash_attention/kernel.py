@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.utils import pallas_tpu_compiler_params
+
 NEG_INF = -1e30
 LANES = 128
 
@@ -143,7 +145,7 @@ def flash_attention_fwd(
             pltpu.VMEM((q_chunk, LANES), jnp.float32),   # running denom
             pltpu.VMEM((q_chunk, hd), jnp.float32),      # output acc
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="flash_attention_fwd",

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.utils import pallas_tpu_compiler_params
+
 
 def _ssd_kernel(x_ref, dA_ref, b_ref, c_ref, y_ref, fin_ref, state_ref, *,
                 n_chunks: int):
@@ -97,7 +99,7 @@ def ssd_scan(x, dA, Bm, Cm, chunk: int = 128, interpret: bool = False):
             jax.ShapeDtypeStruct((BH, P, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
         name="ssd_scan",

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.utils import pallas_tpu_compiler_params
+
 
 def _topk_kernel(x_ref, vals_ref, idx_ref, resid_ref, *, k: int):
     x = x_ref[...]                                  # [1, block]
@@ -69,7 +71,7 @@ def topk_pack(x: jax.Array, k_per_block: int, block: int = 1024,
             jax.ShapeDtypeStruct((nb, k_per_block), jnp.int32),
             jax.ShapeDtypeStruct((nb, block), x.dtype),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
         name="topk_pack",

@@ -1,0 +1,79 @@
+"""Minimal deterministic stand-in for the slice of the hypothesis API
+this suite uses (``given``, ``settings``, ``strategies.integers/
+sampled_from/booleans/data``).
+
+Imported only when hypothesis is not installed: instead of skipping the
+property tests outright, each ``@given`` test runs over a fixed
+pseudo-random sample of the strategy space (seeded per example, so
+failures reproduce). No shrinking, no database — just coverage.
+"""
+from __future__ import annotations
+
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(options):
+    options = list(options)
+    return _Strategy(lambda rng: options[rng.randrange(len(options))])
+
+
+def booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+class _Data:
+    """Interactive draws (``st.data()``) share the example's rng."""
+
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        return strategy._draw(self._rng)
+
+
+def data():
+    return _Strategy(lambda rng: _Data(rng))
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        # NOTE: no functools.wraps — pytest must see a zero-arg signature,
+        # not the wrapped function's strategy parameters (it would try to
+        # resolve them as fixtures)
+        def wrapper():
+            for i in range(wrapper._max_examples):
+                rng = random.Random(0xC0FFEE + 7919 * i)
+                args = [s._draw(rng) for s in arg_strategies]
+                kwargs = {k: s._draw(rng) for k, s in kw_strategies.items()}
+                fn(*args, **kwargs)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._max_examples = 20
+        return wrapper
+    return deco
+
+
+def settings(max_examples=20, **_ignored):
+    def deco(fn):
+        if hasattr(fn, "_max_examples"):
+            fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+class st:
+    """Namespace mirror of ``hypothesis.strategies``."""
+    integers = staticmethod(integers)
+    sampled_from = staticmethod(sampled_from)
+    booleans = staticmethod(booleans)
+    data = staticmethod(data)

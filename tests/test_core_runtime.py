@@ -3,7 +3,11 @@ content-size migrations, sessions/reconnect, and a hypothesis property
 test executing random command DAGs."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # deterministic fallback, see _hypothesis_stub
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import (ClientRuntime, DeviceSpec, DeviceUnavailable,
                         LinkSpec, ServerSpec)

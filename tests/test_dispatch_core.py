@@ -1,0 +1,182 @@
+"""Dispatch-core invariants for the indexed waiter table, subscription
+completion routing, and event retirement (the O(1)-per-command path).
+
+No hypothesis needed: the DAGs are generated with a seeded
+``random.Random`` so every run draws the same graph.
+"""
+import logging
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import ClientRuntime, DeviceSpec, LinkSpec, ServerSpec
+
+
+def mk(n=3, routing="subscription", scheduling="decentralized"):
+    return ClientRuntime(
+        servers=[ServerSpec(f"s{i}", [DeviceSpec("gpu0")]) for i in range(n)],
+        client_link=LinkSpec(latency=61e-6, bandwidth=100e6 / 8),
+        peer_link=LinkSpec(latency=20e-6, bandwidth=40e9 / 8),
+        transport="tcp", scheduling=scheduling,
+        completion_routing=routing)
+
+
+def _run_dag(rt, n_cmds=60, n_srv=3, seed=7):
+    """Deterministic random DAG over one shared buffer. Every command
+    chains on its predecessor (total order → deterministic contents) and
+    adds 0-2 extra dependencies on random earlier events (multi-dep +
+    cross-server completion traffic)."""
+    rng = random.Random(seed)
+    buf = rt.create_buffer(64)
+    e0 = rt.enqueue_write("s0", buf, np.ones(16, np.float32))
+    events = [e0]
+    expected = np.ones(16, np.float32)
+    for _ in range(n_cmds):
+        srv = f"s{rng.randrange(n_srv)}"
+        mul = rng.choice([2.0, 0.5, 3.0])
+        add = rng.choice([0.0, 1.0])
+        deps = [events[-1]]
+        for _ in range(rng.randint(0, 2)):
+            deps.append(events[rng.randrange(len(events))])
+        ev = rt.enqueue_kernel(srv, fn=lambda x, m=mul, a=add: x * m + a,
+                               inputs=[buf], outputs=[buf], duration=1e-6,
+                               wait_for=deps)
+        events.append(ev)
+        expected = expected * mul + add
+    return buf, events, expected
+
+
+def test_chain_timestamps_identical_to_broadcast():
+    """Single-dependent chain alternating between two servers: the
+    subscription router sends exactly the notifications the broadcast
+    baseline sent, so every simulated timestamp must match bit-for-bit."""
+    stamps = {}
+    for routing in ("broadcast", "subscription"):
+        rt = mk(n=2, routing=routing)
+        events = []
+        prev = ()
+        for i in range(40):
+            ev = rt.enqueue_kernel(f"s{i % 2}", fn=None, duration=1e-6,
+                                   wait_for=prev)
+            events.append(ev)
+            prev = (ev,)
+        rt.finish()
+        stamps[routing] = [(e.t_submitted, e.t_start, e.t_end,
+                            e.t_client_ack) for e in events]
+    assert stamps["broadcast"] == stamps["subscription"]
+
+
+def test_random_dag_contents_match_and_never_slower():
+    """Multi-dependent random DAG: identical buffer contents, and per-event
+    completion under subscription routing is never later than under the
+    broadcast baseline (dropping unneeded messages can only relieve
+    link FIFOs)."""
+    results = {}
+    for routing in ("broadcast", "subscription"):
+        rt = mk(n=3, routing=routing)
+        buf, events, expected = _run_dag(rt)
+        rt.finish()
+        results[routing] = (np.asarray(buf.data).copy(),
+                            [e.t_end for e in events], expected)
+    b_data, b_end, expected = results["broadcast"]
+    s_data, s_end, _ = results["subscription"]
+    np.testing.assert_array_equal(b_data, s_data)
+    np.testing.assert_allclose(s_data, expected, rtol=1e-6)
+    for tb, ts in zip(b_end, s_end):
+        assert ts <= tb + 1e-12, (ts, tb)
+
+
+def test_subscription_sends_fewer_peer_messages():
+    """On a DAG where most events have dependents on at most one other
+    server, subscription routing must send strictly fewer peer completion
+    messages than all-peers broadcast — and never more."""
+    msgs = {}
+    for routing in ("broadcast", "subscription"):
+        rt = mk(n=3, routing=routing)
+        _run_dag(rt)
+        rt.finish()
+        msgs[routing] = rt.stats()["peer_completion_msgs"]
+    assert msgs["subscription"] < msgs["broadcast"], msgs
+
+
+def test_subscription_equals_broadcast_only_when_all_peers_depend():
+    """Alternating 2-server chain: every event except the sink has its
+    dependent on the one peer, so per-event message counts are equal and
+    the totals differ by exactly the sink's wasted broadcast."""
+    n = 30
+    msgs = {}
+    for routing in ("broadcast", "subscription"):
+        rt = mk(n=2, routing=routing)
+        prev = ()
+        for i in range(n):
+            prev = (rt.enqueue_kernel(f"s{i % 2}", fn=None, duration=1e-6,
+                                      wait_for=prev),)
+        rt.finish()
+        msgs[routing] = rt.stats()["peer_completion_msgs"]
+    # n-1 interior events: every peer (the other server) truly has a
+    # dependent → equal counts per event; the sink alone broadcasts for
+    # nothing, so the totals differ by exactly one message
+    assert msgs["broadcast"] == n
+    assert msgs["subscription"] == n - 1
+
+
+@pytest.mark.parametrize("routing", ["subscription", "broadcast"])
+def test_event_retirement_bounds_runtime_tables(routing):
+    """After a drained run, every finished event must have been retired
+    from the runtime tables (events dict, dedup/resolution sets), while
+    user-held Event handles stay readable. Broadcast mode is the sharp
+    case: late all-peers notifications must not repopulate
+    resolved_remote after retirement."""
+    rt = mk(n=3, routing=routing)
+    buf, events, expected = _run_dag(rt, n_cmds=100, n_srv=3)
+    rt.finish()
+    st = rt.stats()
+    assert st["events_live"] == 0, st["events_live"]
+    for srv in rt.servers.values():
+        assert not srv.processed
+        assert not srv.resolved_remote
+        assert not srv._waiters
+        assert not srv._ready
+    assert not rt._subs
+    # retirement removes table entries, not the handles themselves
+    assert all(e.status == "complete" for e in events)
+    np.testing.assert_allclose(np.asarray(buf.data), expected, rtol=1e-6)
+
+
+def test_naive_migration_path_drains_tables():
+    """p2p_migration=False routes migrations through the client; the
+    migrate event must still complete and retire (no abandoned handle
+    left in the events table)."""
+    rt = ClientRuntime(
+        servers=[ServerSpec(f"s{i}", [DeviceSpec("gpu0")])
+                 for i in range(2)],
+        client_link=LinkSpec(latency=61e-6, bandwidth=100e6 / 8),
+        peer_link=LinkSpec(latency=20e-6, bandwidth=40e9 / 8),
+        transport="tcp", p2p_migration=False)
+    buf = rt.create_buffer(4096)
+    rt.enqueue_write("s0", buf, np.arange(1024, dtype=np.float32))
+    rt.finish()
+    mig = rt.enqueue_migration(buf, "s1")
+    rt.finish()
+    assert mig.status == "complete"
+    assert rt.stats()["events_live"] == 0
+
+
+def test_replay_window_overflow_is_surfaced(caplog):
+    """Deep unacked backlogs used to silently drop replay entries; the
+    overflow is now counted per session and logged."""
+    rt = mk(n=1)
+    with caplog.at_level(logging.WARNING, logger="repro.core.runtime"):
+        prev = ()
+        for _ in range(200):    # far beyond the 64-entry replay window
+            prev = (rt.enqueue_kernel("s0", fn=None, duration=1e-6,
+                                      wait_for=prev),)
+    assert rt.sessions["s0"].lost_unacked > 0
+    assert rt.stats()["replay_overflows"]["s0"] > 0
+    assert any("replay window full" in r.message for r in caplog.records)
+    rt.finish()
+
+
+def test_dead_set_ack_removed():
+    assert not hasattr(ClientRuntime, "_set_ack")

@@ -72,7 +72,16 @@ def test_prefill_decode_matches_forward(arch):
         batch["enc_embeds"] = enc
     ref = lm.full_logits(params, cfg, batch)
 
-    cache = lm.init_cache(cfg, B, S + 4, enc_len=16 if cfg.is_encdec else 0)
+    # f32 cache for attention stacks: this test checks serving-path
+    # WIRING against teacher forcing; the default bf16 cache adds
+    # quantization noise that the reduced gemma3 config (hd=16, qk-norm,
+    # windowed layers) amplifies past any honest wiring tolerance. SSM
+    # blocks fold the cache dtype into the residual stream (scan carry
+    # would change type), so those keep the serving default.
+    attn_only = all(k.mixer == "attn" for k in cfg.layer_kinds())
+    cache = lm.init_cache(cfg, B, S + 4,
+                          dtype=jnp.float32 if attn_only else jnp.bfloat16,
+                          enc_len=16 if cfg.is_encdec else 0)
     logits, cache = lm.prefill(params, cfg, cache, tokens=tokens[:, :P],
                                enc_embeds=enc, chunk=8)
     errs = [float(jnp.max(jnp.abs(logits - ref[:, P - 1])))]
