@@ -1,0 +1,150 @@
+"""Migration data-plane throughput: multi-kernel DAG with shared large
+inputs over 4/8 servers, TCP and RDMA peer transports.
+
+The workload is migration-bound by construction: two large weight
+buffers are written to one server, then every other server runs
+back-to-back kernel pairs that consume them. Back-to-back kernels on the
+same destination exercise in-flight migration coalescing (one payload on
+the wire instead of one per kernel); a second wave of servers starts
+after the first drains, so replicas exist on several peers, and each
+wave-2 server enqueues its second buffer's kernels while the first
+buffer's push already occupies the s0 link — replica-aware source
+selection then pulls the second buffer from a wave-1 replica holder over
+an idle link; the payload sizes (several TCP send buffers) exercise the
+chunked cut-through pipeline.
+
+Reported per row: simulated drain time (``sim_ms`` — deterministic, so it
+gates tightly), effective migration throughput (useful replicated bytes /
+sim time), and the data-plane scoreboard counters
+(``bytes_on_wire``/``migrations_coalesced``/``peak_chunks_in_flight``
+when the runtime provides them).
+
+  PYTHONPATH=src python -m benchmarks.migration_pipeline \
+      [--baseline benchmarks/BENCH_migration.json] [--write-baseline P]
+
+With ``--baseline``, exits non-zero if any row's simulated time regresses
+more than 20% above the checked-in baseline (used by scripts/ci.sh).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from benchmarks.common import ETH_1G, ETH_40G, GPU_2080TI, MiB, Row, emit
+from repro.core import ClientRuntime, ServerSpec
+
+import numpy as np
+
+BIG = 32 * MiB            # shared weight buffer (≫ TCP_SNDBUF → chunked)
+KERNELS_PER_SERVER = 2    # back-to-back consumers → coalescing candidates
+REGRESSION_TOLERANCE = 0.20
+
+
+def _measure(n_srv: int, peer_transport: str) -> Row:
+    rt = ClientRuntime(
+        servers=[ServerSpec(f"s{i}", [GPU_2080TI]) for i in range(n_srv)],
+        client_link=ETH_1G, peer_link=ETH_40G,
+        transport="tcp", peer_transport=peer_transport)
+    weights = []
+    for k in range(2):
+        w = rt.create_buffer(BIG, name=f"weights{k}")
+        rt.enqueue_write("s0", w, np.zeros(BIG // 4, np.uint32))
+        weights.append(w)
+    rt.finish()
+    t0 = rt.clock.now
+    outs = []
+
+    def consume(server, w, tag):
+        # back-to-back kernel pair on one buffer: the second kernel's
+        # implicit migration coalesces onto the first's
+        for j in range(KERNELS_PER_SERVER):
+            out = rt.create_buffer(4096)
+            outs.append(out)
+            rt.enqueue_kernel(server, fn=None, inputs=[w], outputs=[out],
+                              duration=1e-5, name=f"{server}_{tag}{j}")
+
+    # wave 1: the first half of the peers pull both buffers from s0
+    wave1 = [f"s{i}" for i in range(1, 1 + max(1, (n_srv - 1) // 2))]
+    wave2 = [f"s{i}" for i in range(len(wave1) + 1, n_srv)]
+    for s in wave1:
+        for k, w in enumerate(weights):
+            consume(s, w, f"w{k}")
+    rt.finish()   # replicas of both buffers now exist on every wave-1 peer
+    # wave 2: per server, start the first buffer's pull, give the push
+    # time to occupy the s0 link, then enqueue the second buffer's
+    # kernels — replica-aware source selection pulls it from a wave-1
+    # holder over an idle link instead of queueing behind the first pull
+    for s in wave2:
+        consume(s, weights[0], "w0")
+        rt.clock.run(until=rt.clock.now + 3e-4)   # w0 push starts at s0
+        consume(s, weights[1], "w1")
+    rt.finish()
+    elapsed = rt.clock.now - t0
+    st = rt.stats()
+    useful = 2 * BIG * (n_srv - 1)        # each peer needs both buffers
+    mbps = useful / elapsed / 1e6
+    peer_bytes = sum(st["peer_link_bytes"].values())
+    return Row(
+        f"migpipe_{n_srv}srv_{peer_transport}", elapsed * 1e6,
+        f"sim_ms={elapsed * 1e3:.3f};mig_mbytes_per_sec={mbps:.1f};"
+        f"peer_link_bytes={peer_bytes:.0f};"
+        f"bytes_on_wire={st.get('bytes_on_wire', 0.0):.0f};"
+        f"migrations_coalesced={st.get('migrations_coalesced', 0)};"
+        f"peak_chunks_in_flight={st.get('peak_chunks_in_flight', 0)}")
+
+
+def run():
+    rows = []
+    for n_srv in (4, 8):
+        for peer_transport in ("tcp", "rdma"):
+            rows.append(_measure(n_srv, peer_transport))
+    return emit(rows)
+
+
+def _sim_ms(row: Row) -> float:
+    for part in row.derived.split(";"):
+        if part.startswith("sim_ms="):
+            return float(part.split("=")[1])
+    raise ValueError(f"no sim_ms in {row.derived!r}")
+
+
+def check_baseline(rows, baseline_path: str) -> bool:
+    """Simulated time is deterministic, so any slowdown is a real model
+    regression (lower is better — the inverse of the dispatch gate)."""
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    ok = True
+    for row in rows:
+        want = baseline.get(row.name)
+        if want is None:
+            continue
+        got = _sim_ms(row)
+        ceil = want * (1.0 + REGRESSION_TOLERANCE)
+        status = "ok" if got <= ceil else "REGRESSION"
+        print(f"# {row.name}: {got:.3f} sim_ms vs baseline {want:.3f} "
+              f"(ceiling {ceil:.3f}) {status}", file=sys.stderr)
+        if got > ceil:
+            ok = False
+    return ok
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=None,
+                    help="JSON {row_name: sim_ms}; fail on >20%% regression")
+    ap.add_argument("--write-baseline", default=None,
+                    help="write measured sim_ms to this JSON path")
+    args = ap.parse_args()
+    rows = run()
+    if args.write_baseline:
+        with open(args.write_baseline, "w") as f:
+            json.dump({r.name: _sim_ms(r) for r in rows}, f, indent=1)
+        print(f"# baseline written to {args.write_baseline}",
+              file=sys.stderr)
+    if args.baseline and not check_baseline(rows, args.baseline):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

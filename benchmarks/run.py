@@ -21,6 +21,7 @@ MODULES = [
     ("dispatch", "benchmarks.dispatch_throughput"),
     ("fig9", "benchmarks.passthrough"),
     ("fig10", "benchmarks.migration_latency"),
+    ("migpipe", "benchmarks.migration_pipeline"),
     ("fig11", "benchmarks.rdma_vs_tcp"),
     ("fig12", "benchmarks.matmul_scaling"),
     ("fig13", "benchmarks.rdma_matmul"),

@@ -1,13 +1,18 @@
 #!/usr/bin/env bash
-# Tier-1 tests + dispatch hot-path smoke with throughput regression gate.
+# Tier-1 tests + hot-path smokes with regression gates.
 #
 #   scripts/ci.sh
 #
-# Fails if any test fails, either benchmark errors, or dispatch
-# throughput regresses >20% below benchmarks/BENCH_dispatch.json
-# (regenerate the baseline on the CI host with:
+# Fails if any test fails, any benchmark errors, dispatch throughput
+# regresses >20% below benchmarks/BENCH_dispatch.json, or the migration
+# data-plane's simulated drain time regresses >20% above
+# benchmarks/BENCH_migration.json (regenerate baselines with:
 #   python -m benchmarks.dispatch_throughput --smoke \
-#       --write-baseline benchmarks/BENCH_dispatch.json).
+#       --write-baseline benchmarks/BENCH_dispatch.json
+#   python -m benchmarks.migration_pipeline \
+#       --write-baseline benchmarks/BENCH_migration.json
+# — the dispatch baseline is wall-clock and host-specific; the migration
+# baseline is simulated time and portable).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -21,5 +26,9 @@ python -m benchmarks.cmd_overhead
 echo "== dispatch throughput smoke (20% regression gate) =="
 python -m benchmarks.dispatch_throughput --smoke --trials 3 \
     --baseline benchmarks/BENCH_dispatch.json
+
+echo "== migration data-plane smoke (20% regression gate) =="
+python -m benchmarks.migration_pipeline \
+    --baseline benchmarks/BENCH_migration.json
 
 echo "ci.sh: all checks passed"

@@ -27,9 +27,17 @@ class Buffer:
     data: Optional[np.ndarray] = None           # canonical contents
     valid_on: set = dataclasses.field(default_factory=set)  # server names
     registered_mr: set = dataclasses.field(default_factory=set)
+    # content generation: bumped on every write/clobber. The runtime's
+    # in-flight migration table snapshots it to detect transfers whose
+    # payload went stale mid-flight (DESIGN.md §3): a coalesce hit or an
+    # arrival-side validity update is only honored when the version still
+    # matches the snapshot.
+    version: int = 0
 
     def transfer_bytes(self) -> float:
-        """Bytes a migration must move (content-size aware)."""
+        """Bytes a migration must move (content-size aware). Clamped to
+        ``[0, nbytes]``: a corrupt or stale ``cl_pocl_content_size``
+        value must never produce a negative or over-long transfer."""
         if self.content_size_buffer is not None \
                 and self.content_size_buffer.data is not None:
             used = int(np.asarray(
@@ -40,6 +48,8 @@ class Buffer:
     def set_data(self, arr, on: str):
         self.data = arr
         self.valid_on = {on}
+        self.version += 1
 
     def invalidate_except(self, server: str):
         self.valid_on = {server}
+        self.version += 1

@@ -25,6 +25,11 @@ class Event:
     t_end: float = 0.0
     t_client_ack: float = 0.0   # when the client observed completion
     error: Optional[str] = None
+    # for ReadBuffer events: the buffer's content generation at the
+    # moment the bytes left the server (consumers of the read — e.g. the
+    # staged naive-migration write — must judge staleness against this,
+    # not against the version at delivery time)
+    data_version: Optional[int] = None
     _callbacks: list = dataclasses.field(default_factory=list)
     # ---- lifecycle refcounting (runtime table retirement) ----
     # Holders: the client (until it observes completion) and every

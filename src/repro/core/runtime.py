@@ -31,6 +31,16 @@ dependent on the event (``completion_routing='subscription'``, matching
 the paper's direct P2P signaling) instead of broadcast to every peer; and
 finished events are retired from all runtime tables once nobody holds a
 reference, so long runs stay memory-bounded.
+
+The migration data plane is pipelined (DESIGN.md §3): bulk payloads move
+as chunked cut-through transfers (sender copy / wire / receiver copy
+overlap per chunk, ``Link.send_chunked``); duplicate in-flight requests
+for the same ``(buffer, destination)`` coalesce onto the pending
+transfer instead of re-sending the payload; and the migration source is
+chosen per-replica by estimated delivery time (link queue + bandwidth +
+RDMA registration amortization) instead of set order. ``stats()``
+exposes the data-plane scoreboard: ``bytes_on_wire``,
+``migrations_coalesced``, ``chunks_in_flight``/``peak_chunks_in_flight``.
 """
 from __future__ import annotations
 
@@ -48,7 +58,7 @@ from repro.core.events import (COMPLETE, ERROR, QUEUED, RUNNING, SUBMITTED,
                                Event)
 from repro.core.netsim import DeviceSim, Link, SimClock
 from repro.core.transport import (make_transport, wire_scale,
-    CLIENT_SUBMIT, CLIENT_REAP, DISPATCH, COMPLETE_WRITE)
+    CLIENT_SUBMIT, CLIENT_REAP, CMD_BYTES, DISPATCH, COMPLETE_WRITE)
 
 log = logging.getLogger(__name__)
 
@@ -291,6 +301,17 @@ class ClientRuntime:
                                             peer_link.bandwidth, f"{a}<->{b}")
         self._buffers: list[Buffer] = []
         self._mr_registered: set = set()
+        # (buf.id, dst server) -> (migration Event, buf.version snapshot);
+        # lets back-to-back requests for the same payload coalesce onto
+        # the transfer already in flight (entries drop on completion, and
+        # a version mismatch — the buffer was written since — makes the
+        # entry stale so a fresh transfer is started instead)
+        self._inflight_migrations: dict = {}
+        # data-plane scoreboard (stats())
+        self.bytes_on_wire = 0.0              # migration payload wire bytes
+        self.migrations_coalesced = 0         # requests served by in-flight
+        self.chunks_in_flight = 0             # gauge: chunks on any link
+        self.peak_chunks_in_flight = 0
         # connect (handshake: rtt + session id assignment) — run the
         # clock until all sessions are established, as clCreateContext
         # would block
@@ -369,7 +390,10 @@ class ClientRuntime:
         ev = self._new_event(cmd, server)
         self._send_command(ev, server, device, [d.id for d in deps])
         for b in outputs:
-            b.valid_on = {server}
+            # eager client-side clobber: later enqueues must neither read
+            # stale replicas nor coalesce onto migrations of the old
+            # contents, so the version bumps at enqueue time too
+            b.invalidate_except(server)
         return ev
 
     def enqueue_write(self, server: str, buf: Buffer, data,
@@ -380,6 +404,7 @@ class ClientRuntime:
         self._send_command(ev, server, "", [d.id for d in wait_for],
                            payload=cmd.nbytes)
         buf.valid_on = {server, "client"}
+        buf.version += 1        # eager: new contents are on their way
         return ev
 
     def enqueue_read(self, server: str, buf: Buffer,
@@ -392,45 +417,212 @@ class ClientRuntime:
     def enqueue_migration(self, buf: Buffer, dst: str,
                           wait_for: Sequence[Event] = ()) -> Event:
         """Migrate to ``dst``. P2P: command goes to the SOURCE server,
-        which pushes directly to the destination (paper §5.1)."""
+        which pushes directly to the destination (paper §5.1).
+
+        Duplicate requests coalesce: if a migration of the same buffer
+        contents to the same destination is already in flight, its event
+        is returned instead of pushing the payload a second time. The
+        coalesced transfer's contents are identical by construction (a
+        write or output clobber bumps ``buf.version``, which makes the
+        in-flight entry stale), so a dependent waiting on the returned
+        event sees exactly the bytes it asked for. When several replicas
+        exist, the source is the server with the cheapest estimated
+        delivery (``_pick_migration_source``), not set order."""
         if dst in buf.valid_on:
             ev = self._new_event(C.Marker(), dst)
             ev.complete(self.clock.now)
             ev.release()            # completed on the client: no ack cycle
             return ev
+        key = (buf.id, dst)
+        entry = self._inflight_migrations.get(key)
+        if entry is not None:
+            pending, version = entry
+            if version == buf.version and \
+                    pending.status not in (COMPLETE, ERROR):
+                self.migrations_coalesced += 1
+                live = [d for d in wait_for
+                        if d.status not in (COMPLETE, ERROR)]
+                if not live:
+                    return pending
+                # the payload still crosses the wire once, but the
+                # returned handle must honor the caller's wait list like
+                # a non-coalesced migration would
+                return self._join_events([pending, *live])
         srcs = [s for s in buf.valid_on if s != "client"]
         if not srcs:  # client-held data: plain upload
             return self.enqueue_write(dst, buf, buf.data
                                       if buf.data is not None
                                       else np.zeros(buf.nbytes, np.uint8))
-        src = srcs[0]
+        src = self._pick_migration_source(buf, srcs, dst)
         cmd = C.MigrateBuffer(buffer=buf, dst_server=dst)
         if self.p2p_migration:
             ev = self._new_event(cmd, src)
+            self._track_inflight(key, ev, buf.version)
             self._send_command(ev, src, "", [d.id for d in wait_for])
             return ev
         # naive: read back to client, then write to dst
         rd = self.enqueue_read(src, buf, wait_for=wait_for)
         wr_ev = self._new_event(cmd, dst)
+        self._track_inflight(key, wr_ev, buf.version)
 
-        def after_read(_):
-            nb = buf.transfer_bytes()
-            cost = self.transport.command_cost(nb)
-            self.clock.schedule(CLIENT_SUBMIT + cost.sender_cpu,
-                                self._deliver_naive_write, wr_ev, dst,
-                                nb, cost)
+        def after_read(rd_ev):
+            if rd_ev.status == ERROR:
+                # the read leg was lost on a dead link: release the
+                # in-flight entry so a retry starts a fresh transfer,
+                # and propagate the failure to the migration handle
+                self._drop_inflight(key, wr_ev)
+                wr_ev.fail(self.clock.now, rd_ev.error)
+                self._route_completion_via_client(wr_ev)
+                wr_ev.release()     # no completion ack will ever come
+                return
+            cur = self._inflight_migrations.get(key)
+            if cur is not None and cur[0] is wr_ev:
+                # refresh the coalescing snapshot to the generation the
+                # read actually captured: a producer that executed after
+                # enqueue (bumping the version) no longer blocks requests
+                # from riding the long client→dst upload leg (mirrors the
+                # push-time refresh on the P2P path; requests arriving
+                # during the read leg itself still conservatively miss)
+                self._inflight_migrations[key] = (wr_ev, rd_ev.data_version)
+            self.clock.schedule(CLIENT_SUBMIT, self._deliver_naive_write,
+                                wr_ev, dst, buf.transfer_bytes(),
+                                rd_ev.data_version)
 
         rd.on_complete(after_read)
         return wr_ev
 
-    def _deliver_naive_write(self, ev, dst, nbytes, cost):
+    def _pick_migration_source(self, buf: Buffer, srcs: Sequence[str],
+                               dst: str) -> str:
+        """Cheapest replica by estimated delivery time at enqueue: data
+        link queue (``_busy_until``) + serialization at the link's
+        effective bandwidth + propagation, plus — on the P2P path — the
+        one-time MR registration/rkey-exchange cost when the RDMA
+        transport has not yet registered this (buffer, src, dst), so an
+        already-registered replica is preferred even over a slightly
+        busier link. P2P scores the src↔dst peer link; naive mode scores
+        the read leg over the source's client link (the client→dst leg
+        is common to every candidate). The payload-free client→source
+        command leg is deliberately ignored: it is near-uniform across
+        sources. Sorted iteration makes the choice deterministic (set
+        order is not)."""
+        if len(srcs) == 1:
+            return srcs[0]
+        nbytes = buf.transfer_bytes()
+        p2p = self.p2p_migration
+        tr = self.peer_transport if p2p else self.transport
+        now = self.clock.now
+        best = None
+        best_t = None
+        for s in sorted(srcs):
+            if p2p:
+                link = self.p_links.get((s, dst)) \
+                    or self.p_links.get((dst, s))
+            else:
+                link = self.c_links.get(s)
+            if link is None or not link.up:
+                continue
+            queue = link._busy_until - now
+            if queue < 0.0:
+                queue = 0.0
+            bw = link.bandwidth
+            t = queue + link.latency + (
+                (CMD_BYTES + nbytes) * wire_scale(tr, bw) / bw if bw else 0.0)
+            if p2p and (buf.id, s, dst) not in self._mr_registered:
+                t += tr.register_buffer(nbytes, peers=len(self.servers) - 1)
+            if best_t is None or t < best_t:
+                best, best_t = s, t
+        return best if best is not None else sorted(srcs)[0]
+
+    def _join_events(self, events: Sequence[Event]) -> Event:
+        """Client-side user event completing once every input has
+        finished (error counts as finished, matching the runtime's loose
+        error-dependency semantics); subscribers are notified over the
+        client links like any other client-completing event."""
+        join = self._register_event(Event(user=True, server="client"))
+        state = {"remaining": len(events)}
+
+        def one_done(_e):
+            state["remaining"] -= 1
+            if not state["remaining"]:
+                join.complete(self.clock.now)
+                self._route_completion_via_client(join)
+                join.release()  # client observed completion directly
+
+        for e in events:
+            e.on_complete(one_done)     # fires now if already finished
+        return join
+
+    def _fail_dropped_migration(self, ev: Event, dst: str):
+        """A migration payload dropped on a dead link can never be
+        re-sent (the daemon already marked the command processed, so a
+        replay is deduped): fail fast like the read-return leg does —
+        the in-flight entry releases via the failure callbacks, so a
+        retry after reconnect starts a fresh transfer."""
+        ev.fail(self.clock.now, f"link to {dst} down during migration")
+        self._route_completion_via_client(ev)
+        ev.release()                # no completion ack will ever come
+
+    def _track_inflight(self, key, ev: Event, version: int):
+        self._inflight_migrations[key] = (ev, version)
+        ev.on_complete(lambda _e: self._drop_inflight(key, ev))
+
+    def _drop_inflight(self, key, ev: Event):
+        cur = self._inflight_migrations.get(key)
+        if cur is not None and cur[0] is ev:
+            del self._inflight_migrations[key]
+
+    def _send_migration_chunks(self, link: Link, tr, nbytes: float,
+                               extra_overhead: float,
+                               arrived: Callable) -> bool:
+        """Shared bulk-payload leg for both migration paths: build the
+        transport's cut-through plan, apply wire inflation, keep the
+        scoreboard, and send. ``arrived`` fires after the last chunk's
+        receiver-side work. Returns False if the link is down (the
+        transfer was dropped)."""
+        if nbytes > 0:
+            fixed, chunks = tr.chunk_plan(nbytes)
+        else:   # content-size says empty: command struct only
+            cost = tr.command_cost(0.0)
+            fixed, chunks = cost.sender_cpu, [(0.0, cost.wire_bytes,
+                                               cost.receiver_cpu)]
+        scale = wire_scale(tr, link.bandwidth)
+        if scale != 1.0:
+            chunks = [(s, wb * scale, r) for s, wb, r in chunks]
+        n_chunks = len(chunks)
+
+        def delivered():
+            self.chunks_in_flight -= n_chunks
+            arrived()
+
+        if link.send_chunked(chunks, delivered,
+                             serialize_overhead=extra_overhead + fixed) \
+                is None:
+            return False
+        self.chunks_in_flight += n_chunks
+        if self.chunks_in_flight > self.peak_chunks_in_flight:
+            self.peak_chunks_in_flight = self.chunks_in_flight
+        self.bytes_on_wire += sum(c[1] for c in chunks)
+        return True
+
+    def _deliver_naive_write(self, ev, dst, nbytes, version):
+        """``version`` is the buffer's content generation when the bytes
+        left the source (captured by the read leg), NOT now: a write
+        landing during the read makes the payload stale even though it
+        has not crossed the client→dst link yet."""
+        buf = ev.command.buffer
+
         def arrived():
-            ev.command.buffer.valid_on.add(dst)
-            ev.complete(self.clock.now)
-            self._broadcast_completion(self.servers[dst], ev)
-        link = self.c_links[dst]
-        link.send(nbytes * wire_scale(self.transport, link.bandwidth),
-                  arrived, serialize_overhead=cost.sender_cpu)
+            if buf.version == version:   # not clobbered while in flight
+                buf.valid_on.add(dst)
+            # completes on the destination daemon like any other server-
+            # side command, sharing the completion-routing logic
+            # (subscription vs broadcast) with every other path
+            self.servers[dst]._complete(ev)
+
+        if not self._send_migration_chunks(self.c_links[dst],
+                                           self.transport, nbytes, 0.0,
+                                           arrived):
+            self._fail_dropped_migration(ev, dst)
 
     def marker(self) -> Event:
         ev = self._new_event(C.Marker(), "client")
@@ -462,8 +654,25 @@ class ClientRuntime:
                 deps.append((dep_id, local))
         sess = self.sessions[server]
         sess.record((ev, server, device, deps, payload))
-        cost = self.transport.command_cost(payload)
         link = self.c_links[server]
+        if payload > 0:
+            # bulk upload: cut-through chunks (per-chunk copy totals
+            # equal cost.sender_cpu/receiver_cpu, so single-chunk timing
+            # on an idle link is unchanged)
+            fixed, chunks = self.transport.chunk_plan(payload)
+            scale = wire_scale(self.transport, link.bandwidth)
+            if scale != 1.0:
+                chunks = [(s, wb * scale, r) for s, wb, r in chunks]
+
+            def deliver_chunked():
+                self.clock.schedule(
+                    DISPATCH,
+                    self.servers[server].receive_command, ev, device, deps)
+
+            link.send_chunked(chunks, deliver_chunked,
+                              serialize_overhead=CLIENT_SUBMIT + fixed)
+            return
+        cost = self.transport.command_cost(payload)
 
         def deliver():
             self.clock.schedule(
@@ -486,38 +695,61 @@ class ClientRuntime:
         if key not in self._mr_registered:
             reg = tr.register_buffer(nbytes, peers=len(self.servers) - 1)
             self._mr_registered.add(key)
-        cost = tr.command_cost(nbytes)
         link = self.peer_link(src_srv.name, dst)
         ev.status = RUNNING
         ev.t_start = self.clock.now
+        # contents being pushed are the canonical bytes as of now; a
+        # write landing while the transfer is in flight makes the copy
+        # at dst stale, so validity is only granted on version match
+        version = buf.version
+        inflight_key = (buf.id, dst)
+        entry = self._inflight_migrations.get(inflight_key)
+        if entry is not None and entry[0] is ev:
+            # refresh the coalescing snapshot: the producer this
+            # migration waited on has executed by now, so requests
+            # enqueued mid-flight still coalesce
+            self._inflight_migrations[inflight_key] = (ev, version)
 
         def arrived():
-            def after_cpu():
+            if buf.version == version:   # not clobbered while in flight
                 buf.valid_on.add(dst)
-                ev.server = dst
-                self.servers[dst]._complete(ev)
-            self.clock.schedule(cost.receiver_cpu, after_cpu)
+            ev.server = dst
+            self.servers[dst]._complete(ev)
 
-        link.send(cost.wire_bytes * wire_scale(tr, link.bandwidth),
-                  arrived, serialize_overhead=reg + cost.sender_cpu)
+        if not self._send_migration_chunks(link, tr, nbytes, reg, arrived):
+            self._fail_dropped_migration(ev, dst)
 
     def _start_read_return(self, srv: ServerSim, ev: Event):
         buf = ev.command.buffer
         nbytes = buf.transfer_bytes()
+        ev.data_version = buf.version   # generation of the returned bytes
         cost = self.transport.command_cost(nbytes)
         link = self.c_links[srv.name]
         ev.status = RUNNING
         ev.t_start = self.clock.now
 
         def arrived():
-            buf.valid_on.add("client")
+            if buf.version == ev.data_version:
+                # downloaded bytes still match the canonical contents;
+                # a write that landed mid-read makes this copy stale
+                buf.valid_on.add("client")
             ev.complete(self.clock.now)
             self._route_completion_via_client(ev)
             ev.release()            # client observed completion directly
 
-        link.send(cost.wire_bytes * wire_scale(self.transport,
-                                               link.bandwidth),
-                  arrived, serialize_overhead=COMPLETE_WRITE + cost.sender_cpu)
+        if link.send(cost.wire_bytes * wire_scale(self.transport,
+                                                  link.bandwidth),
+                     arrived,
+                     serialize_overhead=COMPLETE_WRITE + cost.sender_cpu) \
+                is None:
+            # link died after the command was delivered: the daemon has
+            # already marked it processed, so a replay will be deduped
+            # and the data can never be re-sent — surface the error
+            # instead of hanging the handle (and its consumers) forever
+            ev.fail(self.clock.now,
+                    f"link to {srv.name} down during read return")
+            self._route_completion_via_client(ev)
+            ev.release()            # nothing further will arrive
 
     # ---- completion propagation ----
     def _broadcast_completion(self, srv: ServerSim, ev: Event):
@@ -698,6 +930,12 @@ class ClientRuntime:
             "events_live": len(self.events),
             "replay_overflows": {s: sess.lost_unacked
                                  for s, sess in self.sessions.items()},
+            # data-plane scoreboard (DESIGN.md §3)
+            "bytes_on_wire": self.bytes_on_wire,
+            "migrations_coalesced": self.migrations_coalesced,
+            "chunks_in_flight": self.chunks_in_flight,
+            "peak_chunks_in_flight": self.peak_chunks_in_flight,
+            "migrations_inflight": len(self._inflight_migrations),
         }
 
 

@@ -38,13 +38,21 @@ MR_REGISTER = 45e-6       # per-buffer one-time memory-region registration
 MR_KEY_EXCHANGE = 20e-6   # per-buffer per-peer rkey exchange
 COPY_BW = 11e9            # host memcpy bandwidth (shadow buffers, TCP copies)
 TCP_SNDBUF = 9 * MiB      # paper: 9 MiB kernel send/receive buffers
+HCA_FRAG = 4 * MiB        # RDMA staging-pipeline granularity: the HCA
+                          # fragments at MTU on the wire, but the shadow-
+                          # buffer copy overlaps the wire at this coarser
+                          # doorbell/fragment granularity
 CMD_BYTES = 96            # wire size of a command struct (size-prefixed)
 COMPLETION_BYTES = 48
 # single-stream TCP on ≥40 Gb links achieves well under line rate
 # (segmentation, ACK clocking, window limits); RDMA reaches ~wire speed.
-# 0.45 calibrates the Fig. 11 plateau (~65 % RDMA speedup ≥134 MiB).
+# 0.60 calibrates the Fig. 11 plateau (~65 % RDMA speedup ≥134 MiB) now
+# that the chunked cut-through path overlaps both transports' host
+# copies with the wire (pre-pipeline the constant was 0.45: TCP paid its
+# two extra copies serially, so less wire-level inflation was needed to
+# land the same measured plateau).
 # Slow links (≤10 Gb) are easily saturated → efficiency 1.
-TCP_WIRE_EFFICIENCY = 0.45
+TCP_WIRE_EFFICIENCY = 0.60
 TCP_EFFICIENCY_BW_THRESHOLD = 1.5e9   # B/s (~12 Gb/s)
 
 
@@ -63,6 +71,16 @@ class TransferCost:
     sender_cpu: float      # time on the sending side before the wire
     wire_bytes: float      # bytes that cross the link
     receiver_cpu: float    # time on the receiving side after delivery
+
+
+def _chunk_sizes(payload: float, chunk_bytes: float) -> list:
+    sizes = []
+    remaining = payload
+    while remaining > chunk_bytes:
+        sizes.append(float(chunk_bytes))
+        remaining -= chunk_bytes
+    sizes.append(float(remaining))
+    return sizes
 
 
 class TCPTransport:
@@ -87,6 +105,32 @@ class TCPTransport:
         return TransferCost(THREAD_WAKE + SYSCALL, COMPLETION_BYTES,
                             THREAD_WAKE + SYSCALL)
 
+    def chunk_plan(self, payload: float):
+        """Split a bulk payload at the kernel send-buffer granularity for
+        the cut-through pipeline (``Link.send_chunked``). Returns
+        ``(fixed_sender_cpu, [(sender_cpu, wire_bytes, receiver_cpu)])``
+        whose totals equal ``command_cost(payload)`` exactly, so a
+        single-chunk transfer on an idle link is time-identical to the
+        store-and-forward path (Fig. 8/Fig. 11 small-size calibration).
+        Requires ``payload > 0``."""
+        sizes = _chunk_sizes(payload, TCP_SNDBUF)
+        # writes: size prefix + command struct up front, then one
+        # write() per send-buffer worth of payload (mirroring
+        # command_cost, which adds split writes only when the payload
+        # strictly exceeds the send buffer)
+        chunk_writes = 1 + (int(payload // TCP_SNDBUF)
+                            if payload > TCP_SNDBUF else 0)
+        chunks = []
+        last = len(sizes) - 1
+        for i, c in enumerate(sizes):
+            writes = 1 + (chunk_writes - len(sizes) if i == last else 0)
+            chunks.append((
+                writes * SYSCALL + c / COPY_BW,
+                (CMD_BYTES if i == 0 else 0.0) + c,
+                c / COPY_BW + (THREAD_WAKE + SYSCALL if i == last else 0.0),
+            ))
+        return THREAD_WAKE + 2 * SYSCALL, chunks
+
     def register_buffer(self, nbytes: float, peers: int) -> float:
         return 0.0
 
@@ -108,6 +152,22 @@ class RDMATransport:
 
     def completion_cost(self) -> TransferCost:
         return TransferCost(RDMA_POST, COMPLETION_BYTES, RDMA_COMPLETE)
+
+    def chunk_plan(self, payload: float):
+        """Split at the HCA staging-fragment granularity; the shadow-
+        buffer copies (absent with SVM) pipeline against the wire.
+        Totals equal ``command_cost(payload)``. Requires ``payload >
+        0``."""
+        if self.svm:
+            # zero-copy: nothing to overlap, one fragment is exact
+            return RDMA_POST, [(0.0, CMD_BYTES + payload, RDMA_COMPLETE)]
+        sizes = _chunk_sizes(payload, HCA_FRAG)
+        last = len(sizes) - 1
+        chunks = [(c / COPY_BW,
+                   (CMD_BYTES if i == 0 else 0.0) + c,
+                   c / COPY_BW + (RDMA_COMPLETE if i == last else 0.0))
+                  for i, c in enumerate(sizes)]
+        return RDMA_POST, chunks
 
     def register_buffer(self, nbytes: float, peers: int) -> float:
         # registration + rkey exchange with every peer (paper Fig. 13:

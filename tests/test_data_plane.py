@@ -1,0 +1,393 @@
+"""Migration data-plane invariants (DESIGN.md §3): chunked cut-through
+pipelining, in-flight coalescing + version invalidation, replica-aware
+source selection, content-size clamping, and the naive-path completion
+routing regression."""
+import numpy as np
+import pytest
+
+from repro.core import (Buffer, ClientRuntime, DeviceSpec, LinkSpec,
+                        ServerSpec)
+from repro.core.transport import CMD_BYTES, COPY_BW, MiB, wire_scale
+
+
+def mk(n=2, peer_transport=None, p2p=True, routing="subscription",
+       peer_bw=40e9 / 8):
+    return ClientRuntime(
+        servers=[ServerSpec(f"s{i}", [DeviceSpec("gpu0")]) for i in range(n)],
+        client_link=LinkSpec(latency=61e-6, bandwidth=1e9 / 8),
+        peer_link=LinkSpec(latency=15e-6, bandwidth=peer_bw),
+        transport="tcp", peer_transport=peer_transport,
+        p2p_migration=p2p, completion_routing=routing)
+
+
+def _seed_buffer(rt, nbytes, server="s0"):
+    buf = rt.create_buffer(nbytes)
+    rt.enqueue_write(server, buf, np.zeros(nbytes // 4 or 1, np.uint32))
+    rt.finish()
+    return buf
+
+
+# ---- chunked cut-through pipeline ----
+
+def test_chunked_migration_approaches_max_of_copy_and_wire():
+    """A multi-chunk TCP migration must cost ~max(copy, wire), not their
+    sum: the measured latency stays below the store-and-forward total by
+    at least one full payload memcpy."""
+    nbytes = 64 * MiB
+    rt = mk()
+    buf = _seed_buffer(rt, nbytes)
+    t0 = rt.clock.now
+    rt.enqueue_migration(buf, "s1")
+    rt.finish()
+    elapsed = rt.clock.now - t0
+    link = rt.peer_link("s0", "s1")
+    wire = nbytes * wire_scale(rt.peer_transport, link.bandwidth) \
+        / link.bandwidth
+    copy = nbytes / COPY_BW
+    store_forward = copy + wire + copy          # sender + wire + receiver
+    assert elapsed < store_forward - copy, (elapsed, store_forward)
+    # ...but it can never beat the wire itself
+    assert elapsed > wire, (elapsed, wire)
+
+
+def test_single_chunk_migration_timing_matches_transport_model():
+    """Sub-send-buffer transfers take exactly the store-and-forward cost
+    on an idle link (Fig. 8/Fig. 11 small-transfer calibration)."""
+    nbytes = 256 * 1024
+    rt = mk()
+    buf = _seed_buffer(rt, nbytes)
+    ev = rt.enqueue_migration(buf, "s1")
+    rt.finish()
+    link = rt.peer_link("s0", "s1")
+    cost = rt.peer_transport.command_cost(float(nbytes))
+    expect = cost.sender_cpu \
+        + cost.wire_bytes * wire_scale(rt.peer_transport, link.bandwidth) \
+        / link.bandwidth + link.latency + cost.receiver_cpu
+    assert ev.t_end - ev.t_start == pytest.approx(expect, rel=1e-9)
+
+
+def test_chunk_plan_totals_equal_command_cost():
+    """The chunked pipeline redistributes, never adds, protocol cost."""
+    from repro.core.transport import RDMATransport, TCPTransport
+    for tr in (TCPTransport(), RDMATransport(), RDMATransport(svm=True)):
+        for payload in (1.0, 4096.0, float(9 * MiB), float(9 * MiB + 1),
+                        float(100 * MiB)):
+            cost = tr.command_cost(payload)
+            fixed, chunks = tr.chunk_plan(payload)
+            assert fixed + sum(c[0] for c in chunks) == \
+                pytest.approx(cost.sender_cpu, abs=1e-15)
+            assert sum(c[1] for c in chunks) == \
+                pytest.approx(cost.wire_bytes)
+            assert sum(c[2] for c in chunks) == \
+                pytest.approx(cost.receiver_cpu, abs=1e-15)
+
+
+def test_chunked_transfers_keep_link_fifo():
+    """Two back-to-back migrations over the same link may not overtake
+    each other, and the second queues behind the first's last chunk."""
+    rt = mk()
+    a = _seed_buffer(rt, 32 * MiB)
+    b = _seed_buffer(rt, 32 * MiB)
+    e1 = rt.enqueue_migration(a, "s1")
+    e2 = rt.enqueue_migration(b, "s1")
+    rt.finish()
+    assert e1.t_end < e2.t_end
+    # the second transfer could not use the wire while the first held it:
+    # both payloads serialized through the FIFO
+    link = rt.peer_link("s0", "s1")
+    wire_each = 32 * MiB * wire_scale(rt.peer_transport, link.bandwidth) \
+        / link.bandwidth
+    assert e2.t_end - e1.t_start > 2 * wire_each
+
+
+def test_chunks_in_flight_scoreboard_drains():
+    rt = mk()
+    buf = _seed_buffer(rt, 32 * MiB)
+    rt.enqueue_migration(buf, "s1")
+    rt.finish()
+    st = rt.stats()
+    assert st["chunks_in_flight"] == 0
+    assert st["peak_chunks_in_flight"] >= 4        # 32 MiB / 9 MiB chunks
+    assert st["bytes_on_wire"] > 32 * MiB
+    assert st["migrations_inflight"] == 0
+
+
+# ---- in-flight coalescing ----
+
+def test_back_to_back_kernels_coalesce_migration():
+    """Two kernels needing the same buffer on the same server push the
+    payload once (the second rides the in-flight transfer)."""
+    nbytes = 8 * MiB
+    times = {}
+    for second_kernel in (False, True):
+        rt = mk()
+        buf = _seed_buffer(rt, nbytes)
+        out1, out2 = rt.create_buffer(64), rt.create_buffer(64)
+        rt.enqueue_kernel("s1", fn=lambda x: x[:16] * 2.0, inputs=[buf],
+                          outputs=[out1], duration=1e-6)
+        if second_kernel:
+            rt.enqueue_kernel("s1", fn=lambda x: x[:16] + 1.0, inputs=[buf],
+                              outputs=[out2], duration=1e-6)
+        rt.finish()
+        times[second_kernel] = rt.stats()
+        if second_kernel:
+            np.testing.assert_array_equal(out2.data, np.ones(16))
+    with_two, with_one = times[True], times[False]
+    assert with_two["migrations_coalesced"] == 1
+    # one payload on the wire, not two
+    assert with_two["bytes_on_wire"] == with_one["bytes_on_wire"]
+    assert with_two["bytes_on_wire"] < 2 * nbytes
+
+
+def test_coalesced_event_is_shared_dependency():
+    rt = mk()
+    buf = _seed_buffer(rt, 4 * MiB)
+    m1 = rt.enqueue_migration(buf, "s1")
+    m2 = rt.enqueue_migration(buf, "s1")
+    assert m2 is m1
+    assert rt.stats()["migrations_coalesced"] == 1
+    rt.finish()
+    assert m1.status == "complete"
+    assert "s1" in buf.valid_on
+    assert rt.stats()["events_live"] == 0          # retirement survives
+
+
+def test_write_invalidates_inflight_coalescing():
+    """A WriteBuffer between two migration requests bumps the content
+    version: the second request must start a fresh transfer, not ride
+    the now-stale one."""
+    rt = mk()
+    buf = _seed_buffer(rt, 4 * MiB)
+    m1 = rt.enqueue_migration(buf, "s1")
+    rt.enqueue_write("s0", buf, np.ones(MiB, np.uint32))
+    # the write clears dst validity, so a new migration is required and
+    # must not coalesce onto m1's stale payload
+    m2 = rt.enqueue_migration(buf, "s1")
+    assert m2 is not m1
+    assert rt.stats()["migrations_coalesced"] == 0
+    rt.finish()
+    assert rt.stats()["bytes_on_wire"] > 2 * 4 * MiB
+
+
+def test_output_clobber_invalidates_inflight_and_arrival_validity():
+    """An output clobber (kernel writing the buffer) while a migration is
+    in flight: the landed copy must not count as a valid replica, and a
+    later consumer re-migrates the fresh contents."""
+    rt = mk(n=2)
+    buf = _seed_buffer(rt, 4 * MiB)
+    rt.enqueue_migration(buf, "s1")
+    # clobber on the source while the payload is (or will be) in flight
+    rt.enqueue_kernel("s0", fn=None, inputs=[], outputs=[buf],
+                      duration=1e-6)
+    rt.finish()
+    assert buf.valid_on == {"s0"}          # stale copy at s1 not validated
+    before = rt.stats()["bytes_on_wire"]
+    out = rt.create_buffer(64)
+    rt.enqueue_kernel("s1", fn=None, inputs=[buf], outputs=[out],
+                      duration=1e-6)
+    rt.finish()
+    assert rt.stats()["bytes_on_wire"] > before    # re-migrated
+    assert "s1" in buf.valid_on
+
+
+def test_invalidate_except_bumps_version():
+    b = Buffer(nbytes=64)
+    v0 = b.version
+    b.invalidate_except("s0")
+    b.set_data(np.zeros(16, np.float32), "s1")
+    assert b.version == v0 + 2
+    assert b.valid_on == {"s1"}
+
+
+def test_dropped_transfer_fails_fast_and_does_not_capture_retries():
+    """A migration dropped on a dead peer link can never be re-sent
+    (replay is deduped server-side), so it must fail fast — not hang —
+    and release its in-flight entry: a retry after reconnect starts a
+    fresh transfer instead of coalescing onto a dead event."""
+    rt = mk(n=2)
+    buf = _seed_buffer(rt, 4 * MiB)
+    rt.peer_link("s0", "s1").up = False
+    m1 = rt.enqueue_migration(buf, "s1")
+    rt.finish()
+    assert m1.status == "error"
+    assert rt.stats()["migrations_inflight"] == 0
+    assert rt.stats()["events_live"] == 0
+    rt.peer_link("s0", "s1").up = True
+    m2 = rt.enqueue_migration(buf, "s1")
+    assert m2 is not m1
+    assert rt.stats()["migrations_coalesced"] == 0
+    rt.finish()
+    assert m2.status == "complete"
+    assert "s1" in buf.valid_on
+
+
+def test_coalesced_migration_preserves_wait_for_ordering():
+    """A coalesce hit must still honor the caller's wait list: the
+    returned handle completes no earlier than both the in-flight
+    transfer and the requested dependencies."""
+    rt = mk(n=2)
+    buf = _seed_buffer(rt, 4 * MiB)
+    m1 = rt.enqueue_migration(buf, "s1")
+    barrier = rt.enqueue_kernel("s0", fn=None, duration=0.5)
+    m2 = rt.enqueue_migration(buf, "s1", wait_for=[barrier])
+    assert m2 is not m1
+    assert rt.stats()["migrations_coalesced"] == 1   # payload sent once
+    rt.finish()
+    assert m2.status == "complete"
+    assert m2.t_end >= barrier.t_end
+    assert m2.t_end >= m1.t_end
+    assert rt.stats()["events_live"] == 0
+
+
+def test_naive_read_leg_dropped_fails_migration_and_releases_entry():
+    """p2p_migration=False with the client link dying after the read
+    command was delivered: the daemon dedups the replayed command and
+    can never re-send the data, so the read and the staged migration
+    must fail (not hang) and release the in-flight entry — a retry
+    after reconnect starts fresh and succeeds."""
+    rt = mk(n=2, p2p=False)
+    buf = _seed_buffer(rt, 4 * MiB)
+    m1 = rt.enqueue_migration(buf, "s1")   # read command leaves now
+    rt.c_links["s0"].up = False            # dies before the data return
+    rt.finish()
+    assert m1.status == "error"
+    assert rt.stats()["migrations_inflight"] == 0
+    assert rt.stats()["events_live"] == 0
+    rt.c_links["s0"].up = True
+    m2 = rt.enqueue_migration(buf, "s1")
+    assert m2 is not m1
+    rt.finish()
+    assert m2.status == "complete"
+    assert "s1" in buf.valid_on
+
+
+def test_naive_migration_clobbered_during_read_leg_not_validated():
+    """p2p_migration=False: a write landing while the payload is still on
+    the (slow) read leg makes the staged copy stale — the destination
+    must not be marked a valid replica when it finally arrives."""
+    rt = mk(n=2, p2p=False)
+    buf = _seed_buffer(rt, 8 * MiB)     # read leg ≫ kernel latency
+    rt.enqueue_migration(buf, "s1")
+    rt.enqueue_kernel("s0", fn=None, inputs=[], outputs=[buf],
+                      duration=1e-6)
+    rt.finish()
+    assert buf.valid_on == {"s0"}
+
+
+# ---- content-size clamping (cl_pocl_content_size, §5.3) ----
+
+def test_transfer_bytes_clamps_negative_and_oversized():
+    size_buf = Buffer(nbytes=4)
+    big = Buffer(nbytes=4096, content_size_buffer=size_buf)
+    size_buf.data = np.array([-7], np.int64)
+    assert big.transfer_bytes() == 0.0
+    size_buf.data = np.array([1 << 40], np.int64)
+    assert big.transfer_bytes() == 4096.0
+    size_buf.data = np.array([100], np.int64)
+    assert big.transfer_bytes() == 100.0
+    assert Buffer(nbytes=64).transfer_bytes() == 64.0
+
+
+def test_zero_content_migration_moves_command_struct_only():
+    rt = mk()
+    size_buf = rt.create_buffer(4)
+    buf = rt.create_buffer(MiB, content_size_buffer=size_buf)
+    rt.enqueue_write("s0", size_buf, np.array([-1], np.int64))
+    rt.enqueue_write("s0", buf, np.zeros(MiB // 4, np.uint32))
+    rt.finish()
+    link = rt.peer_link("s0", "s1")
+    before = link.bytes_sent
+    rt.enqueue_migration(buf, "s1")
+    rt.finish()
+    moved = link.bytes_sent - before
+    # command struct (+ completion traffic), nothing near the 1 MiB body
+    assert moved < 4 * CMD_BYTES, moved
+
+
+# ---- replica-aware source selection ----
+
+def test_source_selection_prefers_idle_link():
+    """With replicas on two servers, a migration pulls over the idle peer
+    link instead of queueing behind a busy one."""
+    rt = mk(n=3)
+    buf = _seed_buffer(rt, 8 * MiB)
+    rt.enqueue_migration(buf, "s1")
+    rt.finish()
+    assert buf.valid_on >= {"s0", "s1"}
+    # occupy s0<->s2 so s1 is the cheaper source
+    busy = rt.peer_link("s0", "s2")
+    busy.send(1e9, lambda: None)
+    idle = rt.peer_link("s1", "s2")
+    before = idle.bytes_sent
+    rt.enqueue_migration(buf, "s2")
+    rt.finish()
+    assert idle.bytes_sent - before > 8 * MiB
+    assert "s2" in buf.valid_on
+
+
+def test_source_selection_prefers_registered_mr_on_rdma():
+    """Equal links: the RDMA path amortizes MR registration by pulling
+    from a source that already exchanged keys with the destination."""
+    rt = mk(n=3, peer_transport="rdma")
+    buf = rt.create_buffer(8 * MiB)
+    buf.data = np.zeros(2 * MiB, np.uint32)
+    buf.valid_on = {"s0", "s1"}
+    rt._mr_registered.add((buf.id, "s1", "s2"))
+    via_s1 = rt.peer_link("s1", "s2")
+    before = via_s1.bytes_sent
+    rt.enqueue_migration(buf, "s2")
+    rt.finish()
+    assert via_s1.bytes_sent - before > 8 * MiB
+
+
+def test_source_selection_deterministic_tiebreak():
+    """All else equal, the lowest-named replica wins (set iteration order
+    must not leak into placement)."""
+    rt = mk(n=4)
+    buf = rt.create_buffer(MiB)
+    buf.data = np.zeros(MiB // 4, np.uint32)
+    buf.valid_on = {"s2", "s1"}
+    src = rt._pick_migration_source(buf, ["s2", "s1"], "s3")
+    assert src == "s1"
+
+
+# ---- naive-path completion routing (regression) ----
+
+@pytest.mark.parametrize("dependent_server", ["s1", "s2"])
+def test_naive_write_completion_respects_routing(dependent_server):
+    """p2p_migration=False: the client-staged write's completion must go
+    through the same routing logic as every other server completion —
+    peers hear about it only under broadcast routing or when subscribed."""
+    msgs = {}
+    for routing in ("broadcast", "subscription"):
+        rt = mk(n=3, p2p=False, routing=routing)
+        buf = _seed_buffer(rt, 4096)
+        mig = rt.enqueue_migration(buf, "s1")
+        ev = rt.enqueue_kernel(dependent_server, fn=None, duration=1e-6,
+                               wait_for=[mig])
+        rt.finish()
+        assert ev.status == "complete"
+        assert rt.stats()["events_live"] == 0
+        msgs[routing] = rt.stats()["peer_completion_msgs"]
+    if dependent_server == "s1":
+        # dependent local to the destination: under subscription no peer
+        # ever needs to hear any of these completions
+        assert msgs["subscription"] == 0
+    else:
+        # remote dependent: exactly the one subscribed peer is notified
+        assert msgs["subscription"] == 1
+    assert msgs["subscription"] < msgs["broadcast"]
+
+
+def test_naive_write_timestamps_equal_across_routings():
+    """Dropping unneeded peer notifications must not shift any simulated
+    timestamp on a single-dependent chain."""
+    stamps = {}
+    for routing in ("broadcast", "subscription"):
+        rt = mk(n=2, p2p=False, routing=routing)
+        buf = _seed_buffer(rt, 64 * 1024)
+        mig = rt.enqueue_migration(buf, "s1")
+        ev = rt.enqueue_kernel("s1", fn=None, duration=1e-6, wait_for=[mig])
+        rt.finish()
+        stamps[routing] = (mig.t_end, ev.t_submitted, ev.t_start, ev.t_end)
+    assert stamps["broadcast"] == stamps["subscription"]
