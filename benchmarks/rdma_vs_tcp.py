@@ -4,11 +4,14 @@ uint32 buffer migration, swept over buffer sizes 4 B → 134 MiB.
 Expected shape (calibrated): positive from 32 B (fixed-cost regime; our
 model lands ~13-15 % vs the paper's ~30 % — the client command legs carry
 relatively more fixed cost here, noted in EXPERIMENTS.md), a knee at the
-9 MiB TCP send-buffer split point, plateau ≈65-69 % ≥134 MiB. With the
-chunked cut-through data plane the knee overshoots (~85 % at exactly
-9 MiB): RDMA pipelines its staging copies at HCA-fragment granularity
-below the TCP split point, while TCP's first pipelining chunk only
-appears above it — the discontinuity of a discrete write()-split model.
+9 MiB TCP send-buffer split point (~59 %, the last size before TCP's
+copy/wire overlap fully amortizes), plateau ≈65-69 % ≥134 MiB. The knee
+used to overshoot the plateau (~85 % at exactly 9 MiB): a payload equal
+to the send buffer was modeled as one store-and-forward chunk — fully
+serial copy+wire+copy for TCP while RDMA already pipelined at
+HCA-fragment granularity. Equal-sized chunks with the count rounding up
+at exact multiples (``transport._chunk_sizes``) removed that
+discrete-split cliff.
 """
 from __future__ import annotations
 

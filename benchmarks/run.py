@@ -22,6 +22,7 @@ MODULES = [
     ("fig9", "benchmarks.passthrough"),
     ("fig10", "benchmarks.migration_latency"),
     ("migpipe", "benchmarks.migration_pipeline"),
+    ("mt", "benchmarks.multi_tenant"),
     ("fig11", "benchmarks.rdma_vs_tcp"),
     ("fig12", "benchmarks.matmul_scaling"),
     ("fig13", "benchmarks.rdma_matmul"),

@@ -11,8 +11,10 @@
 #       --write-baseline benchmarks/BENCH_dispatch.json
 #   python -m benchmarks.migration_pipeline \
 #       --write-baseline benchmarks/BENCH_migration.json
+#   python -m benchmarks.multi_tenant \
+#       --write-baseline benchmarks/BENCH_multitenant.json
 # — the dispatch baseline is wall-clock and host-specific; the migration
-# baseline is simulated time and portable).
+# and multi-tenant baselines are simulated time and portable).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -30,5 +32,9 @@ python -m benchmarks.dispatch_throughput --smoke --trials 3 \
 echo "== migration data-plane smoke (20% regression gate) =="
 python -m benchmarks.migration_pipeline \
     --baseline benchmarks/BENCH_migration.json
+
+echo "== multi-tenant smoke (20% regression gate + acceptance floors) =="
+python -m benchmarks.multi_tenant \
+    --baseline benchmarks/BENCH_multitenant.json
 
 echo "ci.sh: all checks passed"

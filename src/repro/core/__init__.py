@@ -5,8 +5,11 @@ from repro.core.commands import (BuiltinKernel, Marker, MigrateBuffer,  # noqa: 
                                  NDRangeKernel, ReadBuffer, WriteBuffer)
 from repro.core.events import (COMPLETE, ERROR, QUEUED, RUNNING,  # noqa: F401
                                SUBMITTED, Event)
-from repro.core.netsim import DeviceSim, Link, SimClock  # noqa: F401
-from repro.core.runtime import (ClientRuntime, DeviceSpec,  # noqa: F401
-                                DeviceUnavailable, LinkSpec, ServerSpec)
+from repro.core.netsim import NIC, DeviceSim, Link, SimClock  # noqa: F401
+from repro.core.runtime import (ClientRuntime, Cluster,  # noqa: F401
+                                DeviceSpec, DeviceUnavailable, LinkSpec,
+                                ServerHost, ServerSpec)
+from repro.core.scheduler import (DeviceScheduler, DRRPolicy,  # noqa: F401
+                                  FIFOPolicy, make_policy)
 from repro.core.transport import (RDMATransport, TCPTransport,  # noqa: F401
                                   make_transport)

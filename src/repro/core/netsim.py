@@ -70,10 +70,39 @@ class SimClock:
         return self.now
 
 
+class NIC:
+    """Shared egress budget for one host (DESIGN.md §4).
+
+    A server's peer and client links are separate point-to-point FIFOs,
+    but physically they all drain through one NIC: pushing to N peers at
+    once cannot exceed the port's line rate. ``NIC`` is a second
+    serialization timeline every send *from* the owning host passes
+    through, in tandem ahead of the link's own FIFO: the port takes the
+    message when the sender is ready and the port is free (``bytes /
+    nic.bandwidth`` of occupancy), then the link drains it cut-through
+    (``bytes / link.bandwidth``), finishing no earlier than the port
+    does. A message whose *link* is backed up never holds the port — one
+    tenant's slow radio must not head-of-line block every other flow out
+    of the server. A fat NIC feeding thin links (e.g. 25 Gb port, 1 Gb
+    UE radios) therefore only staggers flow starts; a NIC at or below
+    link rate becomes the contended resource — the shared-egress cost
+    the pre-NIC model let a busy server skip entirely.
+    """
+
+    __slots__ = ("bandwidth", "name", "_busy_until", "bytes_sent")
+
+    def __init__(self, bandwidth: float, name: str = ""):
+        self.bandwidth = bandwidth
+        self.name = name
+        self._busy_until = 0.0
+        self.bytes_sent = 0
+
 class Link:
     """Point-to-point link with FIFO serialization + propagation latency.
 
-    ``latency`` is one-way propagation (s); ``bandwidth`` in B/s.
+    ``latency`` is one-way propagation (s); ``bandwidth`` in B/s. Sends
+    may name an ``egress`` NIC (the sending host's shared port); see
+    ``NIC`` for the tandem-serialization model.
     """
 
     __slots__ = ("clock", "latency", "bandwidth", "name", "_busy_until",
@@ -94,17 +123,43 @@ class Link:
         return 2.0 * self.latency
 
     def send(self, nbytes: float, on_delivered: Callable,
-             serialize_overhead: float = 0.0):
+             serialize_overhead: float = 0.0, egress: Optional[NIC] = None):
         """Queue a message; ``on_delivered`` fires at the receiver."""
         if not self.up:
             return None  # dropped — sender times out via its own logic
         start = self.clock.now
-        busy = self._busy_until
-        if busy > start:
-            start = busy
-        start += serialize_overhead
         bw = self.bandwidth
-        busy = start + (nbytes / bw if bw > 0 else 0.0)
+        if egress is None:
+            busy = self._busy_until
+            if busy > start:
+                start = busy
+            start += serialize_overhead
+            busy = start + (nbytes / bw if bw > 0 else 0.0)
+        else:
+            # tandem NIC → link: the port takes the message once the
+            # sender has staged it (``now + overhead``, as send_chunked
+            # gates staging) and the port is free — a busy LINK must not
+            # hold the shared NIC (that would let one tenant's slow
+            # radio head-of-line block every other flow out of the
+            # server). The wire leg then starts at the later of the
+            # egress-free schedule and the NIC hand-off, so an
+            # uncontended (fat) NIC is time-identical to ``egress=None``
+            nic_start = start + serialize_overhead
+            if egress._busy_until > nic_start:
+                nic_start = egress._busy_until
+            nic_bw = egress.bandwidth
+            nic_end = nic_start + (nbytes / nic_bw if nic_bw > 0 else 0.0)
+            egress._busy_until = nic_end
+            egress.bytes_sent += nbytes
+            busy = self._busy_until
+            if busy > start:
+                start = busy
+            start += serialize_overhead     # egress-free wire start
+            if nic_start > start:
+                start = nic_start
+            busy = start + (nbytes / bw if bw > 0 else 0.0)
+            if nic_end > busy:
+                busy = nic_end     # NIC slower than the link: it governs
         self._busy_until = busy
         self.bytes_sent += nbytes
         arrive = busy + self.latency
@@ -112,7 +167,8 @@ class Link:
         return arrive
 
     def send_chunked(self, chunks, on_delivered: Callable,
-                     serialize_overhead: float = 0.0):
+                     serialize_overhead: float = 0.0,
+                     egress: Optional[NIC] = None):
         """Pipelined (cut-through) multi-chunk transfer.
 
         ``chunks`` is a sequence of ``(sender_cpu, wire_bytes,
@@ -138,20 +194,37 @@ class Link:
             return None  # dropped — sender times out via its own logic
         snd_free = self.clock.now + serialize_overhead
         wire_free = self._busy_until
+        nic_free = egress._busy_until if egress is not None else 0.0
+        nic_bw = egress.bandwidth if egress is not None else 0.0
         bw = self.bandwidth
         lat = self.latency
         rcv_free = 0.0
         total = 0.0
         for snd_cpu, wire_bytes, rcv_cpu in chunks:
             snd_free += snd_cpu                  # chunk copied/staged
-            start = snd_free if snd_free > wire_free else wire_free
-            wire_free = start + (wire_bytes / bw if bw > 0 else 0.0)
+            if egress is None:
+                start = snd_free if snd_free > wire_free else wire_free
+                wire_free = start + (wire_bytes / bw if bw > 0 else 0.0)
+            else:
+                # NIC → link tandem per chunk (see ``send``): the port
+                # takes the chunk when staged and free; the link drains
+                # cut-through behind it, never gating the shared port
+                nic_start = snd_free if snd_free > nic_free else nic_free
+                nic_free = nic_start + (wire_bytes / nic_bw if nic_bw > 0
+                                        else 0.0)
+                start = nic_start if nic_start > wire_free else wire_free
+                wire_free = start + (wire_bytes / bw if bw > 0 else 0.0)
+                if nic_free > wire_free:
+                    wire_free = nic_free  # NIC slower: it paces the chunk
             total += wire_bytes
             arrive = wire_free + lat
             if arrive > rcv_free:
                 rcv_free = arrive
             rcv_free += rcv_cpu                  # receiver-side copy
         self._busy_until = wire_free
+        if egress is not None:
+            egress._busy_until = nic_free
+            egress.bytes_sent += total
         self.bytes_sent += total
         self._schedule_at(rcv_free, on_delivered)
         return rcv_free

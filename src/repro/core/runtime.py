@@ -41,6 +41,19 @@ chosen per-replica by estimated delivery time (link queue + bandwidth +
 RDMA registration amortization) instead of set order. ``stats()``
 exposes the data-plane scoreboard: ``bytes_on_wire``,
 ``migrations_coalesced``, ``chunks_in_flight``/``peak_chunks_in_flight``.
+
+The server runtime is multi-tenant (DESIGN.md §4, the paper's
+server-side scalability claim): a ``Cluster`` owns the shared substrate
+— clock, server hosts (devices + per-device run queues + shared egress
+NIC) and the peer mesh — and any number of ``ClientRuntime`` instances
+(UE sessions) attach to it. Server-side per-session state (replay
+dedup, remote-resolution tracking, dependency waiters) lives in a
+``ServerSim`` per (client, server), registered in the host's session
+table by session id; device time is arbitrated across sessions by a
+pluggable scheduler (FIFO baseline or weighted deficit-round-robin —
+``src/repro/core/scheduler.py``). Constructing a ``ClientRuntime``
+without an explicit cluster builds a private one, preserving the
+original single-tenant API.
 """
 from __future__ import annotations
 
@@ -56,7 +69,8 @@ from repro.core import commands as C
 from repro.core.buffers import Buffer
 from repro.core.events import (COMPLETE, ERROR, QUEUED, RUNNING, SUBMITTED,
                                Event)
-from repro.core.netsim import DeviceSim, Link, SimClock
+from repro.core.netsim import NIC, DeviceSim, Link, SimClock
+from repro.core.scheduler import DeviceScheduler, make_policy
 from repro.core.transport import (make_transport, wire_scale,
     CLIENT_SUBMIT, CLIENT_REAP, CMD_BYTES, DISPATCH, COMPLETE_WRITE)
 
@@ -92,20 +106,112 @@ class _Waiter:
         self.remaining = 0
 
 
-class ServerSim:
-    """The pocld daemon: reader/writer threads become event-loop actors."""
+class ServerHost:
+    """Cluster-side half of a pocld server: the physical devices, one
+    run-queue scheduler per device, the shared egress NIC, and the §4.3
+    session table (session id → attached ``ServerSim``). Everything a
+    tenant can contend on lives here; everything scoped to one client
+    session lives in ``ServerSim``."""
 
-    def __init__(self, rt: "ClientRuntime", spec: ServerSpec):
-        self.rt = rt
+    def __init__(self, cluster: "Cluster", spec: ServerSpec):
+        self.cluster = cluster
         self.name = spec.name
-        self.devices = {d.name: DeviceSim(rt.clock, d.name, d.flops, d.mem_bw)
+        self.devices = {d.name: DeviceSim(cluster.clock, d.name,
+                                          d.flops, d.mem_bw)
                         for d in spec.devices}
+        self.schedulers = {
+            name: DeviceScheduler(make_policy(cluster.scheduler_policy,
+                                              cluster.scheduler_quantum))
+            for name in self.devices}
+        self.nic = (NIC(cluster.nic_bandwidth, f"{self.name}.nic")
+                    if cluster.nic_bandwidth else None)
+        self.sessions: dict = {}     # session id (bytes) -> ServerSim
+
+
+class Cluster:
+    """A shared simulated MEC cluster: one logical clock, the server
+    hosts, and the peer-link mesh. Any number of ``ClientRuntime``
+    instances attach to it — each brings its own client links, event
+    tables, and per-server sessions, while devices, run queues, peer
+    links, and NICs are contended across all of them.
+
+    ``scheduler`` picks the cross-session device policy (``'fifo'`` |
+    ``'drr'``); ``nic_bandwidth`` (B/s) enables the shared-NIC egress
+    model for every host (None keeps the pre-NIC independent-link
+    behavior). A ``ClientRuntime`` built without an explicit cluster
+    creates a private one, so the single-tenant API is unchanged.
+    """
+
+    def __init__(self, servers: Sequence[ServerSpec],
+                 peer_link: LinkSpec = LinkSpec(),
+                 peer_transport: str = "tcp",
+                 svm: bool = False,
+                 scheduler: str = "fifo",
+                 scheduler_quantum: Optional[float] = None,
+                 nic_bandwidth: Optional[float] = None):
+        self.clock = SimClock()
+        self.peer_transport = make_transport(peer_transport, svm)
+        self.scheduler_policy = scheduler
+        self.scheduler_quantum = scheduler_quantum
+        self.nic_bandwidth = nic_bandwidth
+        self.hosts = {s.name: ServerHost(self, s) for s in servers}
+        self.p_links: dict = {}
+        names = list(self.hosts)
+        for i, a in enumerate(names):
+            for b in names[i + 1:]:
+                self.p_links[(a, b)] = Link(self.clock, peer_link.latency,
+                                            peer_link.bandwidth,
+                                            f"{a}<->{b}")
+        self.clients: list = []
+
+    def peer_link(self, a: str, b: str) -> Link:
+        return self.p_links.get((a, b)) or self.p_links[(b, a)]
+
+    def run(self, until: Optional[float] = None) -> float:
+        """Drain the shared simulation (all attached tenants)."""
+        return self.clock.run(until)
+
+    def stats(self) -> dict:
+        return {
+            "time": self.clock.now,
+            "clients": [c.name for c in self.clients],
+            "sessions": {h: len(host.sessions)
+                         for h, host in self.hosts.items()},
+            "device_busy": {f"{h}/{d}": dev.busy_time
+                            for h, host in self.hosts.items()
+                            for d, dev in host.devices.items()},
+            "scheduler": {f"{h}/{d}": {"policy": sch.policy.name,
+                                       "dispatched": sch.dispatched,
+                                       "queue_peak": sch.queue_peak}
+                          for h, host in self.hosts.items()
+                          for d, sch in host.schedulers.items()},
+            "nic_bytes": {h: (host.nic.bytes_sent if host.nic else 0)
+                          for h, host in self.hosts.items()},
+            "peer_link_bytes": {f"{a}-{b}": l.bytes_sent
+                                for (a, b), l in self.p_links.items()},
+        }
+
+
+class ServerSim:
+    """One client session's view of the pocld daemon (the per-session
+    half of the server split): replay dedup, remote-resolution tracking,
+    and the dependency waiter table are all scoped to this session,
+    while devices, run queues, and the NIC are shared on ``host``."""
+
+    def __init__(self, rt: "ClientRuntime", host: ServerHost):
+        self.rt = rt
+        self.host = host
+        self.name = host.name
         self.session_id: Optional[bytes] = None
         self.processed: set = set()           # command ids (replay dedup)
         self.resolved_remote: set = set()     # remote event ids seen complete
         # dep event id -> [_Waiter, ...] in command-arrival order
         self._waiters: dict = {}
         self._ready: deque = deque()          # waiters with remaining == 0
+
+    @property
+    def devices(self) -> dict:
+        return self.host.devices
 
     # ---- command arrival ----
     def receive_command(self, ev: Event, dev_name: str, deps: list):
@@ -185,35 +291,43 @@ class ServerSim:
         if isinstance(cmd, C.ReadBuffer):
             self.rt._start_read_return(self, ev)
             return
-        dev = self.devices[dev_name or next(iter(self.devices))]
+        dname = dev_name or next(iter(self.host.devices))
+        dev = self.host.devices[dname]
         if isinstance(cmd, C.WriteBuffer):
             cmd.buffer.set_data(np.asarray(cmd.data), self.name)
             ev.status = RUNNING
             ev.t_start = self.rt.clock.now
             self._complete(ev)
             return
-        # NDRangeKernel / BuiltinKernel / Marker
+        # NDRangeKernel / BuiltinKernel / Marker: device time is
+        # arbitrated across sessions by the host's per-device scheduler —
+        # a ready command queues until the policy dispatches it
         flops = getattr(cmd, "flops", 0.0)
         bytes_moved = getattr(cmd, "bytes_moved", 0.0)
         duration = getattr(cmd, "duration", None)
         cost = dev.kernel_cost(flops, bytes_moved, duration)
-        ev.status = RUNNING
 
-        def done():
-            if isinstance(cmd, C.NDRangeKernel) and cmd.fn is not None:
-                ins = [b.data for b in cmd.inputs]
-                outs = cmd.fn(*ins)
-                if not isinstance(outs, (tuple, list)):
-                    outs = (outs,)
-                for b, arr in zip(cmd.outputs, outs):
-                    b.set_data(np.asarray(arr), self.name)
-            else:
-                for b in getattr(cmd, "outputs", ()):
-                    b.invalidate_except(self.name)
-                    b.valid_on = {self.name}
-            self._complete(ev)
+        def run(release):
+            ev.status = RUNNING
 
-        ev.t_start, _ = dev.execute(cost, done)
+            def done():
+                if isinstance(cmd, C.NDRangeKernel) and cmd.fn is not None:
+                    ins = [b.data for b in cmd.inputs]
+                    outs = cmd.fn(*ins)
+                    if not isinstance(outs, (tuple, list)):
+                        outs = (outs,)
+                    for b, arr in zip(cmd.outputs, outs):
+                        b.set_data(np.asarray(arr), self.name)
+                else:
+                    for b in getattr(cmd, "outputs", ()):
+                        b.invalidate_except(self.name)
+                        b.valid_on = {self.name}
+                self._complete(ev)
+                release()       # device freed: policy picks the next cmd
+
+            ev.t_start, _ = dev.execute(cost, done)
+
+        self.host.schedulers[dname].submit(self, self.rt.weight, cost, run)
 
     def _complete(self, ev: Event):
         ev.complete(self.rt.clock.now)
@@ -225,13 +339,18 @@ class ServerSim:
 
 
 class Session:
-    """Client-side view of one server connection (paper §4.3)."""
+    """Client-side view of one server connection (paper §4.3).
 
-    def __init__(self, name: str):
+    ``replay_window`` bounds the unacked-command replay buffer; it is a
+    runtime knob (``ClientRuntime(replay_window=...)``) rather than a
+    hard-coded 64, and ``stats()['replay_window']`` surfaces the
+    configured size next to the overflow counter."""
+
+    def __init__(self, name: str, replay_window: int = 64):
         self.name = name
         self.session_id = bytes(16)           # all-zeroes until handshake
         self.available = False
-        self.replay: deque = deque(maxlen=64)  # last commands (unacked)
+        self.replay: deque = deque(maxlen=replay_window)  # unacked cmds
         self.lost_unacked = 0                  # overflowed replay slots
 
     def record(self, item):
@@ -255,27 +374,67 @@ class Session:
 class ClientRuntime:
     """The PoCL remote client driver (host side of the OpenCL API)."""
 
-    def __init__(self, servers: Sequence[ServerSpec],
+    def __init__(self, servers: Optional[Sequence[ServerSpec]] = None,
                  client_link: LinkSpec = LinkSpec(),
-                 peer_link: LinkSpec = LinkSpec(latency=61e-6,
-                                                bandwidth=100e6 / 8),
+                 peer_link: Optional[LinkSpec] = None,
                  transport: str = "tcp",
                  peer_transport: Optional[str] = None,
                  svm: bool = False,
                  scheduling: str = "decentralized",   # | 'client'
                  p2p_migration: bool = True,
                  completion_routing: str = "subscription",  # | 'broadcast'
-                 local_device: Optional[DeviceSpec] = None):
+                 local_device: Optional[DeviceSpec] = None,
+                 cluster: Optional[Cluster] = None,
+                 name: Optional[str] = None,
+                 weight: float = 1.0,
+                 replay_window: int = 64,
+                 scheduler: Optional[str] = None,
+                 scheduler_quantum: Optional[float] = None,
+                 nic_bandwidth: Optional[float] = None):
         if completion_routing not in ("subscription", "broadcast"):
             raise ValueError(f"unknown completion_routing "
                              f"{completion_routing!r}")
-        self.clock = SimClock()
+        if not weight > 0.0:
+            raise ValueError(f"weight must be positive, got {weight!r}")
+        if cluster is None:
+            if servers is None:
+                raise ValueError("pass server specs or an existing cluster")
+            cluster = Cluster(servers,
+                              peer_link=peer_link if peer_link is not None
+                              else LinkSpec(latency=61e-6,
+                                            bandwidth=100e6 / 8),
+                              peer_transport=peer_transport or transport,
+                              svm=svm, scheduler=scheduler or "fifo",
+                              scheduler_quantum=scheduler_quantum,
+                              nic_bandwidth=nic_bandwidth)
+        else:
+            if servers is not None:
+                raise ValueError("pass either servers or cluster, not both")
+            ignored = {"peer_link": peer_link,
+                       "peer_transport": peer_transport,
+                       "scheduler": scheduler,
+                       "scheduler_quantum": scheduler_quantum,
+                       "nic_bandwidth": nic_bandwidth}
+            bad = [k for k, v in ignored.items() if v is not None]
+            if bad:
+                # these configure the shared substrate — accepting them
+                # here would silently measure a different cluster than
+                # the caller asked for
+                raise ValueError(
+                    f"{', '.join(sorted(bad))} are cluster-level settings; "
+                    f"pass them to Cluster(), not to a ClientRuntime "
+                    f"attaching to an existing one")
+        self.cluster = cluster
+        self.clock = cluster.clock
+        self.name = name if name is not None else f"ue{len(cluster.clients)}"
+        self.weight = weight                  # fair-scheduler share
         self.transport = make_transport(transport, svm)
-        self.peer_transport = make_transport(peer_transport or transport, svm)
+        self.peer_transport = cluster.peer_transport
         self.scheduling = scheduling
         self.p2p_migration = p2p_migration
         self.completion_routing = completion_routing
-        self.servers = {s.name: ServerSim(self, s) for s in servers}
+        self.servers = {h.name: ServerSim(self, h)
+                        for h in cluster.hosts.values()}
         self.events: dict = {}
         # event id -> {server names holding dependents of it}; registered
         # at enqueue time so a completion is signaled "directly to the
@@ -284,21 +443,20 @@ class ClientRuntime:
         self.client_completion_msgs = 0       # server → client completes
         self.peer_completion_msgs = 0         # server → peer notifications
         self.client_routed_completion_msgs = 0  # client → server forwards
-        self.sessions = {s: Session(s) for s in self.servers}
+        self.sessions = {s: Session(s, replay_window)
+                         for s in self.servers}
         self.local_device = DeviceSim(
             self.clock, "local",
             *( (local_device.flops, local_device.mem_bw)
                if local_device else (1e12, 50e9) ))
-        # links
+        # links: client links are per tenant (each UE brings its own
+        # radio/access link); the peer mesh is the cluster's, shared
         self.c_links = {s: Link(self.clock, client_link.latency,
-                                client_link.bandwidth, f"client<->{s}")
+                                client_link.bandwidth,
+                                f"{self.name}<->{s}")
                         for s in self.servers}
-        self.p_links = {}
-        names = list(self.servers)
-        for i, a in enumerate(names):
-            for b in names[i + 1:]:
-                self.p_links[(a, b)] = Link(self.clock, peer_link.latency,
-                                            peer_link.bandwidth, f"{a}<->{b}")
+        self.p_links = cluster.p_links
+        cluster.clients.append(self)
         self._buffers: list[Buffer] = []
         self._mr_registered: set = set()
         # (buf.id, dst server) -> (migration Event, buf.version snapshot);
@@ -313,25 +471,33 @@ class ClientRuntime:
         self.chunks_in_flight = 0             # gauge: chunks on any link
         self.peak_chunks_in_flight = 0
         # connect (handshake: rtt + session id assignment) — run the
-        # clock until all sessions are established, as clCreateContext
-        # would block
-        for s in self.servers:
-            self._handshake(s)
-        self.clock.run()
+        # clock just far enough that all of THIS client's sessions are
+        # established, as clCreateContext would block. A full drain here
+        # would fast-forward every other tenant's in-flight work on a
+        # shared cluster, so a dynamically-arriving UE could never
+        # contend with work already queued.
+        deadline = max(self._handshake(s) for s in self.servers)
+        self.clock.run(until=deadline)
 
     # ------------------------------------------------------------------
     def peer_link(self, a: str, b: str) -> Link:
-        return self.p_links.get((a, b)) or self.p_links[(b, a)]
+        return self.cluster.peer_link(a, b)
 
-    def _handshake(self, server: str):
+    def _handshake(self, server: str) -> float:
+        """Returns the sim time at which the session becomes available."""
         sess = self.sessions[server]
 
         def done():
             sess.session_id = secrets.token_bytes(16)
-            self.servers[server].session_id = sess.session_id
+            srv = self.servers[server]
+            srv.session_id = sess.session_id
+            # §4.3: the daemon's session table is keyed by session id —
+            # the id (not the transport address) is what a reconnect
+            # from a new IP presents to resume this session's state
+            srv.host.sessions[sess.session_id] = srv
             sess.available = True
 
-        self.c_links[server].send(64, done)
+        return self.c_links[server].send(64, done)
 
     # ---- buffers ----
     def create_buffer(self, nbytes: int, content_size_buffer: Buffer = None,
@@ -503,8 +669,10 @@ class ClientRuntime:
         the read leg over the source's client link (the client→dst leg
         is common to every candidate). The payload-free client→source
         command leg is deliberately ignored: it is near-uniform across
-        sources. Sorted iteration makes the choice deterministic (set
-        order is not)."""
+        sources. Under the shared-NIC egress model the source host's NIC
+        queue counts toward the estimate too — a server mid-push to one
+        peer is a poor source for another even over an idle link. Sorted
+        iteration makes the choice deterministic (set order is not)."""
         if len(srcs) == 1:
             return srcs[0]
         nbytes = buf.transfer_bytes()
@@ -521,7 +689,11 @@ class ClientRuntime:
                 link = self.c_links.get(s)
             if link is None or not link.up:
                 continue
-            queue = link._busy_until - now
+            busy = link._busy_until
+            nic = self.cluster.hosts[s].nic    # both legs leave server s
+            if nic is not None and nic._busy_until > busy:
+                busy = nic._busy_until         # shared egress is the queue
+            queue = busy - now
             if queue < 0.0:
                 queue = 0.0
             bw = link.bandwidth
@@ -573,12 +745,14 @@ class ClientRuntime:
 
     def _send_migration_chunks(self, link: Link, tr, nbytes: float,
                                extra_overhead: float,
-                               arrived: Callable) -> bool:
+                               arrived: Callable,
+                               egress: Optional[NIC] = None) -> bool:
         """Shared bulk-payload leg for both migration paths: build the
         transport's cut-through plan, apply wire inflation, keep the
-        scoreboard, and send. ``arrived`` fires after the last chunk's
-        receiver-side work. Returns False if the link is down (the
-        transfer was dropped)."""
+        scoreboard, and send (``egress`` is the sending host's shared
+        NIC when the transfer leaves a server). ``arrived`` fires after
+        the last chunk's receiver-side work. Returns False if the link
+        is down (the transfer was dropped)."""
         if nbytes > 0:
             fixed, chunks = tr.chunk_plan(nbytes)
         else:   # content-size says empty: command struct only
@@ -595,8 +769,8 @@ class ClientRuntime:
             arrived()
 
         if link.send_chunked(chunks, delivered,
-                             serialize_overhead=extra_overhead + fixed) \
-                is None:
+                             serialize_overhead=extra_overhead + fixed,
+                             egress=egress) is None:
             return False
         self.chunks_in_flight += n_chunks
         if self.chunks_in_flight > self.peak_chunks_in_flight:
@@ -716,7 +890,8 @@ class ClientRuntime:
             ev.server = dst
             self.servers[dst]._complete(ev)
 
-        if not self._send_migration_chunks(link, tr, nbytes, reg, arrived):
+        if not self._send_migration_chunks(link, tr, nbytes, reg, arrived,
+                                           egress=src_srv.host.nic):
             self._fail_dropped_migration(ev, dst)
 
     def _start_read_return(self, srv: ServerSim, ev: Event):
@@ -740,8 +915,8 @@ class ClientRuntime:
         if link.send(cost.wire_bytes * wire_scale(self.transport,
                                                   link.bandwidth),
                      arrived,
-                     serialize_overhead=COMPLETE_WRITE + cost.sender_cpu) \
-                is None:
+                     serialize_overhead=COMPLETE_WRITE + cost.sender_cpu,
+                     egress=srv.host.nic) is None:
             # link died after the command was delivered: the daemon has
             # already marked it processed, so a replay will be deduped
             # and the data can never be re-sent — surface the error
@@ -755,10 +930,12 @@ class ClientRuntime:
     def _broadcast_completion(self, srv: ServerSim, ev: Event):
         comp = (self.peer_transport if self.scheduling == "decentralized"
                 else self.transport).completion_cost()
+        nic = srv.host.nic              # every leg leaves this server
         # to client (always)
         self.c_links[srv.name].send(
             comp.wire_bytes, lambda: self._client_reap(ev),
-            serialize_overhead=COMPLETE_WRITE + comp.sender_cpu)
+            serialize_overhead=COMPLETE_WRITE + comp.sender_cpu,
+            egress=nic)
         self.client_completion_msgs += 1
         if self.scheduling != "decentralized":
             return
@@ -773,7 +950,7 @@ class ClientRuntime:
             link.send(comp.wire_bytes,
                       lambda p=self.servers[name]:
                       p.notify_remote_complete(ev.id),
-                      serialize_overhead=comp.sender_cpu)
+                      serialize_overhead=comp.sender_cpu, egress=nic)
             self.peer_completion_msgs += 1
 
     def _route_completion_via_client(self, ev: Event):
@@ -833,15 +1010,24 @@ class ClientRuntime:
             link.up = True
 
             def handshook():
-                self.sessions[server].available = True
-                for (ev, srv, device, deps, payload) in \
-                        list(self.sessions[server].replay):
+                sess = self.sessions[server]
+                srv = self.servers[server]
+                # present the session id to the daemon's session table
+                # (§4.3): the id, not the transport address, resolves
+                # the server-side session — its replay-dedup state is
+                # what makes the replayed commands below idempotent
+                daemon = srv.host.sessions.get(sess.session_id)
+                if daemon is None:          # expired/unknown: re-admit
+                    daemon = srv.host.sessions[sess.session_id] = srv
+                sess.available = True
+                for (ev, _srv_name, device, deps, payload) in \
+                        list(sess.replay):
                     if ev.status in (COMPLETE, ERROR):
                         continue
                     cost = self.transport.command_cost(payload)
                     link.send(cost.wire_bytes,
                               lambda e=ev, d=device, dd=deps:
-                              self.servers[server].receive_command(e, d, dd),
+                              daemon.receive_command(e, d, dd),
                               serialize_overhead=cost.sender_cpu)
 
             link.send(64 + 16, handshook)   # handshake incl. session id
@@ -910,10 +1096,16 @@ class ClientRuntime:
 
     # ---- control ----
     def finish(self) -> float:
-        """Drain the simulation; returns the final clock time."""
+        """Drain the simulation; returns the final clock time. The clock
+        is the cluster's, so on a shared cluster this drains every
+        attached tenant, not just this one."""
         return self.clock.run()
 
     def stats(self) -> dict:
+        # NOTE: peer_link_bytes and device_busy read the cluster-shared
+        # substrate — on a shared cluster they are totals across every
+        # tenant, not this client's share (Cluster.stats() carries the
+        # same numbers); the remaining keys are per-client
         return {
             "time": self.clock.now,
             "client_link_bytes": {s: l.bytes_sent
@@ -928,6 +1120,8 @@ class ClientRuntime:
             "client_routed_completion_msgs":
                 self.client_routed_completion_msgs,
             "events_live": len(self.events),
+            "replay_window": {s: sess.replay.maxlen
+                              for s, sess in self.sessions.items()},
             "replay_overflows": {s: sess.lost_unacked
                                  for s, sess in self.sessions.items()},
             # data-plane scoreboard (DESIGN.md §3)

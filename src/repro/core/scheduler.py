@@ -1,0 +1,198 @@
+"""Per-device run queues with pluggable cross-session fairness policies
+(DESIGN.md §4).
+
+The single-tenant runtime stacked ready commands straight onto the
+device's busy-until timeline, i.e. global FIFO in ready order. With many
+client sessions sharing one server that policy lets any tenant with a
+deep backlog capture the device for its whole burst. Each
+``DeviceScheduler`` owns one device's run queue and dispatches exactly
+one command at a time; *which* command is a policy decision:
+
+* ``fifo`` — one queue in arrival order, across all sessions. This is
+  the pre-multi-tenant behavior and the baseline the fairness
+  benchmarks compare against (a straggler tenant's backlog head-of-line
+  blocks everyone else).
+* ``drr`` — deficit round robin (Shreedhar & Varghese) over per-session
+  FIFO queues, with the deficit measured in device-seconds. Visiting a
+  session grants it ``quantum * weight`` of credit; its queued commands
+  run while their cost fits the remaining credit, then the scheduler
+  moves on, carrying the unspent deficit. Sessions that go idle forfeit
+  their deficit (no banking credit while absent). Weighted shares fall
+  out of the per-visit grant, and the wait for a newly-arrived light
+  tenant is bounded by one rotation plus the in-service command's
+  remainder instead of the straggler's whole backlog.
+
+The scheduler is non-preemptive — a dispatched kernel always runs to
+completion (matching OpenCL command semantics); fairness is decided at
+dispatch boundaries.
+
+HetMEC (arXiv:1901.09307) frames the cross-tenant assignment problem
+this policy layer plugs into; DRR is the classic O(1)-per-decision
+answer for latency-bounded fair sharing of one serial resource.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from typing import Callable, Optional
+
+# Default DRR quantum (device-seconds per visit). Roughly one "frame
+# slice" of GPU time: large enough that millisecond kernels run on their
+# first visit, small enough that a tenant queueing tens-of-millisecond
+# kernels cannot hold the device for more than ~one of them per round.
+DEFAULT_QUANTUM = 2e-3
+
+
+class FIFOPolicy:
+    """Single arrival-order queue across every session (baseline)."""
+
+    name = "fifo"
+    __slots__ = ("_q",)
+
+    def __init__(self):
+        self._q: deque = deque()
+
+    def push(self, tenant, weight: float, cost: float, run: Callable):
+        self._q.append(run)
+
+    def pop(self) -> Optional[Callable]:
+        return self._q.popleft() if self._q else None
+
+    def __len__(self):
+        return len(self._q)
+
+
+class DRRPolicy:
+    """Deficit round robin over per-tenant FIFO queues, in device-seconds.
+
+    ``_ring`` holds exactly the tenants with queued work, in round-robin
+    order. The head tenant is granted ``quantum * weight`` once per
+    visit (``_granted`` latches the grant so repeated ``pop`` calls
+    while it stays at the head do not re-grant); when no tenant in a
+    full rotation can afford its head command, the rotation deficit is
+    advanced several rounds at once (``skip-ahead``) so a command
+    costing many quanta needs O(ring) work, not O(cost/quantum).
+    """
+
+    name = "drr"
+    __slots__ = ("quantum", "_queues", "_weights", "_deficit", "_ring",
+                 "_granted")
+
+    def __init__(self, quantum: float = DEFAULT_QUANTUM):
+        if not quantum > 0.0:
+            # a zero quantum never grants credit (skip-ahead divides by
+            # it); a negative one shrinks deficits forever
+            raise ValueError(f"quantum must be positive, got {quantum!r}")
+        self.quantum = quantum
+        self._queues: dict = {}       # tenant -> deque[(cost, run)]
+        self._weights: dict = {}
+        self._deficit: dict = {}      # only tenants currently in the ring
+        self._ring: deque = deque()
+        self._granted = False
+
+    def push(self, tenant, weight: float, cost: float, run: Callable):
+        self._weights[tenant] = weight
+        q = self._queues.get(tenant)
+        if q is None:
+            q = self._queues[tenant] = deque()
+        if not q:
+            # going active: join the rotation with zero credit (idle
+            # periods bank nothing)
+            self._deficit[tenant] = 0.0
+            self._ring.append(tenant)
+            if len(self._ring) == 1:
+                self._granted = False
+        q.append((cost, run))
+
+    def pop(self) -> Optional[Callable]:
+        ring = self._ring
+        if not ring:
+            return None
+        visited = 0
+        while True:
+            t = ring[0]
+            q = self._queues[t]
+            if not self._granted:
+                self._deficit[t] += self.quantum * self._weights[t]
+                self._granted = True
+            cost, run = q[0]
+            if cost <= self._deficit[t]:
+                q.popleft()
+                self._deficit[t] -= cost
+                if not q:
+                    del self._deficit[t]    # forfeit on going idle
+                    ring.popleft()
+                    self._granted = False
+                return run
+            # head unaffordable: keep the carried deficit, move on
+            ring.rotate(-1)
+            self._granted = False
+            visited += 1
+            if visited >= len(ring):
+                # a full rotation granted everyone a quantum and nobody
+                # could run: advance whole rotations at once. Grant
+                # ``rounds - 1`` here and let the resumed loop's normal
+                # per-visit grant supply each tenant's final quantum, so
+                # the deficits match the unoptimized rotation exactly
+                # (pre-granting all ``rounds`` would leak one extra
+                # quantum to tenants visited before the dispatching one)
+                rounds = min(
+                    math.ceil((self._queues[x][0][0] - self._deficit[x])
+                              / (self.quantum * self._weights[x]))
+                    for x in ring)
+                for x in ring:
+                    self._deficit[x] += \
+                        (rounds - 1) * self.quantum * self._weights[x]
+                visited = 0
+
+    def __len__(self):
+        return sum(len(q) for q in self._queues.values())
+
+
+def make_policy(kind: str, quantum: Optional[float] = None):
+    if kind == "fifo":
+        return FIFOPolicy()
+    if kind == "drr":
+        return DRRPolicy(quantum if quantum is not None
+                         else DEFAULT_QUANTUM)
+    raise ValueError(f"unknown scheduler policy {kind!r}")
+
+
+class DeviceScheduler:
+    """One device's run queue: ready commands from every attached session
+    funnel through ``submit`` and run one at a time in policy order.
+
+    ``run(release)`` performs the actual dispatch (setting timestamps,
+    calling ``DeviceSim.execute``) and must invoke ``release`` exactly
+    once, when the device finishes the command — that hands the device
+    to the next queued command. Dispatch is work-conserving: the device
+    only idles when no session has queued work.
+    """
+
+    __slots__ = ("policy", "_busy", "dispatched", "queue_peak")
+
+    def __init__(self, policy):
+        self.policy = policy
+        self._busy = False
+        self.dispatched = 0          # commands run through this queue
+        self.queue_peak = 0          # max commands ever waiting
+
+    def submit(self, tenant, weight: float, cost: float, run: Callable):
+        self.policy.push(tenant, weight, cost, run)
+        backlog = len(self.policy)
+        if backlog > self.queue_peak:
+            self.queue_peak = backlog
+        if not self._busy:
+            self._dispatch()
+
+    def _dispatch(self):
+        run = self.policy.pop()
+        if run is None:
+            return
+        self._busy = True
+        self.dispatched += 1
+        run(self._release)
+
+    def _release(self):
+        self._busy = False
+        self._dispatch()
