@@ -1,8 +1,22 @@
-"""Shared benchmark scaffolding + testbed constants from the paper."""
+"""Shared benchmark scaffolding + testbed constants from the paper.
+
+Also the shared baseline machinery: every ``benchmarks/BENCH_*.json``
+regression baseline carries a ``_meta`` stamp (schema version, which
+benchmark owns it, the gated metric and direction, the tolerance, and
+the regeneration command) next to its ``rows``; ``load_baseline`` /
+``write_baseline`` / ``check_rows`` replace the three per-benchmark
+copies of the load/compare/write code, and ``validate_baseline`` is the
+schema check behind ``benchmarks/run.py --check-baselines`` (wired into
+scripts/ci.sh so a drifted or hand-mangled baseline fails CI before any
+benchmark runs)."""
 from __future__ import annotations
 
 import dataclasses
+import json
+import math
 import random
+import sys
+import time
 
 from repro.core import DeviceSpec, LinkSpec
 
@@ -40,6 +54,152 @@ def emit(rows):
     for r in rows:
         print(r.csv())
     return rows
+
+
+def dump_rows(rows, path: str) -> None:
+    """Write the row list as JSON (CI artifact upload)."""
+    with open(path, "w") as f:
+        json.dump([{"name": r.name, "us_per_call": r.us_per_call,
+                    "derived": r.derived} for r in rows], f, indent=1)
+
+
+def derived(row: Row, key: str) -> float:
+    """Pull ``key=value`` out of a row's derived-metrics string."""
+    for part in row.derived.split(";"):
+        if part.startswith(key + "="):
+            return float(part.split("=")[1])
+    raise ValueError(f"no {key} in {row.derived!r}")
+
+
+# ---- regression baselines (BENCH_*.json) ----
+
+BASELINE_SCHEMA = 1
+_DIRECTIONS = ("lower_is_better", "higher_is_better")
+
+
+def load_baseline(path: str) -> tuple[dict, dict]:
+    """Returns ``(meta, rows)``. Legacy flat ``{row: value}`` files load
+    with an empty meta so an old checkout still gates."""
+    with open(path) as f:
+        data = json.load(f)
+    if "_meta" in data:
+        return data["_meta"], data.get("rows", {})
+    return {}, data
+
+
+def write_baseline(path: str, values: dict, *, benchmark: str,
+                   metric: str, direction: str, tolerance: float,
+                   regenerate: str) -> None:
+    assert direction in _DIRECTIONS, direction
+    with open(path, "w") as f:
+        json.dump({
+            "_meta": {
+                "schema": BASELINE_SCHEMA,
+                "benchmark": benchmark,
+                "metric": metric,
+                "direction": direction,
+                "tolerance": tolerance,
+                "regenerate": regenerate,
+                "generated_at": time.strftime("%Y-%m-%d"),
+            },
+            "rows": values,
+        }, f, indent=1)
+    print(f"# baseline written to {path}", file=sys.stderr)
+
+
+def check_rows(rows, baseline_path: str, *, extract, tolerance: float,
+               direction: str = "lower_is_better", unit: str = "",
+               gated=None, benchmark: str = None) -> bool:
+    """Compare each row's ``extract(row)`` against the baseline entry of
+    the same name (rows absent from the baseline are skipped — but ZERO
+    matches is a failure: a wrong baseline file or a row rename must not
+    green-light CI having compared nothing). ``direction`` picks the
+    regression side: ``lower_is_better`` gates a ceiling of
+    ``want * (1 + tolerance)`` (simulated times), ``higher_is_better`` a
+    floor of ``want * (1 - tolerance)`` (throughputs). ``gated``
+    optionally restricts which rows can fail the check — ungated rows
+    are still printed for the log. ``benchmark`` cross-checks the
+    file's ``_meta.benchmark`` stamp when both are present."""
+    assert direction in _DIRECTIONS, direction
+    meta, baseline = load_baseline(baseline_path)
+    ok = True
+    if benchmark is not None and meta.get("benchmark") not in (
+            None, benchmark):
+        print(f"# {baseline_path}: baseline belongs to "
+              f"{meta.get('benchmark')!r}, not {benchmark!r} — "
+              f"wrong file?", file=sys.stderr)
+        ok = False
+    matched = 0
+    for row in rows:
+        want = baseline.get(row.name)
+        if want is None:
+            continue
+        matched += 1
+        got = extract(row)
+        is_gated = gated is None or gated(row)
+        if direction == "lower_is_better":
+            bound = want * (1.0 + tolerance)
+            bad = got > bound
+            kind = "ceiling"
+        else:
+            bound = want * (1.0 - tolerance)
+            bad = got < bound
+            kind = "floor"
+        status = ("ok" if not bad
+                  else "REGRESSION" if is_gated else "slow (ungated)")
+        print(f"# {row.name}: {got:.3f}{unit} vs baseline {want:.3f} "
+              f"({kind} {bound:.3f}) {status}", file=sys.stderr)
+        if bad and is_gated:
+            ok = False
+    if not matched:
+        print(f"# {baseline_path}: NO rows matched the baseline — "
+              f"nothing was gated (renamed rows? wrong file?)",
+              file=sys.stderr)
+        ok = False
+    return ok
+
+
+def validate_baseline(path: str) -> list:
+    """Schema check for one BENCH_*.json; returns human-readable error
+    strings (empty = valid). Required: a ``_meta`` stamp with schema
+    version, owning benchmark, metric name, gate direction, tolerance in
+    (0, 1), regeneration command, and generation date; ``rows`` must be
+    a non-empty map of row name → positive finite number."""
+    errs = []
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"unreadable: {e}"]
+    if not isinstance(data, dict):
+        return ["top level must be an object"]
+    meta = data.get("_meta")
+    if not isinstance(meta, dict):
+        errs.append("missing _meta stamp (regenerate with the module's "
+                    "--write-baseline)")
+        meta = {}
+    if meta.get("schema") != BASELINE_SCHEMA:
+        errs.append(f"_meta.schema must be {BASELINE_SCHEMA}, "
+                    f"got {meta.get('schema')!r}")
+    for key in ("benchmark", "metric", "regenerate", "generated_at"):
+        if not isinstance(meta.get(key), str) or not meta.get(key):
+            errs.append(f"_meta.{key} must be a non-empty string")
+    if meta.get("direction") not in _DIRECTIONS:
+        errs.append(f"_meta.direction must be one of {_DIRECTIONS}")
+    tol = meta.get("tolerance")
+    if not isinstance(tol, (int, float)) or not 0.0 < tol < 1.0:
+        errs.append("_meta.tolerance must be a number in (0, 1)")
+    rows = data.get("rows") if "_meta" in data else {
+        k: v for k, v in data.items() if k != "_meta"}
+    if not isinstance(rows, dict) or not rows:
+        errs.append("rows must be a non-empty object")
+    else:
+        for name, val in rows.items():
+            if not isinstance(val, (int, float)) \
+                    or not math.isfinite(val) or val <= 0:
+                errs.append(f"rows[{name!r}] must be a positive finite "
+                            f"number, got {val!r}")
+    return errs
 
 
 def build_dag(rt, n_cmds: int, n_srv: int, seed: int = 0, fanin: int = 3,

@@ -15,17 +15,18 @@ scripts/ci.sh).
 from __future__ import annotations
 
 import argparse
-import json
 import logging
-import sys
 import time
 
+from benchmarks import common
 from benchmarks.common import LOOPBACK, Row, build_dag, emit
 from repro.core import ClientRuntime, DeviceSpec, ServerSpec
 
 SERVER_COUNTS = (1, 4, 8)
 ROUTINGS = ("subscription", "broadcast")
 REGRESSION_TOLERANCE = 0.20
+REGENERATE = ("python -m benchmarks.dispatch_throughput --smoke "
+              "--write-baseline benchmarks/BENCH_dispatch.json")
 
 
 def _measure(n_cmds: int, n_srv: int, routing: str) -> Row:
@@ -64,33 +65,18 @@ def run(n_cmds: int = 10000):
 
 
 def _cmds_per_sec(row: Row) -> float:
-    for part in row.derived.split(";"):
-        if part.startswith("cmds_per_sec="):
-            return float(part.split("=")[1])
-    raise ValueError(f"no cmds_per_sec in {row.derived!r}")
+    return common.derived(row, "cmds_per_sec")
 
 
 def check_baseline(rows, baseline_path: str) -> bool:
     """Gate only the subscription rows — that is the shipped dispatch
     path; the broadcast rows exist as a comparison baseline and their
     absolute wall-clock speed is not a product property."""
-    with open(baseline_path) as f:
-        baseline = json.load(f)
-    ok = True
-    for row in rows:
-        want = baseline.get(row.name)
-        if want is None:
-            continue
-        got = _cmds_per_sec(row)
-        floor = want * (1.0 - REGRESSION_TOLERANCE)
-        gated = row.name.endswith("_subscription")
-        status = "ok" if got >= floor else (
-            "REGRESSION" if gated else "slow (ungated)")
-        print(f"# {row.name}: {got:.0f} cmds/s vs baseline {want:.0f} "
-              f"(floor {floor:.0f}) {status}", file=sys.stderr)
-        if gated and got < floor:
-            ok = False
-    return ok
+    return common.check_rows(
+        rows, baseline_path, extract=_cmds_per_sec,
+        tolerance=REGRESSION_TOLERANCE, direction="higher_is_better",
+        unit=" cmds/s", benchmark="dispatch_throughput",
+        gated=lambda row: row.name.endswith("_subscription"))
 
 
 def main() -> None:
@@ -103,6 +89,8 @@ def main() -> None:
                          "regression")
     ap.add_argument("--write-baseline", default=None,
                     help="write measured cmds/sec to this JSON path")
+    ap.add_argument("--json-out", default=None,
+                    help="write the result rows to this JSON path")
     ap.add_argument("--trials", type=int, default=1,
                     help="repeat the sweep N times and keep the best "
                          "cmds/sec per row (damps wall-clock noise when "
@@ -116,13 +104,17 @@ def main() -> None:
             if _cmds_per_sec(r) > _cmds_per_sec(best[r.name]):
                 best[r.name] = r
         rows = [best[r.name] for r in rows]
+    if args.json_out:
+        common.dump_rows(rows, args.json_out)
     if args.write_baseline:
-        with open(args.write_baseline, "w") as f:
-            json.dump({r.name: _cmds_per_sec(r) for r in rows}, f, indent=1)
-        print(f"# baseline written to {args.write_baseline}",
-              file=sys.stderr)
+        common.write_baseline(
+            args.write_baseline,
+            {r.name: _cmds_per_sec(r) for r in rows},
+            benchmark="dispatch_throughput", metric="cmds_per_sec",
+            direction="higher_is_better", tolerance=REGRESSION_TOLERANCE,
+            regenerate=REGENERATE)
     if args.baseline and not check_baseline(rows, args.baseline):
-        sys.exit(1)
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -28,9 +28,8 @@ more than 20% above the checked-in baseline (used by scripts/ci.sh).
 from __future__ import annotations
 
 import argparse
-import json
-import sys
 
+from benchmarks import common
 from benchmarks.common import ETH_1G, ETH_40G, GPU_2080TI, MiB, Row, emit
 from repro.core import ClientRuntime, ServerSpec
 
@@ -39,6 +38,8 @@ import numpy as np
 BIG = 32 * MiB            # shared weight buffer (≫ TCP_SNDBUF → chunked)
 KERNELS_PER_SERVER = 2    # back-to-back consumers → coalescing candidates
 REGRESSION_TOLERANCE = 0.20
+REGENERATE = ("python -m benchmarks.migration_pipeline "
+              "--write-baseline benchmarks/BENCH_migration.json")
 
 
 def _measure(n_srv: int, peer_transport: str) -> Row:
@@ -103,30 +104,16 @@ def run():
 
 
 def _sim_ms(row: Row) -> float:
-    for part in row.derived.split(";"):
-        if part.startswith("sim_ms="):
-            return float(part.split("=")[1])
-    raise ValueError(f"no sim_ms in {row.derived!r}")
+    return common.derived(row, "sim_ms")
 
 
 def check_baseline(rows, baseline_path: str) -> bool:
     """Simulated time is deterministic, so any slowdown is a real model
     regression (lower is better — the inverse of the dispatch gate)."""
-    with open(baseline_path) as f:
-        baseline = json.load(f)
-    ok = True
-    for row in rows:
-        want = baseline.get(row.name)
-        if want is None:
-            continue
-        got = _sim_ms(row)
-        ceil = want * (1.0 + REGRESSION_TOLERANCE)
-        status = "ok" if got <= ceil else "REGRESSION"
-        print(f"# {row.name}: {got:.3f} sim_ms vs baseline {want:.3f} "
-              f"(ceiling {ceil:.3f}) {status}", file=sys.stderr)
-        if got > ceil:
-            ok = False
-    return ok
+    return common.check_rows(rows, baseline_path, extract=_sim_ms,
+                             tolerance=REGRESSION_TOLERANCE,
+                             direction="lower_is_better", unit=" sim_ms",
+                             benchmark="migration_pipeline")
 
 
 def main() -> None:
@@ -135,15 +122,20 @@ def main() -> None:
                     help="JSON {row_name: sim_ms}; fail on >20%% regression")
     ap.add_argument("--write-baseline", default=None,
                     help="write measured sim_ms to this JSON path")
+    ap.add_argument("--json-out", default=None,
+                    help="write the result rows to this JSON path")
     args = ap.parse_args()
     rows = run()
+    if args.json_out:
+        common.dump_rows(rows, args.json_out)
     if args.write_baseline:
-        with open(args.write_baseline, "w") as f:
-            json.dump({r.name: _sim_ms(r) for r in rows}, f, indent=1)
-        print(f"# baseline written to {args.write_baseline}",
-              file=sys.stderr)
+        common.write_baseline(
+            args.write_baseline, {r.name: _sim_ms(r) for r in rows},
+            benchmark="migration_pipeline", metric="sim_ms",
+            direction="lower_is_better", tolerance=REGRESSION_TOLERANCE,
+            regenerate=REGENERATE)
     if args.baseline and not check_baseline(rows, args.baseline):
-        sys.exit(1)
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -21,24 +21,33 @@ Rows:
   server with a deep backlog of 8 ms kernels while 8 light UEs run
   frames. FIFO head-of-line blocks the collocated tenants for the whole
   backlog; DRR bounds their p95 to ~one straggler kernel.
+* ``mt_dedup_private`` / ``mt_dedup_shared`` (DESIGN.md §5): 32 UEs load
+  ONE identical 2 MiB model (read-only inference weights) and roam.
+  Private copies push the same bytes through every radio and across the
+  peer mesh once per UE; the content-addressed store collapses them to
+  one upload per server and zero roam migrations. ``reduction`` is the
+  relative cut in payload wire bytes (uploads + migrations), gated ≥ 40%
+  against ``benchmarks/BENCH_dedup.json`` alongside the sim-time rows.
 
   PYTHONPATH=src python -m benchmarks.multi_tenant \
-      [--baseline benchmarks/BENCH_multitenant.json] [--write-baseline P]
+      [--baseline benchmarks/BENCH_multitenant.json] \
+      [--dedup-baseline benchmarks/BENCH_dedup.json] [--write-baseline P]
 
 With ``--baseline``, exits non-zero if any row's simulated drain time
 regresses more than 20% above the checked-in baseline, or if the
 acceptance floors fail (efficiency ≥ 0.70, p95 spread ≤ 0.25, DRR
-straggler p95 below half the FIFO one). Simulated time is deterministic,
-so the baseline is portable (used by scripts/ci.sh).
+straggler p95 below half the FIFO one, dedup payload reduction ≥ 40%).
+Simulated time is deterministic, so the baseline is portable (used by
+scripts/ci.sh).
 """
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import ETH_40G, GPU_2080TI, MiB, Row, WIFI6, emit
 from repro.core import ClientRuntime, Cluster, ServerSpec
 
@@ -56,17 +65,25 @@ STRAGGLER_KERNELS = 100
 STRAGGLER_WINDOW = 6            # heavy kernels kept in flight
 STRAGGLER_FRAMES = 12           # light-UE frames in the straggler rows
 T_STRAGGLER = 8e-3
+DEDUP_UES = 32
+DEDUP_FRAMES = 8
 REGRESSION_TOLERANCE = 0.20
 EFFICIENCY_FLOOR = 0.70
 SPREAD_CEILING = 0.25
+DEDUP_REDUCTION_FLOOR = 0.40
+REGENERATE = ("python -m benchmarks.multi_tenant "
+              "--write-baseline benchmarks/BENCH_multitenant.json")
+REGENERATE_DEDUP = ("python -m benchmarks.multi_tenant "
+                    "--write-dedup-baseline benchmarks/BENCH_dedup.json")
 
 
-def _mk_cluster(peer_transport: str, scheduler: str) -> Cluster:
+def _mk_cluster(peer_transport: str, scheduler: str,
+                store: bool = False) -> Cluster:
     return Cluster([ServerSpec(f"s{i}", [GPU_2080TI])
                     for i in range(N_SERVERS)],
                    peer_link=ETH_40G, peer_transport=peer_transport,
                    scheduler=scheduler, scheduler_quantum=QUANTUM,
-                   nic_bandwidth=NIC_BW)
+                   nic_bandwidth=NIC_BW, store=store)
 
 
 class UE:
@@ -74,13 +91,19 @@ class UE:
     when the previous read lands (self-paced under contention)."""
 
     def __init__(self, cluster: Cluster, idx: int, frames: int = FRAMES,
-                 roam: bool = True):
+                 roam: bool = True, shared_model: bool = False):
         self.rt = ClientRuntime(cluster=cluster, client_link=WIFI6,
                                 transport="tcp", name=f"ue{idx}")
+        self.idx = idx
         self.primary = f"s{idx % N_SERVERS}"
         self.secondary = f"s{(idx + 1) % N_SERVERS}"
         self.frames = frames
         self.roam = roam and N_SERVERS > 1
+        # shared_model: the 2 MiB model is read-only inference weights,
+        # bit-identical across every UE (the §5 dedup scenario) — the
+        # kernel no longer clobbers it, and each frame's depth map is
+        # unique so only the model is cross-tenant redundant
+        self.shared_model = shared_model
         self.latencies: list = []
         self.depth = self.rt.create_buffer(DEPTH_BYTES)
         self.index = self.rt.create_buffer(DEPTH_BYTES)
@@ -118,12 +141,22 @@ class UE:
         # a hand-off finds the model invalid on srv (the kernel clobbers
         # it every frame), so enqueue_kernel adds an implicit migration
         self.commands += 3 + (srv not in self.model.valid_on)
-        e1 = rt.enqueue_write(srv, self.depth, self._depth_data)
-        # the sort consumes the depth map + model and refreshes both the
-        # index buffer and the model, so a server hand-off re-migrates
+        if self.shared_model:
+            # unique per (UE, frame): depth maps are real sensor data
+            # and must never dedup — only the model is redundant
+            depth_data = np.full(DEPTH_BYTES // 4,
+                                 self.idx * 65536 + i, np.uint32)
+            outputs = [self.index]
+        else:
+            depth_data = self._depth_data
+            outputs = [self.index, self.model]
+        e1 = rt.enqueue_write(srv, self.depth, depth_data)
+        # the sort consumes the depth map + model and refreshes the
+        # index buffer — and, unless the model is shared read-only
+        # weights, the model too, so a server hand-off re-migrates
         e2 = rt.enqueue_kernel(srv, fn=None,
                                inputs=[self.depth, self.model],
-                               outputs=[self.index, self.model],
+                               outputs=outputs,
                                duration=T_KERNEL, wait_for=[e1],
                                name=f"sort{i}")
         e3 = rt.enqueue_read(srv, self.index, wait_for=[e2])
@@ -208,6 +241,37 @@ def _run_straggler(scheduler: str):
             "light_p95_min_ms": min(p95s)}
 
 
+def _run_shared_weights(dedup: bool) -> dict:
+    """32 UEs, ONE 2 MiB model (read-only weights): private copies vs
+    the content-addressed store (DESIGN.md §5). Reported payload bytes
+    are everything that crossed a wire as bulk data — radio uploads plus
+    peer-mesh migrations — and ``nic_busy`` is the shared egress ports'
+    cumulative occupancy."""
+    cluster = _mk_cluster("tcp", "drr", store=dedup)
+    ues = [UE(cluster, i, frames=DEDUP_FRAMES, shared_model=True)
+           for i in range(DEDUP_UES)]
+    cluster.run()                           # handshakes drained
+    t0 = cluster.clock.now
+    for i, ue in enumerate(ues):
+        ue.start(delay=i * STAGGER)
+    cluster.run()
+    elapsed = cluster.clock.now - t0
+    payload = 0.0
+    dedup_hits = 0
+    for u in ues:
+        st = u.rt.stats()
+        payload += st["bytes_on_wire"] + st["upload_bytes_on_wire"]
+        dedup_hits += st["dedup_hits"]
+    cst = cluster.stats()
+    return {
+        "sim_ms": elapsed * 1e3,
+        "payload_mb": payload / 1e6,
+        "nic_busy_ms": sum(cst["nic_busy"].values()) * 1e3,
+        "dedup_hits": dedup_hits,
+        "p95_ms": max(_percentiles(u.latencies)[1] for u in ues),
+    }
+
+
 def run():
     rows = []
     eff = {}
@@ -233,38 +297,43 @@ def run():
             f"sim_ms={r['sim_ms']:.3f};"
             f"light_p95_ms={r['light_p95_ms']:.3f};"
             f"light_p95_min_ms={r['light_p95_min_ms']:.3f}"))
+    private = _run_shared_weights(dedup=False)
+    shared = _run_shared_weights(dedup=True)
+    reduction = 1.0 - shared["payload_mb"] / private["payload_mb"]
+    nic_reduction = 1.0 - shared["nic_busy_ms"] / private["nic_busy_ms"]
+    rows.append(Row(
+        "mt_dedup_private", private["p95_ms"] * 1e3,
+        f"sim_ms={private['sim_ms']:.3f};"
+        f"payload_mb={private['payload_mb']:.1f};"
+        f"nic_busy_ms={private['nic_busy_ms']:.3f};"
+        f"p95_ms={private['p95_ms']:.3f}"))
+    rows.append(Row(
+        "mt_dedup_shared", shared["p95_ms"] * 1e3,
+        f"sim_ms={shared['sim_ms']:.3f};"
+        f"payload_mb={shared['payload_mb']:.1f};"
+        f"nic_busy_ms={shared['nic_busy_ms']:.3f};"
+        f"p95_ms={shared['p95_ms']:.3f};"
+        f"dedup_hits={shared['dedup_hits']};"
+        f"reduction={reduction:.3f};nic_reduction={nic_reduction:.3f}"))
     return emit(rows)
 
 
-def _derived(row: Row, key: str) -> float:
-    for part in row.derived.split(";"):
-        if part.startswith(key + "="):
-            return float(part.split("=")[1])
-    raise ValueError(f"no {key} in {row.derived!r}")
+_derived = common.derived     # back-compat alias (tests, older callers)
 
 
 def check_baseline(rows, baseline_path: str) -> bool:
-    with open(baseline_path) as f:
-        baseline = json.load(f)
     by_name = {r.name: r for r in rows}
-    ok = True
-    for row in rows:
-        want = baseline.get(row.name)
-        if want is None:
-            continue
-        got = _derived(row, "sim_ms")
-        ceil = want * (1.0 + REGRESSION_TOLERANCE)
-        status = "ok" if got <= ceil else "REGRESSION"
-        print(f"# {row.name}: {got:.3f} sim_ms vs baseline {want:.3f} "
-              f"(ceiling {ceil:.3f}) {status}", file=sys.stderr)
-        if got > ceil:
-            ok = False
+    ok = common.check_rows(rows, baseline_path,
+                           extract=lambda r: common.derived(r, "sim_ms"),
+                           tolerance=REGRESSION_TOLERANCE,
+                           direction="lower_is_better", unit=" sim_ms",
+                           benchmark="multi_tenant")
     # acceptance floors (ISSUE 3): scaling efficiency, fairness spread,
     # and the fair policy actually bounding the straggler tail
     for tr in ("tcp", "rdma"):
         row = by_name[f"mt_32ue_{tr}"]
-        eff = _derived(row, "eff")
-        spread = _derived(row, "p95_spread")
+        eff = common.derived(row, "eff")
+        spread = common.derived(row, "p95_spread")
         if eff < EFFICIENCY_FLOOR:
             print(f"# {row.name}: efficiency {eff:.3f} < "
                   f"{EFFICIENCY_FLOOR} FLOOR", file=sys.stderr)
@@ -273,12 +342,33 @@ def check_baseline(rows, baseline_path: str) -> bool:
             print(f"# {row.name}: p95 spread {spread:.3f} > "
                   f"{SPREAD_CEILING} CEILING", file=sys.stderr)
             ok = False
-    fifo = _derived(by_name["mt_straggler_fifo"], "light_p95_ms")
-    drr = _derived(by_name["mt_straggler_drr"], "light_p95_ms")
+    fifo = common.derived(by_name["mt_straggler_fifo"], "light_p95_ms")
+    drr = common.derived(by_name["mt_straggler_drr"], "light_p95_ms")
     if not drr < 0.5 * fifo:
         print(f"# straggler: drr p95 {drr:.3f} ms not < half of fifo "
               f"{fifo:.3f} ms", file=sys.stderr)
         ok = False
+    return ok
+
+
+def check_dedup_baseline(rows, baseline_path: str) -> bool:
+    """Gate the shared-weights scenario (ISSUE 4): sim-time regressions
+    on both rows, plus the acceptance floor — the store must cut payload
+    wire bytes by ≥ 40% vs private copies."""
+    ok = common.check_rows(rows, baseline_path,
+                           extract=lambda r: common.derived(r, "sim_ms"),
+                           tolerance=REGRESSION_TOLERANCE,
+                           direction="lower_is_better", unit=" sim_ms",
+                           benchmark="multi_tenant (shared-weights dedup)")
+    shared = next(r for r in rows if r.name == "mt_dedup_shared")
+    reduction = common.derived(shared, "reduction")
+    if reduction < DEDUP_REDUCTION_FLOOR:
+        print(f"# mt_dedup_shared: payload reduction {reduction:.3f} < "
+              f"{DEDUP_REDUCTION_FLOOR} FLOOR", file=sys.stderr)
+        ok = False
+    else:
+        print(f"# mt_dedup_shared: payload reduction {reduction:.3f} "
+              f"(floor {DEDUP_REDUCTION_FLOOR}) ok", file=sys.stderr)
     return ok
 
 
@@ -287,18 +377,42 @@ def main() -> None:
     ap.add_argument("--baseline", default=None,
                     help="JSON {row_name: sim_ms}; fail on >20%% "
                          "regression or acceptance-floor violation")
+    ap.add_argument("--dedup-baseline", default=None,
+                    help="BENCH_dedup.json; also gates the ≥40%% payload "
+                         "reduction floor")
     ap.add_argument("--write-baseline", default=None,
                     help="write measured sim_ms to this JSON path")
+    ap.add_argument("--write-dedup-baseline", default=None,
+                    help="write the dedup rows' sim_ms to this JSON path")
+    ap.add_argument("--json-out", default=None,
+                    help="write the result rows to this JSON path")
     args = ap.parse_args()
     rows = run()
+    dedup_rows = [r for r in rows if r.name.startswith("mt_dedup_")]
+    main_rows = [r for r in rows if not r.name.startswith("mt_dedup_")]
+    if args.json_out:
+        common.dump_rows(rows, args.json_out)
     if args.write_baseline:
-        with open(args.write_baseline, "w") as f:
-            json.dump({r.name: _derived(r, "sim_ms") for r in rows}, f,
-                      indent=1)
-        print(f"# baseline written to {args.write_baseline}",
-              file=sys.stderr)
-    if args.baseline and not check_baseline(rows, args.baseline):
-        sys.exit(1)
+        common.write_baseline(
+            args.write_baseline,
+            {r.name: common.derived(r, "sim_ms") for r in main_rows},
+            benchmark="multi_tenant", metric="sim_ms",
+            direction="lower_is_better", tolerance=REGRESSION_TOLERANCE,
+            regenerate=REGENERATE)
+    if args.write_dedup_baseline:
+        common.write_baseline(
+            args.write_dedup_baseline,
+            {r.name: common.derived(r, "sim_ms") for r in dedup_rows},
+            benchmark="multi_tenant (shared-weights dedup)",
+            metric="sim_ms", direction="lower_is_better",
+            tolerance=REGRESSION_TOLERANCE, regenerate=REGENERATE_DEDUP)
+    ok = True
+    if args.baseline:
+        ok = check_baseline(main_rows, args.baseline) and ok
+    if args.dedup_baseline:
+        ok = check_dedup_baseline(dedup_rows, args.dedup_baseline) and ok
+    if not ok:
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

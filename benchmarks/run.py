@@ -4,6 +4,13 @@ Prints ``name,us_per_call,derived`` CSV rows and writes
 benchmarks/results.json (consumed by EXPERIMENTS.md).
 
   PYTHONPATH=src python -m benchmarks.run [--only fig11]
+
+``--check-baselines`` instead validates every ``benchmarks/BENCH_*.json``
+regression baseline against the shared schema (``common.py``: ``_meta``
+stamp with schema version, owning benchmark, metric, direction,
+tolerance, regeneration command; positive finite row values) and exits
+non-zero on any drift — scripts/ci.sh runs it before the gated smokes so
+a mangled baseline fails fast instead of silently gating nothing.
 """
 from __future__ import annotations
 
@@ -31,12 +38,43 @@ MODULES = [
 ]
 
 
+def check_baselines() -> int:
+    """Validate every BENCH_*.json against the shared baseline schema;
+    returns the number of invalid files (0 = all good)."""
+    import glob
+
+    from benchmarks import common
+
+    paths = sorted(glob.glob(os.path.join(
+        os.path.dirname(__file__), "BENCH_*.json")))
+    if not paths:
+        print("no BENCH_*.json baselines found", file=sys.stderr)
+        return 1
+    bad = 0
+    for path in paths:
+        errs = common.validate_baseline(path)
+        rel = os.path.relpath(path)
+        if errs:
+            bad += 1
+            for e in errs:
+                print(f"# {rel}: {e}", file=sys.stderr)
+            print(f"# {rel}: INVALID", file=sys.stderr)
+        else:
+            print(f"# {rel}: ok", file=sys.stderr)
+    return bad
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--check-baselines", action="store_true",
+                    help="validate benchmarks/BENCH_*.json against the "
+                         "shared schema and exit")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "results.json"))
     args = ap.parse_args()
+    if args.check_baselines:
+        sys.exit(1 if check_baselines() else 0)
 
     import importlib
     all_rows = []

@@ -1,23 +1,36 @@
 #!/usr/bin/env bash
 # Tier-1 tests + hot-path smokes with regression gates.
 #
-#   scripts/ci.sh
+#   scripts/ci.sh [--simtime-only]
 #
-# Fails if any test fails, any benchmark errors, dispatch throughput
-# regresses >20% below benchmarks/BENCH_dispatch.json, or the migration
-# data-plane's simulated drain time regresses >20% above
-# benchmarks/BENCH_migration.json (regenerate baselines with:
-#   python -m benchmarks.dispatch_throughput --smoke \
-#       --write-baseline benchmarks/BENCH_dispatch.json
-#   python -m benchmarks.migration_pipeline \
-#       --write-baseline benchmarks/BENCH_migration.json
-#   python -m benchmarks.multi_tenant \
-#       --write-baseline benchmarks/BENCH_multitenant.json
-# — the dispatch baseline is wall-clock and host-specific; the migration
-# and multi-tenant baselines are simulated time and portable).
+# Fails if any baseline file fails the shared schema check, any test
+# fails, any benchmark errors, dispatch throughput regresses >20% below
+# benchmarks/BENCH_dispatch.json, or any simulated-time gate regresses
+# >20% against its baseline (migration data plane, multi-tenant
+# scaling/fairness, shared-weights dedup — the dedup gate also enforces
+# the >=40% payload-reduction floor). Regenerate baselines with the
+# "regenerate" command stamped inside each BENCH_*.json.
+#
+# The dispatch gate measures WALL-CLOCK commands/sec and is therefore
+# host-specific; on shared/virtualized runners it flakes through no
+# fault of the code. CI_SKIP_WALLCLOCK=1 (or --simtime-only) keeps the
+# dispatch smoke but drops its baseline comparison, while every
+# simulated-time gate — deterministic and portable — still gates.
+# .github/workflows/ci.yml runs this script in that mode.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+SIMTIME_ONLY=${CI_SKIP_WALLCLOCK:-0}
+if [[ "${1:-}" == "--simtime-only" ]]; then
+    SIMTIME_ONLY=1
+fi
+
+ARTIFACTS=benchmarks/ci-results
+mkdir -p "$ARTIFACTS"
+
+echo "== baseline schema check =="
+python -m benchmarks.run --check-baselines
 
 echo "== tier-1 tests =="
 python -m pytest -x -q
@@ -25,16 +38,26 @@ python -m pytest -x -q
 echo "== fig8 command-overhead smoke =="
 python -m benchmarks.cmd_overhead
 
-echo "== dispatch throughput smoke (20% regression gate) =="
-python -m benchmarks.dispatch_throughput --smoke --trials 3 \
-    --baseline benchmarks/BENCH_dispatch.json
+if [[ "$SIMTIME_ONLY" == "1" ]]; then
+    echo "== dispatch throughput smoke (wall-clock gate SKIPPED) =="
+    python -m benchmarks.dispatch_throughput --smoke \
+        --json-out "$ARTIFACTS/dispatch.json"
+else
+    echo "== dispatch throughput smoke (20% regression gate) =="
+    python -m benchmarks.dispatch_throughput --smoke --trials 3 \
+        --baseline benchmarks/BENCH_dispatch.json \
+        --json-out "$ARTIFACTS/dispatch.json"
+fi
 
 echo "== migration data-plane smoke (20% regression gate) =="
 python -m benchmarks.migration_pipeline \
-    --baseline benchmarks/BENCH_migration.json
+    --baseline benchmarks/BENCH_migration.json \
+    --json-out "$ARTIFACTS/migration.json"
 
-echo "== multi-tenant smoke (20% regression gate + acceptance floors) =="
+echo "== multi-tenant + dedup smoke (20% gates + acceptance floors) =="
 python -m benchmarks.multi_tenant \
-    --baseline benchmarks/BENCH_multitenant.json
+    --baseline benchmarks/BENCH_multitenant.json \
+    --dedup-baseline benchmarks/BENCH_dedup.json \
+    --json-out "$ARTIFACTS/multi_tenant.json"
 
 echo "ci.sh: all checks passed"

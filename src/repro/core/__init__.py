@@ -11,5 +11,7 @@ from repro.core.runtime import (ClientRuntime, Cluster,  # noqa: F401
                                 ServerHost, ServerSpec)
 from repro.core.scheduler import (DeviceScheduler, DRRPolicy,  # noqa: F401
                                   FIFOPolicy, make_policy)
+from repro.core.store import (BufferStore, StoreEntry,  # noqa: F401
+                              content_digest)
 from repro.core.transport import (RDMATransport, TCPTransport,  # noqa: F401
                                   make_transport)

@@ -33,6 +33,11 @@ class Buffer:
     # arrival-side validity update is only honored when the version still
     # matches the snapshot.
     version: int = 0
+    # content-addressed store attachment (DESIGN.md §5): digest of the
+    # content this buffer shares through the cluster's BufferStore, or
+    # None when private. Managed by the store (attach/detach/cow_fork);
+    # a write always forks the buffer back to private first.
+    store_key: Optional[bytes] = None
 
     def transfer_bytes(self) -> float:
         """Bytes a migration must move (content-size aware). Clamped to

@@ -89,13 +89,18 @@ class NIC:
     the pre-NIC model let a busy server skip entirely.
     """
 
-    __slots__ = ("bandwidth", "name", "_busy_until", "bytes_sent")
+    __slots__ = ("bandwidth", "name", "_busy_until", "bytes_sent",
+                 "busy_time")
 
     def __init__(self, bandwidth: float, name: str = ""):
         self.bandwidth = bandwidth
         self.name = name
         self._busy_until = 0.0
         self.bytes_sent = 0
+        # cumulative port occupancy (s): the shared-egress cost a tenant
+        # actually charges the host — the dedup benchmarks gate on its
+        # reduction, not just wall clock (DESIGN.md §5)
+        self.busy_time = 0.0
 
 class Link:
     """Point-to-point link with FIFO serialization + propagation latency.
@@ -121,6 +126,11 @@ class Link:
 
     def rtt(self) -> float:
         return 2.0 * self.latency
+
+    def close(self):
+        """Administratively down (tenant detach): later sends drop, and
+        unlike a transient ``up = False`` fault nothing re-raises it."""
+        self.up = False
 
     def send(self, nbytes: float, on_delivered: Callable,
              serialize_overhead: float = 0.0, egress: Optional[NIC] = None):
@@ -151,6 +161,7 @@ class Link:
             nic_end = nic_start + (nbytes / nic_bw if nic_bw > 0 else 0.0)
             egress._busy_until = nic_end
             egress.bytes_sent += nbytes
+            egress.busy_time += nic_end - nic_start
             busy = self._busy_until
             if busy > start:
                 start = busy
@@ -200,6 +211,7 @@ class Link:
         lat = self.latency
         rcv_free = 0.0
         total = 0.0
+        nic_occupied = 0.0
         for snd_cpu, wire_bytes, rcv_cpu in chunks:
             snd_free += snd_cpu                  # chunk copied/staged
             if egress is None:
@@ -212,6 +224,7 @@ class Link:
                 nic_start = snd_free if snd_free > nic_free else nic_free
                 nic_free = nic_start + (wire_bytes / nic_bw if nic_bw > 0
                                         else 0.0)
+                nic_occupied += nic_free - nic_start
                 start = nic_start if nic_start > wire_free else wire_free
                 wire_free = start + (wire_bytes / bw if bw > 0 else 0.0)
                 if nic_free > wire_free:
@@ -225,6 +238,7 @@ class Link:
         if egress is not None:
             egress._busy_until = nic_free
             egress.bytes_sent += total
+            egress.busy_time += nic_occupied
         self.bytes_sent += total
         self._schedule_at(rcv_free, on_delivered)
         return rcv_free

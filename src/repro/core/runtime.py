@@ -54,6 +54,17 @@ pluggable scheduler (FIFO baseline or weighted deficit-round-robin —
 ``src/repro/core/scheduler.py``). Constructing a ``ClientRuntime``
 without an explicit cluster builds a private one, preserving the
 original single-tenant API.
+
+Cross-tenant payloads deduplicate through the cluster's opt-in
+content-addressed buffer store (DESIGN.md §5, ``Cluster(store=True)``):
+identical uploads resolve to one shared physical replica set per server
+(command-only writes when resident, gating on in-flight copies when
+racing), migrations are served from or deduplicated against any
+tenant's valid replica, tenant writes copy-on-write fork shared content
+to private buffers, and ``ClientRuntime.detach()`` releases a tenant's
+sessions, run-queue entries, and store references so long-lived
+clusters shed departed UEs (unreferenced replicas evict LRU under the
+store's per-server capacity).
 """
 from __future__ import annotations
 
@@ -71,6 +82,7 @@ from repro.core.events import (COMPLETE, ERROR, QUEUED, RUNNING, SUBMITTED,
                                Event)
 from repro.core.netsim import NIC, DeviceSim, Link, SimClock
 from repro.core.scheduler import DeviceScheduler, make_policy
+from repro.core.store import BufferStore, DIGEST_BYTES, content_digest
 from repro.core.transport import (make_transport, wire_scale,
     CLIENT_SUBMIT, CLIENT_REAP, CMD_BYTES, DISPATCH, COMPLETE_WRITE)
 
@@ -148,14 +160,22 @@ class Cluster:
                  svm: bool = False,
                  scheduler: str = "fifo",
                  scheduler_quantum: Optional[float] = None,
-                 nic_bandwidth: Optional[float] = None):
+                 nic_bandwidth: Optional[float] = None,
+                 store: bool = False,
+                 store_capacity: Optional[float] = None):
         self.clock = SimClock()
         self.peer_transport = make_transport(peer_transport, svm)
         self.scheduler_policy = scheduler
         self.scheduler_quantum = scheduler_quantum
         self.nic_bandwidth = nic_bandwidth
+        # content-addressed cross-tenant buffer store (DESIGN.md §5):
+        # opt-in so a store-less cluster keeps private-copy semantics
+        # bit-exact (it is also the dedup benchmark's baseline)
+        self.store = (BufferStore(self.clock, store_capacity)
+                      if store or store_capacity is not None else None)
         self.hosts = {s.name: ServerHost(self, s) for s in servers}
         self.p_links: dict = {}
+        self._tenant_seq = 0      # monotonic: default names never recycle
         names = list(self.hosts)
         for i, a in enumerate(names):
             for b in names[i + 1:]:
@@ -187,8 +207,11 @@ class Cluster:
                           for d, sch in host.schedulers.items()},
             "nic_bytes": {h: (host.nic.bytes_sent if host.nic else 0)
                           for h, host in self.hosts.items()},
+            "nic_busy": {h: (host.nic.busy_time if host.nic else 0.0)
+                         for h, host in self.hosts.items()},
             "peer_link_bytes": {f"{a}-{b}": l.bytes_sent
                                 for (a, b), l in self.p_links.items()},
+            "store": self.store.stats() if self.store is not None else None,
         }
 
 
@@ -219,6 +242,10 @@ class ServerSim:
         classified by the client at enqueue time."""
         if ev.command.id in self.processed:   # replayed after reconnect
             return
+        if ev.status == ERROR:
+            # failed client-side while the command was on the wire
+            # (e.g. the tenant detached): never execute a dead command
+            return
         self.processed.add(ev.command.id)
         ev.status = SUBMITTED
         ev.t_submitted = self.rt.clock.now
@@ -226,7 +253,12 @@ class ServerSim:
         events = self.rt.events
         for dep_id, local in deps:
             dep = events.get(dep_id)
-            if dep is None or dep.status == COMPLETE or \
+            # ERROR counts as finished (the runtime's loose error-
+            # dependency semantics, like _join_events): a dep that
+            # failed while this command was on the wire must not leave
+            # the waiter registered on an event whose callbacks already
+            # flushed — that command would hang forever
+            if dep is None or dep.status in (COMPLETE, ERROR) or \
                     (not local and dep_id in self.resolved_remote):
                 if dep is not None:
                     dep.release()             # retained at _send_command
@@ -330,6 +362,12 @@ class ServerSim:
         self.host.schedulers[dname].submit(self, self.rt.weight, cost, run)
 
     def _complete(self, ev: Event):
+        if ev.status == ERROR:
+            # failed while executing or queued (tenant detach fails all
+            # live events; the non-preemptive in-service command still
+            # runs to completion) — completion is void, but the caller's
+            # device release must still run
+            return
         ev.complete(self.rt.clock.now)
         # resolve locally first: dependents on THIS server may have
         # classified the event as remote (e.g. a migration that finishes
@@ -390,7 +428,9 @@ class ClientRuntime:
                  replay_window: int = 64,
                  scheduler: Optional[str] = None,
                  scheduler_quantum: Optional[float] = None,
-                 nic_bandwidth: Optional[float] = None):
+                 nic_bandwidth: Optional[float] = None,
+                 store: Optional[bool] = None,
+                 store_capacity: Optional[float] = None):
         if completion_routing not in ("subscription", "broadcast"):
             raise ValueError(f"unknown completion_routing "
                              f"{completion_routing!r}")
@@ -406,7 +446,9 @@ class ClientRuntime:
                               peer_transport=peer_transport or transport,
                               svm=svm, scheduler=scheduler or "fifo",
                               scheduler_quantum=scheduler_quantum,
-                              nic_bandwidth=nic_bandwidth)
+                              nic_bandwidth=nic_bandwidth,
+                              store=bool(store),
+                              store_capacity=store_capacity)
         else:
             if servers is not None:
                 raise ValueError("pass either servers or cluster, not both")
@@ -414,7 +456,9 @@ class ClientRuntime:
                        "peer_transport": peer_transport,
                        "scheduler": scheduler,
                        "scheduler_quantum": scheduler_quantum,
-                       "nic_bandwidth": nic_bandwidth}
+                       "nic_bandwidth": nic_bandwidth,
+                       "store": store,
+                       "store_capacity": store_capacity}
             bad = [k for k, v in ignored.items() if v is not None]
             if bad:
                 # these configure the shared substrate — accepting them
@@ -426,7 +470,11 @@ class ClientRuntime:
                     f"attaching to an existing one")
         self.cluster = cluster
         self.clock = cluster.clock
-        self.name = name if name is not None else f"ue{len(cluster.clients)}"
+        # default names come from a monotonic counter, not the live
+        # client list — detach() shrinks the list, and a recycled "ue2"
+        # would alias a departed tenant in stats and error messages
+        self.name = name if name is not None else f"ue{cluster._tenant_seq}"
+        cluster._tenant_seq += 1
         self.weight = weight                  # fair-scheduler share
         self.transport = make_transport(transport, svm)
         self.peer_transport = cluster.peer_transport
@@ -467,9 +515,15 @@ class ClientRuntime:
         self._inflight_migrations: dict = {}
         # data-plane scoreboard (stats())
         self.bytes_on_wire = 0.0              # migration payload wire bytes
+        self.upload_bytes_on_wire = 0.0       # write payload wire bytes
         self.migrations_coalesced = 0         # requests served by in-flight
         self.chunks_in_flight = 0             # gauge: chunks on any link
         self.peak_chunks_in_flight = 0
+        # content-addressed store scoreboard (this tenant's share of the
+        # cluster counters in BufferStore.stats())
+        self.dedup_hits = 0                   # transfers served by a replica
+        self.dedup_bytes_saved = 0.0          # payload bytes never sent
+        self.detached = False                 # tenant lifecycle (detach())
         # connect (handshake: rtt + session id assignment) — run the
         # clock just far enough that all of THIS client's sessions are
         # established, as clCreateContext would block. A full drain here
@@ -542,6 +596,7 @@ class ClientRuntime:
                        name: str = "kernel") -> Event:
         """Enqueue a kernel; implicit migrations are added for any input
         not valid on the target server (standard OpenCL semantics)."""
+        self._check_live()
         if not self.sessions[server].available:
             raise DeviceUnavailable(server)
         deps = list(wait_for)
@@ -549,6 +604,17 @@ class ClientRuntime:
             if server not in b.valid_on:
                 deps.append(self.enqueue_migration(b, server,
                                                    wait_for=wait_for))
+        # copy-on-write (DESIGN.md §5): writing an output that holds
+        # shared content forks it to a private buffer first — the shared
+        # replicas stay intact for the other holders, and the fork's
+        # device-side copy (read + write of the buffer) is charged to
+        # this kernel's memory traffic (a ``duration`` override absorbs
+        # it, like every other analytic cost term)
+        store = self.cluster.store
+        if store is not None:
+            for b in outputs:
+                if store.cow_fork(b):
+                    bytes_moved += 2.0 * b.nbytes
         cmd = C.NDRangeKernel(fn=fn, inputs=tuple(inputs),
                               outputs=tuple(outputs), flops=flops,
                               bytes_moved=bytes_moved, duration=duration,
@@ -564,17 +630,119 @@ class ClientRuntime:
 
     def enqueue_write(self, server: str, buf: Buffer, data,
                       wait_for: Sequence[Event] = ()) -> Event:
+        self._check_live()
         cmd = C.WriteBuffer(buffer=buf, data=data,
                             nbytes=np.asarray(data).nbytes)
         ev = self._new_event(cmd, server)
-        self._send_command(ev, server, "", [d.id for d in wait_for],
-                           payload=cmd.nbytes)
+        dep_ids = [d.id for d in wait_for]
+        store = self.cluster.store
+        if store is not None and cmd.nbytes > 0:
+            self._send_write_via_store(ev, server, buf, cmd, dep_ids,
+                                       store)
+        else:
+            self._send_command(ev, server, "", dep_ids,
+                               payload=cmd.nbytes)
         buf.valid_on = {server, "client"}
         buf.version += 1        # eager: new contents are on their way
         return ev
 
+    def _record_dedup(self, store: BufferStore, entry, nbytes: float):
+        store.record_dedup(entry, nbytes)
+        self.dedup_hits += 1
+        self.dedup_bytes_saved += nbytes
+
+    def _unrecord_dedup(self, store: BufferStore, nbytes: float):
+        store.unrecord_dedup(nbytes)
+        self.dedup_hits -= 1
+        self.dedup_bytes_saved -= nbytes
+
+    def _send_write_via_store(self, ev: Event, server: str, buf: Buffer,
+                              cmd, dep_ids: list,
+                              store: BufferStore) -> None:
+        """Content-addressed upload (DESIGN.md §5). The payload digest is
+        computed at enqueue, like the command struct: if an identical
+        replica — any tenant's — is already resident on the target
+        server, only the command struct + digest cross the wire; if one
+        is in flight there, the command gates on its arrival instead of
+        re-sending the bytes; otherwise the payload is paid once and the
+        landed replica registers with the store for everyone after."""
+        key = content_digest(cmd.data)
+        entry = store.attach(buf, key, cmd.nbytes)
+        # +1 because enqueue_write bumps AFTER this resolution: the
+        # snapshot must equal the version this write itself installs,
+        # so only a LATER write of the buffer invalidates a gate
+        self._resolve_store_write(ev, server, buf, cmd, dep_ids, store,
+                                  entry, buf.version + 1)
+
+    def _resolve_store_write(self, ev: Event, server: str, buf: Buffer,
+                             cmd, dep_ids: list, store: BufferStore,
+                             entry, snap: int) -> None:
+        """Resolve a store-attached write against the entry's CURRENT
+        replica state (re-entered when a ride dies, so a fresh check —
+        a surviving rider may have restarted the upload we can gate
+        on instead of each rider paying its own copy). ``snap`` is the
+        buffer version this write installs: a later write bumping past
+        it supersedes this one while it gates."""
+        if server in entry.valid_on:
+            self._record_dedup(store, entry, cmd.nbytes)
+            self._send_command(ev, server, "", dep_ids,
+                               extra_wire=DIGEST_BYTES)
+            return
+        pend = entry.pending.get(server)
+        if pend is not None and pend.status not in (COMPLETE, ERROR):
+            self._record_dedup(store, entry, cmd.nbytes)
+
+            def after(_p):
+                if self.detached or ev.status in (COMPLETE, ERROR):
+                    # we left (detach failed our events) before ever
+                    # sending the dedup'd command: no write happened,
+                    # so no bytes were saved — take the claim back
+                    self._unrecord_dedup(store, cmd.nbytes)
+                    return
+                if buf.version != snap:
+                    # a newer write of this buffer was sent while we
+                    # gated: shipping the stale command now would invert
+                    # write-after-write order on the server (store-less
+                    # clusters send writes FIFO). The content this write
+                    # carried is superseded — complete as a no-op
+                    ev.complete(self.clock.now)
+                    self._route_completion_via_client(ev)
+                    ev.release()    # client observed completion directly
+                    return
+                if server in entry.valid_on:
+                    self._send_command(ev, server, "", dep_ids,
+                                       extra_wire=DIGEST_BYTES)
+                else:
+                    # the transfer we gated on never landed (dropped
+                    # link or stale payload): the claimed saving did not
+                    # materialize — take it back and resolve again
+                    self._unrecord_dedup(store, cmd.nbytes)
+                    self._resolve_store_write(ev, server, buf, cmd,
+                                              dep_ids, store, entry,
+                                              snap)
+
+            pend.on_complete(after)
+            return
+        self._send_upload(ev, server, cmd, dep_ids, store, entry)
+
+    def _send_upload(self, ev: Event, server: str, cmd, dep_ids: list,
+                     store: BufferStore, entry) -> None:
+        def landed(_e):
+            if _e.status == COMPLETE:
+                store.replica_landed(entry, server)
+
+        # landed BEFORE add_pending: its clear-callback garbage-collects
+        # entries with no refs/replicas/pendings, and if the buffer was
+        # rewritten mid-upload (refs empty) the replica must register
+        # first — otherwise replica_landed resurrects a popped entry and
+        # its resident bytes leak forever
+        ev.on_complete(landed)
+        store.add_pending(entry, server, ev)
+        self._send_command(ev, server, "", dep_ids, payload=cmd.nbytes)
+
     def enqueue_read(self, server: str, buf: Buffer,
                      wait_for: Sequence[Event] = ()) -> Event:
+        self._check_live()
         cmd = C.ReadBuffer(buffer=buf)
         ev = self._new_event(cmd, server)
         self._send_command(ev, server, "", [d.id for d in wait_for])
@@ -594,14 +762,21 @@ class ClientRuntime:
         event sees exactly the bytes it asked for. When several replicas
         exist, the source is the server with the cheapest estimated
         delivery (``_pick_migration_source``), not set order."""
+        self._check_live()
         if dst in buf.valid_on:
             ev = self._new_event(C.Marker(), dst)
             ev.complete(self.clock.now)
             ev.release()            # completed on the client: no ack cycle
             return ev
+        store = self.cluster.store
+        sentry = store.entry_for(buf) if store is not None else None
         key = (buf.id, dst)
         entry = self._inflight_migrations.get(key)
         if entry is not None:
+            # our OWN transfer of these bytes is already on the wire:
+            # coalesce (store-less semantics) BEFORE the store's
+            # resident-dedup check — claiming a saving here would
+            # double-book bytes this tenant is simultaneously paying
             pending, version = entry
             if version == buf.version and \
                     pending.status not in (COMPLETE, ERROR):
@@ -614,7 +789,42 @@ class ClientRuntime:
                 # returned handle must honor the caller's wait list like
                 # a non-coalesced migration would
                 return self._join_events([pending, *live])
+        if sentry is not None and dst in sentry.valid_on:
+            # identical content is already resident on dst — uploaded or
+            # migrated there by ANY tenant — so nothing needs to move;
+            # the §5 content-addressed analogue of `dst in buf.valid_on`
+            self._record_dedup(store, sentry, buf.transfer_bytes())
+            buf.valid_on.add(dst)
+            ev = self._new_event(C.Marker(), dst)
+            ev.complete(self.clock.now)
+            ev.release()            # completed on the client: no ack cycle
+            return ev
+        if sentry is not None:
+            pend = sentry.pending.get(dst)
+            if pend is not None and pend.status not in (COMPLETE, ERROR):
+                # identical content is already on the wire to dst —
+                # another tenant's upload or migration (our own transfers
+                # were caught by the per-tenant table above): ride it
+                # instead of pushing the payload again
+                self._record_dedup(store, sentry, buf.transfer_bytes())
+                ride = self._ride_pending_replica(sentry, pend, buf, dst)
+                # the ride joins the per-tenant in-flight table like a
+                # real migration: a back-to-back request for the same
+                # (buf, dst) coalesces onto it (counted under
+                # migrations_coalesced) instead of opening a second
+                # ride and double-claiming the dedup saving
+                self._track_inflight(key, ride, buf.version)
+                live = [d for d in wait_for
+                        if d.status not in (COMPLETE, ERROR)]
+                if not live:
+                    return ride
+                return self._join_events([ride, *live])
         srcs = [s for s in buf.valid_on if s != "client"]
+        if sentry is not None and sentry.valid_on:
+            # §5 replica-aware sourcing across tenants: any server
+            # holding a valid replica of this content can serve the
+            # push, not just the ones this tenant put it on
+            srcs = sorted({*srcs, *sentry.valid_on})
         if not srcs:  # client-held data: plain upload
             return self.enqueue_write(dst, buf, buf.data
                                       if buf.data is not None
@@ -624,12 +834,16 @@ class ClientRuntime:
         if self.p2p_migration:
             ev = self._new_event(cmd, src)
             self._track_inflight(key, ev, buf.version)
+            if sentry is not None:
+                store.add_pending(sentry, dst, ev)
             self._send_command(ev, src, "", [d.id for d in wait_for])
             return ev
         # naive: read back to client, then write to dst
         rd = self.enqueue_read(src, buf, wait_for=wait_for)
         wr_ev = self._new_event(cmd, dst)
         self._track_inflight(key, wr_ev, buf.version)
+        if sentry is not None:
+            store.add_pending(sentry, dst, wr_ev)
 
         def after_read(rd_ev):
             if rd_ev.status == ERROR:
@@ -724,6 +938,72 @@ class ClientRuntime:
             e.on_complete(one_done)     # fires now if already finished
         return join
 
+    def _check_live(self):
+        if self.detached:
+            raise DeviceUnavailable(
+                f"{self.name} (tenant detached from cluster)")
+
+    def _ride_pending_replica(self, sentry, pending: Event, buf: Buffer,
+                              dst: str) -> Event:
+        """Identical content is already in flight to ``dst`` on another
+        tenant's transfer: return a tenant-local event that completes
+        when it lands (cross-tenant coalescing, DESIGN.md §5). The
+        foreign event cannot be returned directly — dependency
+        classification and completion routing resolve through THIS
+        tenant's event table. If the ride dies under us (dropped link,
+        payload gone stale) a real migration runs as fallback."""
+        ev = self._register_event(Event(user=True, server="client"))
+        snap = buf.version
+        saved = buf.transfer_bytes()    # what the caller counted as saved
+
+        def settle(_p):
+            if self.detached or ev.status in (COMPLETE, ERROR):
+                # we left (detach failed our events) before the ride
+                # resolved: the claimed saving never materialized —
+                # no migration of ours completed
+                self._unrecord_dedup(self.cluster.store, saved)
+                return
+            now = self.clock.now
+            landed = dst in sentry.valid_on
+            if landed and buf.version == snap:
+                buf.valid_on.add(dst)
+            if landed or buf.version != snap:
+                # delivered — or our buffer was rewritten while riding,
+                # which voids the ordering contract exactly like the
+                # eager clobber does on a private migration
+                if not landed:
+                    # ride died after our buffer moved on: nothing was
+                    # transferred or avoided — take the credit back
+                    self._unrecord_dedup(self.cluster.store, saved)
+                ev.complete(now)
+                self._route_completion_via_client(ev)
+                ev.release()        # client observed completion directly
+                return
+            # the ride died: the claimed saving did not materialize —
+            # take it back before the real migration (which re-counts
+            # only if it genuinely dedups). The ride must leave the
+            # per-tenant in-flight table first: the retry would
+            # otherwise coalesce onto the ride itself (same key, same
+            # version) and wait on an event only IT can complete
+            self._unrecord_dedup(self.cluster.store, saved)
+            self._drop_inflight((buf.id, dst), ev)
+            retry = self.enqueue_migration(buf, dst)
+
+            def mirror(r):
+                if ev.status in (COMPLETE, ERROR):
+                    return
+                if r.status == ERROR:
+                    ev.fail(self.clock.now, r.error or "migration failed")
+                else:
+                    ev.complete(self.clock.now)
+                self._route_completion_via_client(ev)
+                ev.release()        # client observed completion directly
+
+            retry.on_complete(mirror)
+
+        pending.on_complete(settle)
+        return ev
+
     def _fail_dropped_migration(self, ev: Event, dst: str):
         """A migration payload dropped on a dead link can never be
         re-sent (the daemon already marked the command processed, so a
@@ -788,6 +1068,7 @@ class ClientRuntime:
         def arrived():
             if buf.version == version:   # not clobbered while in flight
                 buf.valid_on.add(dst)
+                self._store_replica_landed(buf, dst)
             # completes on the destination daemon like any other server-
             # side command, sharing the completion-routing logic
             # (subscription vs broadcast) with every other path
@@ -806,7 +1087,8 @@ class ClientRuntime:
 
     # ---- wire ----
     def _send_command(self, ev: Event, server: str, device: str,
-                      dep_ids: list, payload: float = 0.0):
+                      dep_ids: list, payload: float = 0.0,
+                      extra_wire: float = 0.0):
         # classify deps at enqueue time: already-finished ones are
         # dropped from the wire message; live ones are retained (they
         # must stay resolvable until this command dispatches) and, when
@@ -819,8 +1101,8 @@ class ClientRuntime:
                     continue
                 seen.add(dep_id)
                 dep = self.events.get(dep_id)
-                if dep is None or dep.status == COMPLETE:
-                    continue
+                if dep is None or dep.status in (COMPLETE, ERROR):
+                    continue          # finished (error counts): no wire dep
                 dep.retain()
                 local = dep.server == server
                 if not local and self.completion_routing == "subscription":
@@ -843,8 +1125,12 @@ class ClientRuntime:
                     DISPATCH,
                     self.servers[server].receive_command, ev, device, deps)
 
-            link.send_chunked(chunks, deliver_chunked,
-                              serialize_overhead=CLIENT_SUBMIT + fixed)
+            if link.send_chunked(chunks, deliver_chunked,
+                                 serialize_overhead=CLIENT_SUBMIT + fixed) \
+                    is not None:
+                # count only bytes that actually went out (a down link
+                # drops the send) — mirrors bytes_on_wire's accounting
+                self.upload_bytes_on_wire += payload * scale
             return
         cost = self.transport.command_cost(payload)
 
@@ -853,8 +1139,8 @@ class ClientRuntime:
                 cost.receiver_cpu + DISPATCH,
                 self.servers[server].receive_command, ev, device, deps)
 
-        link.send(cost.wire_bytes * wire_scale(self.transport,
-                                               link.bandwidth),
+        link.send((cost.wire_bytes + extra_wire)
+                  * wire_scale(self.transport, link.bandwidth),
                   deliver,
                   serialize_overhead=CLIENT_SUBMIT + cost.sender_cpu)
 
@@ -887,12 +1173,27 @@ class ClientRuntime:
         def arrived():
             if buf.version == version:   # not clobbered while in flight
                 buf.valid_on.add(dst)
+                self._store_replica_landed(buf, dst)
             ev.server = dst
             self.servers[dst]._complete(ev)
 
         if not self._send_migration_chunks(link, tr, nbytes, reg, arrived,
                                            egress=src_srv.host.nic):
             self._fail_dropped_migration(ev, dst)
+
+    def _store_replica_landed(self, buf: Buffer, dst: str):
+        """A migration payload landed on ``dst`` with its version intact:
+        if the buffer shares content through the cluster store, the
+        arrival is a new physical replica of that content — register it
+        so any tenant's later request resolves there. (The version match
+        the callers establish guarantees the buffer is still attached to
+        the entry the bytes belong to.)"""
+        store = self.cluster.store
+        if store is None:
+            return
+        sentry = store.entry_for(buf)
+        if sentry is not None:
+            store.replica_landed(sentry, dst)
 
     def _start_read_return(self, srv: ServerSim, ev: Event):
         buf = ev.command.buffer
@@ -1001,10 +1302,71 @@ class ClientRuntime:
         else:
             self.clock.schedule_at(at, go)
 
+    def detach(self) -> None:
+        """Tenant lifecycle (DESIGN.md §5): release everything this
+        client holds on the shared cluster and leave it.
+
+        * Buffer references drop from the content-addressed store, so
+          replicas this tenant pinned become evictable (and dedup'able
+          by the tenants that remain).
+        * Server-side: the session ids leave every host's §4.3 session
+          table, this tenant's queued commands leave the device run
+          queues, and the per-session daemon state (replay dedup,
+          remote-resolution, waiter tables) is destroyed — a later
+          reattach presenting the same session id starts a FRESH
+          session; it must not resurrect the dedup'd replay state.
+        * Client-side: every live event fails with ``tenant detached``
+          (dependents and user callbacks observe ERROR, and other
+          tenants gated on this tenant's in-flight transfers fall back
+          to their own), the access links close, and the runtime
+          refuses further enqueues.
+
+        The in-service command on a device, if any, runs to completion
+        (the scheduler is non-preemptive) but completes into a failed
+        event, which is a no-op. Bystander tenants only ever shared the
+        clock, devices, NICs, and peer mesh — none of which detach
+        rewinds — so their timing is unperturbed beyond the freed
+        capacity."""
+        if self.detached:
+            return
+        self.detached = True
+        now = self.clock.now
+        cluster = self.cluster
+        if cluster.store is not None:
+            for b in self._buffers:
+                cluster.store.release(b)
+        for srv in self.servers.values():
+            host = srv.host
+            if srv.session_id is not None:
+                host.sessions.pop(srv.session_id, None)
+            for sch in host.schedulers.values():
+                sch.discard(srv)
+            srv.processed.clear()
+            srv.resolved_remote.clear()
+            srv._waiters.clear()
+            srv._ready.clear()
+            srv.session_id = None
+        for sess in self.sessions.values():
+            sess.available = False
+            sess.replay.clear()
+            sess.session_id = bytes(16)
+        for link in self.c_links.values():
+            link.close()
+        for ev in list(self.events.values()):
+            if ev.status not in (COMPLETE, ERROR):
+                ev.fail(now, f"tenant {self.name} detached")
+        self.events.clear()
+        self._subs.clear()
+        self._inflight_migrations.clear()
+        if self in cluster.clients:
+            cluster.clients.remove(self)
+
     def reconnect(self, server: str, at: Optional[float] = None):
         """Restore the link; replay unacknowledged commands (server dedupes
         by command id). The session ID survives even if the client's
         address changed."""
+        self._check_live()
+
         def go():
             link = self.c_links[server]
             link.up = True
@@ -1072,6 +1434,14 @@ class ClientRuntime:
     def run_local_fallback(self, fn, inputs, outputs, flops=0.0,
                            duration=None) -> Event:
         """Fig. 4: compute locally (reduced model) while remotes are gone."""
+        self._check_live()
+        fork_bytes = 0.0
+        if self.cluster.store is not None:
+            for b in outputs:       # local writes fork shared content too
+                if self.cluster.store.cow_fork(b):
+                    # same 2×nbytes device-copy charge as the server-side
+                    # kernel path (DESIGN.md §5)
+                    fork_bytes += 2.0 * b.nbytes
         ev = self._new_event(C.NDRangeKernel(fn=fn, inputs=tuple(inputs),
                                              outputs=tuple(outputs),
                                              flops=flops, duration=duration),
@@ -1090,7 +1460,7 @@ class ClientRuntime:
             self._route_completion_via_client(ev)
             ev.release()            # client observed completion directly
 
-        cost = self.local_device.kernel_cost(flops, 0.0, duration)
+        cost = self.local_device.kernel_cost(flops, fork_bytes, duration)
         ev.t_start, _ = self.local_device.execute(cost, done)
         return ev
 
@@ -1126,10 +1496,15 @@ class ClientRuntime:
                                  for s, sess in self.sessions.items()},
             # data-plane scoreboard (DESIGN.md §3)
             "bytes_on_wire": self.bytes_on_wire,
+            "upload_bytes_on_wire": self.upload_bytes_on_wire,
             "migrations_coalesced": self.migrations_coalesced,
             "chunks_in_flight": self.chunks_in_flight,
             "peak_chunks_in_flight": self.peak_chunks_in_flight,
             "migrations_inflight": len(self._inflight_migrations),
+            # content-addressed store scoreboard (DESIGN.md §5)
+            "dedup_hits": self.dedup_hits,
+            "dedup_bytes_saved": self.dedup_bytes_saved,
+            "detached": self.detached,
         }
 
 

@@ -50,13 +50,22 @@ class FIFOPolicy:
     __slots__ = ("_q",)
 
     def __init__(self):
-        self._q: deque = deque()
+        self._q: deque = deque()      # (tenant, run) in arrival order
 
     def push(self, tenant, weight: float, cost: float, run: Callable):
-        self._q.append(run)
+        self._q.append((tenant, run))
 
     def pop(self) -> Optional[Callable]:
-        return self._q.popleft() if self._q else None
+        return self._q.popleft()[1] if self._q else None
+
+    def remove(self, tenant) -> int:
+        """Drop every queued command of ``tenant`` (detach); returns the
+        number removed. The in-service command, if any, was already
+        popped and runs to completion (non-preemptive)."""
+        kept = [(t, r) for t, r in self._q if t is not tenant]
+        removed = len(self._q) - len(kept)
+        self._q = deque(kept)
+        return removed
 
     def __len__(self):
         return len(self._q)
@@ -145,6 +154,22 @@ class DRRPolicy:
                         (rounds - 1) * self.quantum * self._weights[x]
                 visited = 0
 
+    def remove(self, tenant) -> int:
+        """Drop ``tenant``'s queue, deficit, and ring slot (detach);
+        returns the number of queued commands removed. If the tenant was
+        at the ring head its latched grant is discarded with it."""
+        q = self._queues.pop(tenant, None)
+        self._weights.pop(tenant, None)
+        removed = len(q) if q else 0
+        if self._deficit.pop(tenant, None) is not None:
+            if self._ring and self._ring[0] is tenant:
+                self._granted = False
+            try:
+                self._ring.remove(tenant)
+            except ValueError:
+                pass
+        return removed
+
     def __len__(self):
         return sum(len(q) for q in self._queues.values())
 
@@ -184,6 +209,13 @@ class DeviceScheduler:
             self.queue_peak = backlog
         if not self._busy:
             self._dispatch()
+
+    def discard(self, tenant) -> int:
+        """Tenant lifecycle (detach): drop every command ``tenant`` still
+        has queued. The in-service command — already dispatched — runs to
+        completion; its events were failed by the caller, so completion
+        is a no-op there."""
+        return self.policy.remove(tenant)
 
     def _dispatch(self):
         run = self.policy.pop()

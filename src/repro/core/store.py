@@ -1,0 +1,234 @@
+"""Cluster-level content-addressed buffer store (DESIGN.md §5).
+
+PR 3 made the runtime multi-tenant, but every tenant still uploads its
+own private copy of identical payloads — 32 AR UEs loading the same
+model push the same bytes through the radio links and the shared NICs
+dozens of times, exactly the redundant-transfer cost the paper's P2P
+data plane exists to avoid (§IV, Fig. 11). The store keys uploads by a
+content digest computed at enqueue time: identical payloads resolve to
+one shared *physical* replica set per server, refcounted per attached
+logical buffer, with copy-on-write on tenant writes and LRU eviction of
+unreferenced replicas under a configurable per-server capacity.
+
+The store tracks *where content is resident* and what moving it costs;
+the canonical numpy array still lives on each ``Buffer`` (bit-identical
+across attached buffers by construction — same digest, same bytes), so
+nothing about the functional execution model changes. What changes is
+the wire: an upload whose content is already resident on the target
+server sends only the command struct + digest, an upload racing an
+identical in-flight copy gates on that transfer instead of re-sending
+the bytes, and a migration can be served from (or deduplicated against)
+*any* tenant's valid replica, not just the requesting tenant's.
+
+Sharing is deliberately opt-in (``Cluster(store=True)``): a cluster
+built without a store keeps the PR 3 private-copy behavior bit-exact,
+which is also the baseline the dedup benchmark measures against.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Optional
+
+import numpy as np
+
+from repro.core.buffers import Buffer
+
+# wire size of a content digest carried by a dedup'd (payload-free)
+# write command — the daemon needs it to resolve the shared replica
+DIGEST_BYTES = 16
+
+
+def content_digest(data) -> bytes:
+    """Digest of a payload's bytes + dtype (two buffers holding the same
+    raw bytes under different dtypes are different contents to a kernel).
+    Computed client-side at enqueue, like the command struct itself."""
+    arr = np.ascontiguousarray(data)
+    h = hashlib.blake2b(digest_size=DIGEST_BYTES)
+    h.update(str(arr.dtype).encode())
+    h.update(arr.data)      # zero-copy: hash the array's own buffer
+    return h.digest()
+
+
+class StoreEntry:
+    """One content hash's cluster-wide replica set."""
+
+    __slots__ = ("key", "nbytes", "refs", "valid_on", "pending",
+                 "last_used")
+
+    def __init__(self, key: bytes, nbytes: int):
+        self.key = key
+        self.nbytes = nbytes
+        self.refs: set = set()        # attached Buffer ids
+        self.valid_on: set = set()    # servers with a resident replica
+        self.pending: dict = {}       # server -> in-flight transfer Event
+        self.last_used = 0.0          # LRU clock (sim time)
+
+
+class BufferStore:
+    """Content digest → shared replica set, with per-buffer refcounts.
+
+    * ``attach``/``detach`` manage which logical buffers currently hold
+      the entry's content. A write to an attached buffer is always a
+      copy-on-write **fork**: the buffer detaches to a private copy (its
+      ``version`` bump is the runtime's existing clobber bookkeeping)
+      and the shared replicas stay intact for the other holders — a
+      shared physical allocation is never mutated in place.
+    * ``replica_landed`` records a physical replica arriving on a server
+      (upload completion or migration arrival) and charges it against
+      the per-server ``capacity``, evicting least-recently-used
+      **unreferenced** replicas to make room. Replicas of entries with
+      live refs or in-flight transfers are pinned.
+    * Entries with no refs and no replicas are dropped entirely.
+    """
+
+    def __init__(self, clock, capacity: Optional[float] = None):
+        self.clock = clock
+        self.capacity = capacity      # bytes per server (None: unbounded)
+        self._entries: dict = {}      # digest -> StoreEntry
+        self._by_buffer: dict = {}    # Buffer id -> StoreEntry
+        self.resident_bytes: dict = {}  # server -> resident replica bytes
+        # scoreboard
+        self.dedup_hits = 0           # uploads/migrations served by a replica
+        self.bytes_deduped = 0.0      # payload bytes that never hit a wire
+        self.cow_forks = 0            # writes forked off a shared entry
+        self.evictions = 0
+        self.evicted_bytes = 0.0
+
+    # ---- attachment lifecycle ----
+    def attach(self, buf: Buffer, key: bytes, nbytes: int) -> StoreEntry:
+        """Bind ``buf`` to the entry for ``key`` (detaching it from any
+        previous entry first — a rewrite is a fork plus a reattach).
+        ``nbytes`` is the PAYLOAD size the digest covers — a replica
+        occupies what the content needs, not the (possibly larger)
+        buffer allocation it was written into."""
+        old = self._by_buffer.get(buf.id)
+        if old is not None and old.key != key:
+            self.detach(buf)
+        entry = self._entries.get(key)
+        if entry is None:
+            entry = self._entries[key] = StoreEntry(key, nbytes)
+        entry.refs.add(buf.id)
+        entry.last_used = self.clock.now
+        self._by_buffer[buf.id] = entry
+        buf.store_key = key
+        return entry
+
+    def _maybe_gc(self, entry: StoreEntry) -> None:
+        """Drop an entry nothing points at anymore: no attached buffers,
+        no resident replicas, no in-flight transfers. The single place
+        the pin/GC rule lives."""
+        if not entry.refs and not entry.valid_on and not entry.pending:
+            self._entries.pop(entry.key, None)
+
+    def detach(self, buf: Buffer) -> None:
+        """Drop ``buf``'s reference; unreferenced entries stay cached
+        (their replicas remain dedup sources) until evicted."""
+        entry = self._by_buffer.pop(buf.id, None)
+        buf.store_key = None
+        if entry is None:
+            return
+        entry.refs.discard(buf.id)
+        self._maybe_gc(entry)
+
+    def cow_fork(self, buf: Buffer) -> bool:
+        """A tenant is about to write ``buf`` while it holds shared
+        content: fork it to a private buffer (the caller bumps
+        ``Buffer.version`` via its normal clobber path). Returns True if
+        a fork actually happened — the runtime charges the device-side
+        copy only then."""
+        if buf.id not in self._by_buffer:
+            return False
+        self.cow_forks += 1
+        self.detach(buf)
+        return True
+
+    def release(self, buf: Buffer) -> None:
+        """Tenant lifecycle: the owning client detached — identical to
+        ``detach`` but named for the caller's intent."""
+        self.detach(buf)
+
+    # ---- lookups ----
+    def entry_for(self, buf: Buffer) -> Optional[StoreEntry]:
+        return self._by_buffer.get(buf.id)
+
+    def lookup(self, key: bytes) -> Optional[StoreEntry]:
+        return self._entries.get(key)
+
+    def touch(self, entry: StoreEntry) -> None:
+        entry.last_used = self.clock.now
+
+    def record_dedup(self, entry: StoreEntry, nbytes: float) -> None:
+        self.dedup_hits += 1
+        self.bytes_deduped += nbytes
+        entry.last_used = self.clock.now
+
+    def unrecord_dedup(self, nbytes: float) -> None:
+        """A claimed saving did not materialize (the rider's transfer
+        died and the payload was paid after all): take it back so the
+        scoreboard reports only bytes that really never hit a wire."""
+        self.dedup_hits -= 1
+        self.bytes_deduped -= nbytes
+
+    # ---- replica arrival / in-flight tracking ----
+    def add_pending(self, entry: StoreEntry, server: str, ev) -> None:
+        """An upload or migration of this content to ``server`` is in
+        flight: later identical requests gate on ``ev`` instead of
+        re-sending the payload. Cleared on the event's completion or
+        failure (``Event`` callbacks fire for both)."""
+        entry.pending[server] = ev
+
+        def clear(_e, entry=entry, server=server, ev=ev):
+            if entry.pending.get(server) is ev:
+                del entry.pending[server]
+            self._maybe_gc(entry)
+
+        ev.on_complete(clear)
+
+    def replica_landed(self, entry: StoreEntry, server: str) -> None:
+        if server in entry.valid_on:
+            entry.last_used = self.clock.now
+            return
+        self._reserve(server, entry.nbytes)
+        entry.valid_on.add(server)
+        entry.last_used = self.clock.now
+        self.resident_bytes[server] = \
+            self.resident_bytes.get(server, 0.0) + entry.nbytes
+
+    def _reserve(self, server: str, nbytes: float) -> None:
+        """Make room on ``server`` by evicting LRU unreferenced replicas.
+        Referenced or in-flight entries are pinned, so the store can run
+        over capacity when every resident byte is live — capacity bounds
+        the *cache*, not the tenants' working set."""
+        cap = self.capacity
+        if cap is None:
+            return
+        used = self.resident_bytes.get(server, 0.0)
+        if used + nbytes <= cap:
+            return
+        victims = sorted(
+            (e for e in self._entries.values()
+             if server in e.valid_on and not e.refs
+             and server not in e.pending),
+            key=lambda e: e.last_used)
+        for e in victims:
+            if used + nbytes <= cap:
+                break
+            e.valid_on.discard(server)
+            used -= e.nbytes
+            self.evictions += 1
+            self.evicted_bytes += e.nbytes
+            self._maybe_gc(e)
+        self.resident_bytes[server] = used
+
+    # ---- reporting ----
+    def stats(self) -> dict:
+        return {
+            "entries": len(self._entries),
+            "attached_buffers": len(self._by_buffer),
+            "resident_bytes": dict(self.resident_bytes),
+            "dedup_hits": self.dedup_hits,
+            "bytes_deduped": self.bytes_deduped,
+            "cow_forks": self.cow_forks,
+            "evictions": self.evictions,
+            "evicted_bytes": self.evicted_bytes,
+        }

@@ -1,0 +1,542 @@
+"""Content-addressed cross-tenant buffer store + tenant lifecycle
+(DESIGN.md §5): dedup'd uploads (resident and in-flight), cross-tenant
+migration sourcing, copy-on-write forks, LRU eviction under capacity,
+and ClientRuntime.detach()."""
+import numpy as np
+import pytest
+
+from repro.core import (ClientRuntime, Cluster, DeviceSpec, LinkSpec,
+                        ServerSpec, content_digest)
+from repro.core.events import COMPLETE, ERROR
+from repro.core.scheduler import DRRPolicy, FIFOPolicy
+
+MiB = 1 << 20
+
+
+def mk_cluster(n=3, store=True, capacity=None, scheduler="fifo",
+               peer_bw=40e9 / 8):
+    return Cluster([ServerSpec(f"s{i}", [DeviceSpec("gpu0")])
+                    for i in range(n)],
+                   peer_link=LinkSpec(latency=20e-6, bandwidth=peer_bw),
+                   peer_transport="tcp", scheduler=scheduler,
+                   store=store, store_capacity=capacity)
+
+
+def attach(cluster, **kw):
+    kw.setdefault("client_link", LinkSpec(latency=61e-6, bandwidth=1e9 / 8))
+    return ClientRuntime(cluster=cluster, **kw)
+
+
+def payload(fill=1, words=MiB // 4):
+    return np.full(words, fill, np.uint32)
+
+
+# ---- digesting ----
+
+def test_digest_identity_and_dtype_sensitivity():
+    a = np.zeros(64, np.uint32)
+    assert content_digest(a) == content_digest(np.zeros(64, np.uint32))
+    assert content_digest(a) != content_digest(np.zeros(64, np.int32))
+    assert content_digest(a) != content_digest(np.ones(64, np.uint32))
+
+
+# ---- dedup'd uploads ----
+
+def test_second_identical_upload_is_command_only():
+    cluster = mk_cluster()
+    a, b = attach(cluster, name="a"), attach(cluster, name="b")
+    cluster.run()
+    ba, bb = a.create_buffer(MiB), b.create_buffer(MiB)
+    a.enqueue_write("s0", ba, payload())
+    cluster.run()
+    pre = b.c_links["s0"].bytes_sent
+    ev = b.enqueue_write("s0", bb, payload())
+    cluster.run()
+    assert ev.status == COMPLETE
+    assert b.c_links["s0"].bytes_sent - pre < 1024   # cmd + digest only
+    assert b.dedup_hits == 1
+    assert b.dedup_bytes_saved == MiB
+    assert cluster.store.stats()["dedup_hits"] == 1
+    np.testing.assert_array_equal(bb.data, payload())
+    assert "s0" in bb.valid_on
+
+
+def test_different_content_pays_full_upload():
+    cluster = mk_cluster()
+    a, b = attach(cluster, name="a"), attach(cluster, name="b")
+    cluster.run()
+    a.enqueue_write("s0", a.create_buffer(MiB), payload(1))
+    cluster.run()
+    pre = b.c_links["s0"].bytes_sent
+    b.enqueue_write("s0", b.create_buffer(MiB), payload(2))
+    cluster.run()
+    assert b.c_links["s0"].bytes_sent - pre > MiB
+    assert b.dedup_hits == 0
+
+
+def test_upload_racing_identical_inflight_upload_gates_not_resends():
+    """Tenant b enqueues the same content while a's upload is still
+    crawling up the radio: b must send only the command, and must not
+    complete before the shared replica actually lands."""
+    cluster = mk_cluster()
+    a, b = attach(cluster, name="a"), attach(cluster, name="b")
+    cluster.run()
+    ev_a = a.enqueue_write("s0", a.create_buffer(4 * MiB),
+                           payload(words=MiB))
+    # no drain: a's 4 MiB is still in flight when b enqueues
+    pre = b.c_links["s0"].bytes_sent
+    ev_b = b.enqueue_write("s0", b.create_buffer(4 * MiB),
+                           payload(words=MiB))
+    cluster.run()
+    assert ev_a.status == COMPLETE and ev_b.status == COMPLETE
+    assert b.c_links["s0"].bytes_sent - pre < 1024
+    assert b.dedup_hits == 1
+    assert ev_b.t_end >= ev_a.t_end     # gated on the replica landing
+
+
+def test_store_disabled_by_default_keeps_private_copies():
+    cluster = mk_cluster(store=False)
+    assert cluster.store is None
+    a, b = attach(cluster, name="a"), attach(cluster, name="b")
+    cluster.run()
+    a.enqueue_write("s0", a.create_buffer(MiB), payload())
+    cluster.run()
+    pre = b.c_links["s0"].bytes_sent
+    b.enqueue_write("s0", b.create_buffer(MiB), payload())
+    cluster.run()
+    assert b.c_links["s0"].bytes_sent - pre > MiB    # full private copy
+    assert b.dedup_hits == 0
+
+
+# ---- cross-tenant migrations ----
+
+def _seed_two_tenants(cluster, nbytes=MiB):
+    a, b = attach(cluster, name="a"), attach(cluster, name="b")
+    cluster.run()
+    ba, bb = a.create_buffer(nbytes), b.create_buffer(nbytes)
+    a.enqueue_write("s0", ba, payload(words=nbytes // 4))
+    b.enqueue_write("s0", bb, payload(words=nbytes // 4))
+    cluster.run()
+    return a, b, ba, bb
+
+
+def peer_bytes(cluster):
+    return sum(l.bytes_sent for l in cluster.p_links.values())
+
+
+def test_migration_dedups_against_other_tenants_replica():
+    cluster = mk_cluster()
+    a, b, ba, bb = _seed_two_tenants(cluster)
+    a.enqueue_migration(ba, "s1")
+    cluster.run()
+    mid = peer_bytes(cluster)
+    ev = b.enqueue_migration(bb, "s1")
+    cluster.run()
+    assert ev.status == COMPLETE
+    assert peer_bytes(cluster) == mid       # zero payload bytes moved
+    assert "s1" in bb.valid_on
+    assert b.dedup_hits >= 1
+
+
+def test_migration_rides_other_tenants_inflight_transfer():
+    cluster = mk_cluster(peer_bw=1e9 / 8)    # slow peers: push takes time
+    a, b, ba, bb = _seed_two_tenants(cluster, nbytes=4 * MiB)
+    ev_a = a.enqueue_migration(ba, "s1")
+    cluster.run(until=cluster.clock.now + 1e-3)   # push mid-flight
+    assert ev_a.status != COMPLETE
+    mid = peer_bytes(cluster)
+    ev_b = b.enqueue_migration(bb, "s1")
+    cluster.run()
+    assert ev_a.status == COMPLETE and ev_b.status == COMPLETE
+    assert peer_bytes(cluster) == mid        # b rode a's payload
+    assert ev_b.t_end >= ev_a.t_end
+    assert "s1" in bb.valid_on
+
+
+def test_migration_sources_from_any_tenants_replica():
+    """Only tenant a ever put the content on s1; b's migration to s2 can
+    still be served from s1 when s0's egress is the worse source."""
+    cluster = mk_cluster(n=4)
+    a, b, ba, bb = _seed_two_tenants(cluster)
+    a.enqueue_migration(ba, "s1")
+    cluster.run()
+    sentry = cluster.store.entry_for(bb)
+    assert sentry.valid_on >= {"s0", "s1"}
+    # make s0 an expensive source: its link to s2 is backed up
+    cluster.peer_link("s0", "s2")._busy_until = cluster.clock.now + 1.0
+    srcs = sorted({s for s in bb.valid_on if s != "client"}
+                  | sentry.valid_on)
+    assert b._pick_migration_source(bb, srcs, "s2") == "s1"
+    link_pre = cluster.peer_link("s1", "s2").bytes_sent
+    ev = b.enqueue_migration(bb, "s2")
+    cluster.run()
+    assert ev.status == COMPLETE
+    assert cluster.peer_link("s1", "s2").bytes_sent > link_pre + MiB
+    assert "s2" in bb.valid_on
+
+
+# ---- copy-on-write ----
+
+def test_kernel_write_forks_shared_buffer_and_leaves_replicas():
+    cluster = mk_cluster()
+    a, b, ba, bb = _seed_two_tenants(cluster)
+    sentry = cluster.store.entry_for(ba)
+    assert sentry is cluster.store.entry_for(bb)
+    assert len(sentry.refs) == 2
+    a.enqueue_kernel("s0", fn=lambda x: x + 1, inputs=[ba], outputs=[ba],
+                     duration=1e-4)
+    cluster.run()
+    # a forked to a private buffer; b's attachment and the shared
+    # replica set are untouched
+    assert ba.store_key is None
+    assert cluster.store.entry_for(ba) is None
+    assert cluster.store.entry_for(bb) is sentry
+    assert sentry.refs == {bb.id}
+    assert "s0" in sentry.valid_on
+    assert cluster.store.cow_forks == 1
+    np.testing.assert_array_equal(ba.data, payload() + 1)
+    np.testing.assert_array_equal(bb.data, payload())
+    # b still dedups against the surviving replica
+    ev = b.enqueue_migration(bb, "s1")
+    cluster.run()
+    assert ev.status == COMPLETE
+
+
+def test_rewrite_reattaches_to_new_entry():
+    cluster = mk_cluster()
+    a = attach(cluster, name="a")
+    cluster.run()
+    buf = a.create_buffer(MiB)
+    a.enqueue_write("s0", buf, payload(1))
+    cluster.run()
+    k1 = buf.store_key
+    a.enqueue_write("s0", buf, payload(2))
+    cluster.run()
+    assert buf.store_key is not None and buf.store_key != k1
+    entry = cluster.store.entry_for(buf)
+    assert entry.key == buf.store_key and "s0" in entry.valid_on
+
+
+# ---- eviction ----
+
+def test_lru_eviction_of_unreferenced_replicas_under_capacity():
+    cluster = mk_cluster(n=1, capacity=2 * MiB)
+    a = attach(cluster, name="a")
+    cluster.run()
+    store = cluster.store
+    # three distinct 1 MiB contents through the same (rewritten) buffer:
+    # each rewrite detaches the previous entry, leaving its replica
+    # cached but unreferenced
+    buf = a.create_buffer(MiB)
+    for fill in (1, 2, 3):
+        a.enqueue_write("s0", buf, payload(fill))
+        cluster.run()
+    assert store.resident_bytes["s0"] <= 2 * MiB
+    assert store.evictions >= 1
+    # the evicted (least recently used) content was fill=1: uploading it
+    # again pays the payload; fill=3 is still resident and dedups
+    c = attach(cluster, name="c")
+    cluster.run()
+    pre = c.c_links["s0"].bytes_sent
+    c.enqueue_write("s0", c.create_buffer(MiB), payload(3))
+    cluster.run()
+    assert c.c_links["s0"].bytes_sent - pre < 1024   # cache hit
+    pre = c.c_links["s0"].bytes_sent
+    c.enqueue_write("s0", c.create_buffer(MiB), payload(1))
+    cluster.run()
+    assert c.c_links["s0"].bytes_sent - pre > MiB    # evicted: full pay
+
+
+def test_referenced_replicas_are_pinned():
+    cluster = mk_cluster(n=1, capacity=MiB)
+    a = attach(cluster, name="a")
+    cluster.run()
+    b1, b2 = a.create_buffer(MiB), a.create_buffer(MiB)
+    a.enqueue_write("s0", b1, payload(1))
+    cluster.run()
+    a.enqueue_write("s0", b2, payload(2))
+    cluster.run()
+    store = cluster.store
+    # both entries referenced by live buffers: nothing evictable, the
+    # store runs over capacity rather than dropping live data
+    assert store.evictions == 0
+    assert store.resident_bytes["s0"] == 2 * MiB
+    e1 = store.entry_for(b1)
+    assert "s0" in e1.valid_on
+
+
+# ---- tenant detach ----
+
+def test_detach_fails_pending_events_and_cleans_server_state():
+    cluster = mk_cluster(scheduler="drr")
+    a, b = attach(cluster, name="a"), attach(cluster, name="b")
+    cluster.run()
+    sid = a.sessions["s0"].session_id
+    evs = [a.enqueue_kernel("s0", fn=None, duration=5e-3)
+           for _ in range(8)]
+    cluster.run(until=cluster.clock.now + 6e-3)   # first kernel done
+    a.detach()
+    assert a.detached
+    done = [e for e in evs if e.status == COMPLETE]
+    dead = [e for e in evs if e.status == ERROR]
+    assert dead and len(done) + len(dead) == len(evs)
+    assert all("detached" in e.error for e in dead)
+    # host-side lifecycle: session table entry gone, run queues drained
+    assert sid not in cluster.hosts["s0"].sessions
+    assert cluster.stats()["sessions"] == {h: 1 for h in cluster.hosts}
+    assert cluster.stats()["clients"] == ["b"]
+    with pytest.raises(Exception):
+        a.enqueue_kernel("s0", fn=None, duration=1e-3)
+    with pytest.raises(Exception):
+        a.reconnect("s0")
+    cluster.run()                                  # cluster still drains
+    # bystander unaffected functionally
+    ev = b.enqueue_kernel("s0", fn=None, duration=1e-3)
+    cluster.run()
+    assert ev.status == COMPLETE
+
+
+def test_detach_mid_flight_does_not_perturb_bystander_timestamps():
+    """Tenant a churns s0 and detaches mid-run; the bystander's chain on
+    s1 (own device, own links) must be bit-identical to the run where a
+    works to completion — detach may only free capacity, never touch
+    shared state a bystander's timing derives from."""
+    def scenario(detach_mid: bool):
+        cluster = mk_cluster(n=2)
+        a, b = attach(cluster, name="a"), attach(cluster, name="b")
+        cluster.run()
+        buf_a = a.create_buffer(MiB)
+        a.enqueue_write("s0", buf_a, payload(7))
+        prev = ()
+        for _ in range(6):
+            prev = (a.enqueue_kernel("s0", fn=None, duration=4e-3,
+                                     wait_for=prev),)
+        bb = b.create_buffer(64)
+        prev_b = b.enqueue_write("s1", bb, np.zeros(16, np.float32))
+        b_events = [prev_b]
+        for _ in range(6):
+            prev_b = b.enqueue_kernel("s1", fn=None, duration=2e-3,
+                                      wait_for=[prev_b])
+            b_events.append(prev_b)
+        if detach_mid:
+            cluster.clock.schedule(5e-3, a.detach)
+        cluster.run()
+        assert all(e.status == COMPLETE for e in b_events)
+        return [(e.t_submitted, e.t_start, e.t_end, e.t_client_ack)
+                for e in b_events]
+
+    assert scenario(detach_mid=True) == scenario(detach_mid=False)
+
+
+def test_detach_releases_store_refs_making_replicas_evictable():
+    cluster = mk_cluster(n=1, capacity=MiB)
+    a = attach(cluster, name="a")
+    cluster.run()
+    buf = a.create_buffer(MiB)
+    a.enqueue_write("s0", buf, payload(1))
+    cluster.run()
+    store = cluster.store
+    assert store.entry_for(buf) is not None
+    a.detach()
+    assert buf.store_key is None
+    assert store.stats()["attached_buffers"] == 0
+    # the replica is now plain cache: a new tenant's different content
+    # evicts it under the 1 MiB capacity
+    c = attach(cluster, name="c")
+    cluster.run()
+    c.enqueue_write("s0", c.create_buffer(MiB), payload(2))
+    cluster.run()
+    assert store.evictions == 1
+    assert store.resident_bytes["s0"] == MiB
+
+
+def test_detach_then_reattach_does_not_resurrect_replay_dedup():
+    """§4.3 + §5: a session id that detached presents as a FRESH session
+    — command ids the dead session processed must execute again, not be
+    swallowed by resurrected dedup state."""
+    cluster = mk_cluster(n=1)
+    a = attach(cluster, name="a")
+    cluster.run()
+    calls = {"n": 0}
+
+    def bump(x):
+        calls["n"] += 1
+        return x + 1.0
+
+    buf = a.create_buffer(64)
+    a.enqueue_write("s0", buf, np.zeros(16, np.float32))
+    ev = a.enqueue_kernel("s0", fn=bump, inputs=[buf], outputs=[buf],
+                          duration=1e-3)
+    cluster.run()
+    assert calls["n"] == 1
+    cmd_id = ev.command.id
+    sid = a.sessions["s0"].session_id
+    a.detach()
+    assert a.servers["s0"].processed == set()
+    # reattach: a new runtime joins; even presenting the recycled
+    # session id resolves no daemon state
+    c = attach(cluster, name="a2")
+    cluster.run()
+    assert sid not in cluster.hosts["s0"].sessions
+    # replaying the dead session's command id against the new session
+    # executes — nothing remembers it was ever processed
+    buf2 = c.create_buffer(64)
+    c.enqueue_write("s0", buf2, np.zeros(16, np.float32))
+    cluster.run()
+    replay = c.enqueue_kernel("s0", fn=bump, inputs=[buf2], outputs=[buf2],
+                              duration=1e-3)
+    replay.command.id = cmd_id        # recycled command id
+    cluster.run()
+    assert replay.status == COMPLETE
+    assert calls["n"] == 2            # executed, not deduped
+
+
+def test_gated_dedup_write_falls_back_when_uploader_detaches():
+    """b and c gated identical uploads on a's in-flight copy; a detaches
+    (failing the transfer) — ONE of them must pay the payload (not
+    both: the survivors re-resolve against each other's fallback), the
+    claimed dedup savings are taken back for the payer, and nobody
+    hangs or completes without data."""
+    cluster = mk_cluster()
+    a, b, c = (attach(cluster, name=n) for n in "abc")
+    cluster.run()
+    a.enqueue_write("s0", a.create_buffer(4 * MiB), payload(words=MiB))
+    ev_b = b.enqueue_write("s0", b.create_buffer(4 * MiB),
+                           payload(words=MiB))
+    ev_c = c.enqueue_write("s0", c.create_buffer(4 * MiB),
+                           payload(words=MiB))
+    pre_b = b.c_links["s0"].bytes_sent
+    pre_c = c.c_links["s0"].bytes_sent
+    a.detach()                        # kills a's in-flight upload event
+    cluster.run()
+    assert ev_b.status == COMPLETE and ev_c.status == COMPLETE
+    paid_b = b.c_links["s0"].bytes_sent - pre_b > 4 * MiB
+    paid_c = c.c_links["s0"].bytes_sent - pre_c > 4 * MiB
+    assert paid_b != paid_c           # exactly one pays in full
+    payer, rider = (b, c) if paid_b else (c, b)
+    # the payer's claimed saving was reverted; the rider's stands
+    assert payer.dedup_hits == 0 and payer.dedup_bytes_saved == 0.0
+    assert rider.dedup_hits == 1 and rider.dedup_bytes_saved == 4 * MiB
+    assert cluster.store.stats()["dedup_hits"] == 1
+
+
+def test_gated_write_superseded_by_later_write_keeps_waw_order():
+    """b's write of X gates on a's in-flight upload; b then writes Y to
+    the same buffer (sent immediately). When the gate resolves, the
+    stale X command must NOT ship after Y — store-less clusters send
+    writes FIFO, so the last write applied on the server must be Y."""
+    cluster = mk_cluster()
+    a, b = attach(cluster, name="a"), attach(cluster, name="b")
+    cluster.run()
+    a.enqueue_write("s0", a.create_buffer(4 * MiB), payload(1, MiB))
+    bb = b.create_buffer(4 * MiB)
+    e_x = b.enqueue_write("s0", bb, payload(1, MiB))   # gates on a's
+    e_y = b.enqueue_write("s0", bb, payload(2, MiB))   # sent at once
+    cluster.run()
+    assert e_x.status == COMPLETE and e_y.status == COMPLETE
+    # the canonical contents are Y — X was superseded, never applied
+    np.testing.assert_array_equal(bb.data, payload(2, MiB))
+    assert cluster.store.entry_for(bb).key == content_digest(
+        payload(2, MiB))
+
+
+def test_default_tenant_names_do_not_recycle_after_detach():
+    cluster = mk_cluster()
+    t0, t1, t2 = (attach(cluster) for _ in range(3))
+    assert [t.name for t in (t0, t1, t2)] == ["ue0", "ue1", "ue2"]
+    t0.detach()
+    t3 = attach(cluster)
+    assert t3.name == "ue3"                     # not a recycled "ue2"
+    assert len({c.name for c in cluster.clients}) == len(cluster.clients)
+
+
+def test_ride_retry_does_not_coalesce_onto_dead_ride():
+    """b rode a's in-flight migration; a detaches mid-push. b's fallback
+    migration must not coalesce onto b's own dead ride (same key, same
+    version) — that would wait on an event only the fallback itself can
+    complete, hanging forever."""
+    cluster = mk_cluster(peer_bw=1e9 / 8)
+    a, b, ba, bb = _seed_two_tenants(cluster, nbytes=4 * MiB)
+    ev_a = a.enqueue_migration(ba, "s1")
+    cluster.run(until=cluster.clock.now + 1e-3)   # a's push mid-flight
+    assert ev_a.status != COMPLETE
+    saved_pre = b.dedup_bytes_saved   # seed write's (real) dedup credit
+    ev_b = b.enqueue_migration(bb, "s1")          # rides a's transfer
+    assert b.dedup_bytes_saved == saved_pre + 4 * MiB
+    a.detach()                                    # kills the ride
+    cluster.run()
+    assert ev_b.status == COMPLETE                # fallback ran
+    assert "s1" in bb.valid_on
+    # the claimed ride saving was reverted when the fallback paid
+    assert b.dedup_bytes_saved == saved_pre
+
+
+def test_rewrite_during_upload_does_not_leak_resident_bytes():
+    """Content X's upload is in flight when the buffer is rewritten with
+    content Y: X's entry loses its last ref, but when the upload lands
+    the replica must register on the still-tracked entry (a refcount-0
+    cache replica), not resurrect a garbage-collected orphan whose
+    resident bytes could never be reclaimed."""
+    cluster = mk_cluster(n=1)
+    rt = attach(cluster, name="a")
+    cluster.run()
+    buf = rt.create_buffer(MiB)
+    rt.enqueue_write("s0", buf, payload(1))       # X: in flight
+    rt.enqueue_write("s0", buf, payload(2))       # Y: rewrite, X orphaned
+    cluster.run()
+    store = cluster.store
+    tracked = sum(e.nbytes for e in store._entries.values()
+                  if "s0" in e.valid_on)
+    assert store.resident_bytes["s0"] == tracked == 2 * MiB
+    # X's replica is real cache: a later identical upload dedups
+    c = attach(cluster, name="c")
+    cluster.run()
+    pre = c.c_links["s0"].bytes_sent
+    c.enqueue_write("s0", c.create_buffer(MiB), payload(1))
+    cluster.run()
+    assert c.c_links["s0"].bytes_sent - pre < 1024
+
+
+def test_command_arriving_after_dep_failed_does_not_hang():
+    """Loose error-dependency semantics on the wire: a command whose
+    dependency FAILS while the command struct is still in flight must
+    treat the dep as finished on arrival — registering a completion
+    callback on an already-failed event would never fire and the
+    command (and every dependent) would hang forever."""
+    cluster = mk_cluster(n=2, store=False)
+    rt = attach(cluster, name="a")
+    cluster.run()
+    buf = rt.create_buffer(MiB)
+    buf.data = np.zeros(MiB // 4, np.uint32)
+    buf.valid_on = {"s0"}
+    cluster.peer_link("s0", "s1").up = False      # push will be dropped
+    mig = rt.enqueue_migration(buf, "s1")
+    # enqueued while mig is still live: the dep ships with the command
+    kern = rt.enqueue_kernel("s1", fn=None, duration=1e-3,
+                             wait_for=[mig])
+    cluster.run()
+    assert mig.status == ERROR
+    assert kern.status == COMPLETE                # ran despite failed dep
+
+
+# ---- scheduler removal units ----
+
+def test_fifo_policy_remove_drops_only_that_tenant():
+    p = FIFOPolicy()
+    for i in range(6):
+        p.push("a" if i % 2 else "b", 1.0, 1.0, f"job{i}")
+    assert p.remove("a") == 3
+    assert [p.pop() for _ in range(3)] == ["job0", "job2", "job4"]
+    assert p.pop() is None
+
+
+def test_drr_policy_remove_mid_rotation():
+    p = DRRPolicy(quantum=1.0)
+    for i in range(3):
+        p.push("a", 1.0, 1.0, f"a{i}")
+        p.push("b", 1.0, 1.0, f"b{i}")
+    assert p.pop() == "a0"
+    assert p.remove("a") == 2
+    assert [p.pop() for _ in range(3)] == ["b0", "b1", "b2"]
+    assert p.pop() is None
+    assert p.remove("missing") == 0
