@@ -30,6 +30,7 @@ MODULES = [
     ("fig10", "benchmarks.migration_latency"),
     ("migpipe", "benchmarks.migration_pipeline"),
     ("mt", "benchmarks.multi_tenant"),
+    ("cfdhalo", "benchmarks.cfd_halo"),
     ("fig11", "benchmarks.rdma_vs_tcp"),
     ("fig12", "benchmarks.matmul_scaling"),
     ("fig13", "benchmarks.rdma_matmul"),

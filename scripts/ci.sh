@@ -8,8 +8,11 @@
 # benchmarks/BENCH_dispatch.json, or any simulated-time gate regresses
 # >20% against its baseline (migration data plane, multi-tenant
 # scaling/fairness, shared-weights dedup — the dedup gate also enforces
-# the >=40% payload-reduction floor). Regenerate baselines with the
-# "regenerate" command stamped inside each BENCH_*.json.
+# the >=40% payload-reduction floor — and the CFD halo-exchange
+# placement gate, which also enforces the >=0.75 8-server scaling-
+# efficiency floor and hetmec beating locality-off placement by >=20%).
+# Regenerate baselines with the "regenerate" command stamped inside
+# each BENCH_*.json.
 #
 # The dispatch gate measures WALL-CLOCK commands/sec and is therefore
 # host-specific; on shared/virtualized runners it flakes through no
@@ -59,5 +62,10 @@ python -m benchmarks.multi_tenant \
     --baseline benchmarks/BENCH_multitenant.json \
     --dedup-baseline benchmarks/BENCH_dedup.json \
     --json-out "$ARTIFACTS/multi_tenant.json"
+
+echo "== CFD halo-exchange placement smoke (20% gates + floors) =="
+python -m benchmarks.cfd_halo \
+    --baseline benchmarks/BENCH_cfd.json \
+    --json-out "$ARTIFACTS/cfd_halo.json"
 
 echo "ci.sh: all checks passed"

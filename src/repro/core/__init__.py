@@ -6,6 +6,9 @@ from repro.core.commands import (BuiltinKernel, Marker, MigrateBuffer,  # noqa: 
 from repro.core.events import (COMPLETE, ERROR, QUEUED, RUNNING,  # noqa: F401
                                SUBMITTED, Event)
 from repro.core.netsim import NIC, DeviceSim, Link, SimClock  # noqa: F401
+from repro.core.placement import (HetMECPolicy, LocalityPolicy,  # noqa: F401
+                                  PinnedPolicy, PlacementEngine,
+                                  make_placement_policy)
 from repro.core.runtime import (ClientRuntime, Cluster,  # noqa: F401
                                 DeviceSpec, DeviceUnavailable, LinkSpec,
                                 ServerHost, ServerSpec)

@@ -87,6 +87,16 @@ class NIC:
     UE radios) therefore only staggers flow starts; a NIC at or below
     link rate becomes the contended resource — the shared-egress cost
     the pre-NIC model let a busy server skip entirely.
+
+    The same class models the RECEIVE side (DESIGN.md §6): an
+    ``ingress`` NIC sits in tandem *after* the link, mirroring the
+    egress model — the port starts taking a message when its first byte
+    arrives (wire start + propagation) and the port is free, occupies
+    ``bytes / nic.bandwidth``, and delivery fires no earlier than the
+    port drains. An uncontended ingress port at or above link rate is
+    time-identical to no ingress NIC at all; N senders converging on
+    one receiving host contend on it — the receiver-side cost the
+    egress-only model let a popular destination skip.
     """
 
     __slots__ = ("bandwidth", "name", "_busy_until", "bytes_sent",
@@ -101,6 +111,12 @@ class NIC:
         # actually charges the host — the dedup benchmarks gate on its
         # reduction, not just wall clock (DESIGN.md §5)
         self.busy_time = 0.0
+
+    def queue_seconds(self, now: float) -> float:
+        """Occupancy probe (DESIGN.md §6): how long a message handed to
+        this port right now would wait before it starts draining."""
+        q = self._busy_until - now
+        return q if q > 0.0 else 0.0
 
 class Link:
     """Point-to-point link with FIFO serialization + propagation latency.
@@ -127,14 +143,24 @@ class Link:
     def rtt(self) -> float:
         return 2.0 * self.latency
 
+    def queue_seconds(self, now: float) -> float:
+        """Occupancy probe (DESIGN.md §6): how long a message queued on
+        this link right now would wait before its wire leg starts."""
+        q = self._busy_until - now
+        return q if q > 0.0 else 0.0
+
     def close(self):
         """Administratively down (tenant detach): later sends drop, and
         unlike a transient ``up = False`` fault nothing re-raises it."""
         self.up = False
 
     def send(self, nbytes: float, on_delivered: Callable,
-             serialize_overhead: float = 0.0, egress: Optional[NIC] = None):
-        """Queue a message; ``on_delivered`` fires at the receiver."""
+             serialize_overhead: float = 0.0, egress: Optional[NIC] = None,
+             ingress: Optional[NIC] = None):
+        """Queue a message; ``on_delivered`` fires at the receiver.
+        ``egress`` is the sending host's shared port (tandem ahead of
+        the link), ``ingress`` the receiving host's (tandem after it) —
+        see ``NIC`` for both models."""
         if not self.up:
             return None  # dropped — sender times out via its own logic
         start = self.clock.now
@@ -174,12 +200,29 @@ class Link:
         self._busy_until = busy
         self.bytes_sent += nbytes
         arrive = busy + self.latency
+        if ingress is not None:
+            # tandem link → NIC on the receive side, mirroring egress:
+            # the port starts taking the message when its first byte
+            # lands (wire start + propagation) and the port is free;
+            # delivery fires no earlier than the port drains. A free
+            # ingress port at or above link rate changes nothing.
+            in_start = start + self.latency
+            if ingress._busy_until > in_start:
+                in_start = ingress._busy_until
+            in_bw = ingress.bandwidth
+            in_end = in_start + (nbytes / in_bw if in_bw > 0 else 0.0)
+            ingress._busy_until = in_end
+            ingress.bytes_sent += nbytes
+            ingress.busy_time += in_end - in_start
+            if in_end > arrive:
+                arrive = in_end
         self._schedule_at(arrive, on_delivered)
         return arrive
 
     def send_chunked(self, chunks, on_delivered: Callable,
                      serialize_overhead: float = 0.0,
-                     egress: Optional[NIC] = None):
+                     egress: Optional[NIC] = None,
+                     ingress: Optional[NIC] = None):
         """Pipelined (cut-through) multi-chunk transfer.
 
         ``chunks`` is a sequence of ``(sender_cpu, wire_bytes,
@@ -207,11 +250,14 @@ class Link:
         wire_free = self._busy_until
         nic_free = egress._busy_until if egress is not None else 0.0
         nic_bw = egress.bandwidth if egress is not None else 0.0
+        in_free = ingress._busy_until if ingress is not None else 0.0
+        in_bw = ingress.bandwidth if ingress is not None else 0.0
         bw = self.bandwidth
         lat = self.latency
         rcv_free = 0.0
         total = 0.0
         nic_occupied = 0.0
+        in_occupied = 0.0
         for snd_cpu, wire_bytes, rcv_cpu in chunks:
             snd_free += snd_cpu                  # chunk copied/staged
             if egress is None:
@@ -231,6 +277,19 @@ class Link:
                     wire_free = nic_free  # NIC slower: it paces the chunk
             total += wire_bytes
             arrive = wire_free + lat
+            if ingress is not None:
+                # link → NIC tandem per chunk (receive-side mirror of
+                # the egress model): the port takes the chunk when its
+                # first byte lands and the port is free; the chunk is
+                # delivered no earlier than the port drains it
+                in_start = start + lat
+                if in_free > in_start:
+                    in_start = in_free
+                in_free = in_start + (wire_bytes / in_bw if in_bw > 0
+                                      else 0.0)
+                in_occupied += in_free - in_start
+                if in_free > arrive:
+                    arrive = in_free
             if arrive > rcv_free:
                 rcv_free = arrive
             rcv_free += rcv_cpu                  # receiver-side copy
@@ -239,6 +298,10 @@ class Link:
             egress._busy_until = nic_free
             egress.bytes_sent += total
             egress.busy_time += nic_occupied
+        if ingress is not None:
+            ingress._busy_until = in_free
+            ingress.bytes_sent += total
+            ingress.busy_time += in_occupied
         self.bytes_sent += total
         self._schedule_at(rcv_free, on_delivered)
         return rcv_free

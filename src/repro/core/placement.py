@@ -1,0 +1,321 @@
+"""Cluster placement control plane (DESIGN.md §6).
+
+Until now every caller hard-picked the execution server for each
+kernel. That is the right default for a single tenant that knows its
+own topology, but it throws away exactly the information a MEC cluster
+accumulates at runtime: per-device run-queue depth in device-seconds
+(``scheduler.DeviceScheduler.queued_seconds``), where content replicas
+physically live (``Buffer.valid_on`` plus the content-addressed
+store's cross-tenant replica sets, ``BufferStore.replica_servers``),
+and how congested each host's NIC ports are on both the send and the
+receive side (``NIC.queue_seconds``). HetMEC (Wang et al.,
+arXiv:1901.09307) frames the resulting assignment problem:
+latency-optimal task placement from heterogeneous server load and link
+state.
+
+``PlacementEngine`` is the cluster-wide decision point: every
+``enqueue_kernel`` passes its *requested* server through
+``engine.place``, which may redirect the kernel (and therefore its
+implicit input migrations) to a better host. Policies are pluggable
+behind one interface and can differ per tenant
+(``ClientRuntime(placement=...)`` overrides the cluster default):
+
+* ``pinned`` — return the requested server unconditionally. This is
+  the pre-placement behavior and the default; a pinned cluster is
+  bit-exact with a cluster that has no engine at all (the engine only
+  keeps counters, never touching the clock).
+* ``locality`` — greedy replica affinity: run the kernel on the
+  candidate holding the most resident input bytes, so kernels chase
+  their content instead of dragging it. Ties break on queue depth,
+  then on sorted server name; a kernel with no resident inputs
+  anywhere stays on the requested server.
+* ``hetmec`` — estimated completion time: for every candidate, the
+  transfer cost of the inputs it is missing (cheapest replica over
+  current link + egress-NIC + ingress-NIC occupancy, including the
+  RDMA registration cost when unregistered) plus the server's queued
+  device-seconds plus the kernel's own device cost; the minimum wins,
+  ties break on sorted server name. Backlogged-but-near loses to
+  idle-but-far exactly when the queue exceeds the transfer.
+
+Queue depth has two sources, and the engine takes the max: the
+scheduler probe (dep-resolved commands sitting in the run queue plus
+the in-service remainder on the device timeline) and the engine's own
+``outstanding`` tally of placed-but-unfinished device-seconds. The
+tally is what spreads a batch of kernels enqueued at the same instant
+whose dependencies have not resolved into any scheduler queue yet —
+the probe alone would see every queue empty and stack the whole batch
+on one server.
+
+Decisions are pure bookkeeping at enqueue time: no simulated time is
+consumed, no shared state beyond the decision itself is mutated, so
+one tenant's placement churn cannot perturb a bystander tenant's
+timestamps (tested). The scoreboard (``stats()['placement']``) counts
+``placed_local`` (kept the caller's pick), ``placed_remote``
+(redirected), and ``placement_bytes_avoided`` (input bytes already
+resident on the chosen server that the requested server would have had
+to migrate in).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.core.transport import CMD_BYTES, wire_scale
+
+
+class PinnedPolicy:
+    """Caller knows best: the requested server, unconditionally."""
+
+    name = "pinned"
+
+    def place(self, engine: "PlacementEngine", rt, requested: str,
+              candidates: Sequence[str], device: str, inputs,
+              flops: float, bytes_moved: float,
+              duration: Optional[float]) -> str:
+        return requested
+
+
+class LocalityPolicy:
+    """Greedy replica affinity: most resident input bytes wins; queue
+    depth breaks ties, sorted server name breaks those. No resident
+    inputs anywhere → the requested server (pinned behavior)."""
+
+    name = "locality"
+
+    def place(self, engine, rt, requested, candidates, device, inputs,
+              flops, bytes_moved, duration):
+        best = None
+        best_key = None
+        resident_anywhere = False
+        for s in candidates:                    # sorted by the engine
+            resident = 0.0
+            for b in inputs:
+                if s in engine.replica_servers(rt, b):
+                    resident += b.transfer_bytes()
+            if resident > 0.0:
+                resident_anywhere = True
+            key = (-resident, engine.queue_depth(s), s)
+            if best_key is None or key < best_key:
+                best, best_key = s, key
+        if not resident_anywhere:
+            return requested if requested in candidates else best
+        return best
+
+
+class HetMECPolicy:
+    """Estimated completion time per candidate: missing-input transfer
+    cost over current link/NIC state + queued device-seconds + kernel
+    device cost. Minimum wins; sorted-name tie-break."""
+
+    name = "hetmec"
+
+    def place(self, engine, rt, requested, candidates, device, inputs,
+              flops, bytes_moved, duration):
+        best = None
+        best_ect = None
+        for s in candidates:                    # sorted by the engine
+            ect = engine.queue_depth(s) \
+                + engine.kernel_cost(s, device, flops, bytes_moved,
+                                     duration)
+            for b in inputs:
+                ect += engine.transfer_eta(rt, b, s)
+                if best_ect is not None and ect >= best_ect:
+                    break                       # already worse
+            if best_ect is None or ect < best_ect:
+                best, best_ect = s, ect
+        return best
+
+
+_POLICIES = {p.name: p for p in (PinnedPolicy, LocalityPolicy,
+                                 HetMECPolicy)}
+
+
+def make_placement_policy(kind: str):
+    cls = _POLICIES.get(kind)
+    if cls is None:
+        raise ValueError(f"unknown placement policy {kind!r} "
+                         f"(known: {sorted(_POLICIES)})")
+    return cls()
+
+
+class PlacementEngine:
+    """Cluster-wide kernel placement from live telemetry (one per
+    ``Cluster``; see the module docstring for the decision model)."""
+
+    def __init__(self, cluster, policy: str = "pinned"):
+        self.cluster = cluster
+        self.default_policy = make_placement_policy(policy)
+        # server -> device-seconds placed here and not yet finished;
+        # the enqueue-time complement of the scheduler queue probe.
+        # Maintained only once a non-pinned policy exists anywhere on
+        # the cluster (telemetry_active flips on and stays on): an
+        # all-pinned cluster never reads the tally, so the enqueue hot
+        # path skips the closure per kernel entirely
+        self.outstanding: dict = {}
+        self.telemetry_active = type(self.default_policy) \
+            is not PinnedPolicy
+        # scoreboard (stats()['placement'])
+        self.decisions = 0
+        self.placed_local = 0
+        self.placed_remote = 0
+        self.placement_bytes_avoided = 0.0
+
+    # ---- telemetry probes ----
+    def queued_device_seconds(self, server: str) -> float:
+        """Scheduler view: dep-resolved device-seconds queued on
+        ``server`` across its devices, plus each device's in-service
+        remainder."""
+        host = self.cluster.hosts[server]
+        now = self.cluster.clock.now
+        total = 0.0
+        for dname, dev in host.devices.items():
+            total += host.schedulers[dname].queued_seconds()
+            rem = dev._busy_until - now
+            if rem > 0.0:
+                total += rem
+        return total
+
+    def queue_depth(self, server: str) -> float:
+        """Effective backlog: max of the scheduler probe and the
+        engine's outstanding tally. The probe is exact for work whose
+        deps resolved; the tally also sees same-instant enqueues whose
+        deps are still in flight (each covers the other's blind spot,
+        and everything the tally sees late the probe sees precisely)."""
+        q = self.queued_device_seconds(server)
+        o = self.outstanding.get(server, 0.0)
+        return q if q > o else o
+
+    def replica_servers(self, rt, buf) -> set:
+        """Servers holding a valid replica of ``buf``'s bytes: the
+        tenant's own copies plus — through the content-addressed store
+        — any tenant's replica of identical content."""
+        srvs = {s for s in buf.valid_on if s != "client"}
+        store = self.cluster.store
+        if store is not None:
+            srvs |= store.replica_servers(buf)
+        return srvs
+
+    def kernel_cost(self, server: str, device: str, flops: float,
+                    bytes_moved: float, duration: Optional[float]) -> float:
+        host = self.cluster.hosts[server]
+        dev = host.devices.get(device) or \
+            host.devices[next(iter(host.devices))]
+        return dev.kernel_cost(flops, bytes_moved, duration)
+
+    def transfer_eta(self, rt, buf, dst: str) -> float:
+        """Estimated time to make ``buf`` resident on ``dst``: zero if
+        a replica is already there, else the cheapest source replica's
+        peer-link delivery (link queue + egress/ingress NIC occupancy,
+        whichever governs + serialization at wire scale + propagation,
+        plus the one-time RDMA registration when unregistered), else —
+        client-held data — the same estimate over the tenant's access
+        link. Mirrors ``_pick_migration_source``'s cost model from the
+        placement side."""
+        srcs = self.replica_servers(rt, buf)
+        if dst in srcs:
+            return 0.0
+        nbytes = buf.transfer_bytes()
+        now = self.cluster.clock.now
+        hosts = self.cluster.hosts
+        nic_in = hosts[dst].nic_in
+        in_queue = nic_in.queue_seconds(now) if nic_in is not None else 0.0
+        best = None
+        tr = rt.peer_transport
+        for s in sorted(srcs):
+            link = self.cluster.p_links.get((s, dst)) \
+                or self.cluster.p_links.get((dst, s))
+            if link is None or not link.up:
+                continue
+            queue = link.queue_seconds(now)
+            nic = hosts[s].nic
+            if nic is not None:
+                nq = nic.queue_seconds(now)
+                if nq > queue:
+                    queue = nq
+            if in_queue > queue:
+                queue = in_queue
+            bw = link.bandwidth
+            t = queue + link.latency + (
+                (CMD_BYTES + nbytes) * wire_scale(tr, bw) / bw
+                if bw else 0.0)
+            if (buf.id, s, dst) not in rt._mr_registered:
+                t += tr.register_buffer(nbytes, peers=len(rt.servers) - 1)
+            if best is None or t < best:
+                best = t
+        if best is not None:
+            return best
+        # client-held only: an upload over this tenant's access link
+        link = rt.c_links.get(dst)
+        if link is None or not link.up:
+            return float("inf")
+        queue = link.queue_seconds(now)
+        if in_queue > queue:
+            queue = in_queue
+        bw = link.bandwidth
+        return queue + link.latency + (
+            (CMD_BYTES + nbytes) * wire_scale(rt.transport, bw) / bw
+            if bw else 0.0)
+
+    # ---- the enqueue hook ----
+    def place(self, rt, requested: str, device: str, inputs,
+              flops: float, bytes_moved: float,
+              duration: Optional[float]) -> str:
+        """Pick the execution server for one kernel. Pure bookkeeping:
+        consumes no simulated time, mutates nothing shared. Candidates
+        are the tenant's available sessions in sorted order (the
+        deterministic tie-break every policy inherits); with none, the
+        requested server is returned and the caller raises its usual
+        ``DeviceUnavailable``."""
+        policy = rt._placement_policy or self.default_policy
+        if type(policy) is PinnedPolicy:
+            # fast path, and bit-exactness by construction: no
+            # telemetry is read, nothing but the counter moves
+            self.decisions += 1
+            self.placed_local += 1
+            return requested
+        # an explicitly-named device restricts candidates to hosts that
+        # actually have it — redirecting a 'gpu0' kernel to a TPU-only
+        # host would KeyError at dispatch, long after the decision
+        candidates = [s for s in sorted(rt.servers)
+                      if rt.sessions[s].available
+                      and (not device
+                           or device in self.cluster.hosts[s].devices)]
+        if not candidates:
+            return requested
+        chosen = policy.place(self, rt, requested, candidates, device,
+                              inputs, flops, bytes_moved, duration)
+        self.decisions += 1
+        if chosen == requested:
+            self.placed_local += 1
+        else:
+            self.placed_remote += 1
+            for b in inputs:
+                srvs = self.replica_servers(rt, b)
+                if chosen in srvs and requested not in srvs:
+                    self.placement_bytes_avoided += b.transfer_bytes()
+        return chosen
+
+    def record(self, server: str, cost: float, ev) -> None:
+        """Track a placed kernel's device-seconds on ``server`` until
+        its event finishes (complete or error — both callbacks fire),
+        feeding ``queue_depth``'s outstanding side. A no-op until some
+        tenant or the cluster uses a non-pinned policy — nothing would
+        ever read the tally."""
+        if not self.telemetry_active or cost <= 0.0:
+            return
+        self.outstanding[server] = \
+            self.outstanding.get(server, 0.0) + cost
+
+        def done(_e):
+            self.outstanding[server] -= cost
+
+        ev.on_complete(done)
+
+    # ---- reporting ----
+    def stats(self) -> dict:
+        return {
+            "policy": self.default_policy.name,
+            "decisions": self.decisions,
+            "placed_local": self.placed_local,
+            "placed_remote": self.placed_remote,
+            "placement_bytes_avoided": self.placement_bytes_avoided,
+        }

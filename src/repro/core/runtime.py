@@ -55,6 +55,16 @@ pluggable scheduler (FIFO baseline or weighted deficit-round-robin —
 without an explicit cluster builds a private one, preserving the
 original single-tenant API.
 
+Kernel placement is a cluster-wide control plane (DESIGN.md §6,
+``Cluster(placement=...)``): every ``enqueue_kernel`` passes its
+requested server through the ``PlacementEngine``, which may redirect
+the kernel (and its implicit migrations) using live telemetry — run-
+queue depth in device-seconds, replica locality from the buffer/store
+state, and NIC occupancy on both ends. Policies are pluggable
+(``pinned`` — the bit-exact default honoring the caller's pick,
+``locality``, ``hetmec``) and can be overridden per tenant
+(``ClientRuntime(placement=...)``).
+
 Cross-tenant payloads deduplicate through the cluster's opt-in
 content-addressed buffer store (DESIGN.md §5, ``Cluster(store=True)``):
 identical uploads resolve to one shared physical replica set per server
@@ -81,6 +91,8 @@ from repro.core.buffers import Buffer
 from repro.core.events import (COMPLETE, ERROR, QUEUED, RUNNING, SUBMITTED,
                                Event)
 from repro.core.netsim import NIC, DeviceSim, Link, SimClock
+from repro.core.placement import (PinnedPolicy, PlacementEngine,
+                                  make_placement_policy)
 from repro.core.scheduler import DeviceScheduler, make_policy
 from repro.core.store import BufferStore, DIGEST_BYTES, content_digest
 from repro.core.transport import (make_transport, wire_scale,
@@ -137,6 +149,9 @@ class ServerHost:
             for name in self.devices}
         self.nic = (NIC(cluster.nic_bandwidth, f"{self.name}.nic")
                     if cluster.nic_bandwidth else None)
+        self.nic_in = (NIC(cluster.nic_ingress_bandwidth,
+                           f"{self.name}.nic_in")
+                       if cluster.nic_ingress_bandwidth else None)
         self.sessions: dict = {}     # session id (bytes) -> ServerSim
 
 
@@ -149,9 +164,13 @@ class Cluster:
 
     ``scheduler`` picks the cross-session device policy (``'fifo'`` |
     ``'drr'``); ``nic_bandwidth`` (B/s) enables the shared-NIC egress
-    model for every host (None keeps the pre-NIC independent-link
-    behavior). A ``ClientRuntime`` built without an explicit cluster
-    creates a private one, so the single-tenant API is unchanged.
+    model for every host and ``nic_ingress_bandwidth`` its receive-side
+    mirror (None keeps the pre-NIC independent-link behavior on that
+    side); ``placement`` picks the cluster-wide kernel placement policy
+    (``'pinned'`` | ``'locality'`` | ``'hetmec'``, DESIGN.md §6 — a
+    tenant can override it per ``ClientRuntime``). A ``ClientRuntime``
+    built without an explicit cluster creates a private one, so the
+    single-tenant API is unchanged.
     """
 
     def __init__(self, servers: Sequence[ServerSpec],
@@ -161,19 +180,25 @@ class Cluster:
                  scheduler: str = "fifo",
                  scheduler_quantum: Optional[float] = None,
                  nic_bandwidth: Optional[float] = None,
+                 nic_ingress_bandwidth: Optional[float] = None,
                  store: bool = False,
-                 store_capacity: Optional[float] = None):
+                 store_capacity: Optional[float] = None,
+                 placement: str = "pinned"):
         self.clock = SimClock()
         self.peer_transport = make_transport(peer_transport, svm)
         self.scheduler_policy = scheduler
         self.scheduler_quantum = scheduler_quantum
         self.nic_bandwidth = nic_bandwidth
+        self.nic_ingress_bandwidth = nic_ingress_bandwidth
         # content-addressed cross-tenant buffer store (DESIGN.md §5):
         # opt-in so a store-less cluster keeps private-copy semantics
         # bit-exact (it is also the dedup benchmark's baseline)
         self.store = (BufferStore(self.clock, store_capacity)
                       if store or store_capacity is not None else None)
         self.hosts = {s.name: ServerHost(self, s) for s in servers}
+        # cluster-wide placement control plane (DESIGN.md §6); 'pinned'
+        # keeps every caller's hard-picked server bit-exactly
+        self.placement = PlacementEngine(self, placement)
         self.p_links: dict = {}
         self._tenant_seq = 0      # monotonic: default names never recycle
         names = list(self.hosts)
@@ -209,9 +234,16 @@ class Cluster:
                           for h, host in self.hosts.items()},
             "nic_busy": {h: (host.nic.busy_time if host.nic else 0.0)
                          for h, host in self.hosts.items()},
+            "nic_in_bytes": {h: (host.nic_in.bytes_sent
+                                 if host.nic_in else 0)
+                             for h, host in self.hosts.items()},
+            "nic_in_busy": {h: (host.nic_in.busy_time
+                                if host.nic_in else 0.0)
+                            for h, host in self.hosts.items()},
             "peer_link_bytes": {f"{a}-{b}": l.bytes_sent
                                 for (a, b), l in self.p_links.items()},
             "store": self.store.stats() if self.store is not None else None,
+            "placement": self.placement.stats(),
         }
 
 
@@ -429,8 +461,10 @@ class ClientRuntime:
                  scheduler: Optional[str] = None,
                  scheduler_quantum: Optional[float] = None,
                  nic_bandwidth: Optional[float] = None,
+                 nic_ingress_bandwidth: Optional[float] = None,
                  store: Optional[bool] = None,
-                 store_capacity: Optional[float] = None):
+                 store_capacity: Optional[float] = None,
+                 placement: Optional[str] = None):
         if completion_routing not in ("subscription", "broadcast"):
             raise ValueError(f"unknown completion_routing "
                              f"{completion_routing!r}")
@@ -447,8 +481,11 @@ class ClientRuntime:
                               svm=svm, scheduler=scheduler or "fifo",
                               scheduler_quantum=scheduler_quantum,
                               nic_bandwidth=nic_bandwidth,
+                              nic_ingress_bandwidth=nic_ingress_bandwidth,
                               store=bool(store),
-                              store_capacity=store_capacity)
+                              store_capacity=store_capacity,
+                              placement=placement or "pinned")
+            self._placement_policy = None   # cluster default covers it
         else:
             if servers is not None:
                 raise ValueError("pass either servers or cluster, not both")
@@ -457,6 +494,7 @@ class ClientRuntime:
                        "scheduler": scheduler,
                        "scheduler_quantum": scheduler_quantum,
                        "nic_bandwidth": nic_bandwidth,
+                       "nic_ingress_bandwidth": nic_ingress_bandwidth,
                        "store": store,
                        "store_capacity": store_capacity}
             bad = [k for k, v in ignored.items() if v is not None]
@@ -468,6 +506,16 @@ class ClientRuntime:
                     f"{', '.join(sorted(bad))} are cluster-level settings; "
                     f"pass them to Cluster(), not to a ClientRuntime "
                     f"attaching to an existing one")
+            # placement, by contrast, is legitimately per-tenant when
+            # attaching: it decides where THIS tenant's kernels run,
+            # reading the same shared telemetry (DESIGN.md §6)
+            self._placement_policy = (make_placement_policy(placement)
+                                      if placement is not None else None)
+            if self._placement_policy is not None and \
+                    type(self._placement_policy) is not PinnedPolicy:
+                # someone will read the telemetry now: start keeping
+                # the engine's outstanding tally (stays on for good)
+                cluster.placement.telemetry_active = True
         self.cluster = cluster
         self.clock = cluster.clock
         # default names come from a monotonic counter, not the live
@@ -537,6 +585,13 @@ class ClientRuntime:
     def peer_link(self, a: str, b: str) -> Link:
         return self.cluster.peer_link(a, b)
 
+    def _nic_in(self, server: str) -> Optional[NIC]:
+        """The receiving host's shared ingress port (None when the
+        cluster models no ingress NIC). Every send that terminates at a
+        server passes through it; sends to the client do not — the UE
+        side has no modeled port."""
+        return self.cluster.hosts[server].nic_in
+
     def _handshake(self, server: str) -> float:
         """Returns the sim time at which the session becomes available."""
         sess = self.sessions[server]
@@ -551,7 +606,8 @@ class ClientRuntime:
             srv.host.sessions[sess.session_id] = srv
             sess.available = True
 
-        return self.c_links[server].send(64, done)
+        return self.c_links[server].send(64, done,
+                                         ingress=self._nic_in(server))
 
     # ---- buffers ----
     def create_buffer(self, nbytes: int, content_size_buffer: Buffer = None,
@@ -593,10 +649,24 @@ class ClientRuntime:
                        flops: float = 0.0, bytes_moved: float = 0.0,
                        duration: Optional[float] = None,
                        wait_for: Sequence[Event] = (),
-                       name: str = "kernel") -> Event:
+                       name: str = "kernel",
+                       pin: bool = False) -> Event:
         """Enqueue a kernel; implicit migrations are added for any input
-        not valid on the target server (standard OpenCL semantics)."""
+        not valid on the target server (standard OpenCL semantics).
+
+        ``server`` is the *requested* placement: the cluster's placement
+        engine (DESIGN.md §6) may redirect the kernel — and therefore
+        its implicit migrations — to a better host. The default
+        ``pinned`` policy always honors the request, preserving the
+        hard-picked behavior bit-exactly; ``pin=True`` bypasses the
+        engine for this one kernel regardless of policy (used by the
+        redundant-dispatch race, whose whole point is landing each copy
+        on a DIFFERENT explicitly-chosen server)."""
         self._check_live()
+        engine = self.cluster.placement
+        if not pin:
+            server = engine.place(self, server, device, inputs, flops,
+                                  bytes_moved, duration)
         if not self.sessions[server].available:
             raise DeviceUnavailable(server)
         deps = list(wait_for)
@@ -620,6 +690,10 @@ class ClientRuntime:
                               bytes_moved=bytes_moved, duration=duration,
                               name=name)
         ev = self._new_event(cmd, server)
+        if engine.telemetry_active:
+            engine.record(server,
+                          engine.kernel_cost(server, device, flops,
+                                             bytes_moved, duration), ev)
         self._send_command(ev, server, device, [d.id for d in deps])
         for b in outputs:
             # eager client-side clobber: later enqueues must neither read
@@ -1026,11 +1100,13 @@ class ClientRuntime:
     def _send_migration_chunks(self, link: Link, tr, nbytes: float,
                                extra_overhead: float,
                                arrived: Callable,
-                               egress: Optional[NIC] = None) -> bool:
+                               egress: Optional[NIC] = None,
+                               ingress: Optional[NIC] = None) -> bool:
         """Shared bulk-payload leg for both migration paths: build the
         transport's cut-through plan, apply wire inflation, keep the
         scoreboard, and send (``egress`` is the sending host's shared
-        NIC when the transfer leaves a server). ``arrived`` fires after
+        NIC when the transfer leaves a server, ``ingress`` the
+        receiving host's when it lands on one). ``arrived`` fires after
         the last chunk's receiver-side work. Returns False if the link
         is down (the transfer was dropped)."""
         if nbytes > 0:
@@ -1050,7 +1126,7 @@ class ClientRuntime:
 
         if link.send_chunked(chunks, delivered,
                              serialize_overhead=extra_overhead + fixed,
-                             egress=egress) is None:
+                             egress=egress, ingress=ingress) is None:
             return False
         self.chunks_in_flight += n_chunks
         if self.chunks_in_flight > self.peak_chunks_in_flight:
@@ -1076,7 +1152,8 @@ class ClientRuntime:
 
         if not self._send_migration_chunks(self.c_links[dst],
                                            self.transport, nbytes, 0.0,
-                                           arrived):
+                                           arrived,
+                                           ingress=self._nic_in(dst)):
             self._fail_dropped_migration(ev, dst)
 
     def marker(self) -> Event:
@@ -1126,7 +1203,8 @@ class ClientRuntime:
                     self.servers[server].receive_command, ev, device, deps)
 
             if link.send_chunked(chunks, deliver_chunked,
-                                 serialize_overhead=CLIENT_SUBMIT + fixed) \
+                                 serialize_overhead=CLIENT_SUBMIT + fixed,
+                                 ingress=self._nic_in(server)) \
                     is not None:
                 # count only bytes that actually went out (a down link
                 # drops the send) — mirrors bytes_on_wire's accounting
@@ -1142,7 +1220,8 @@ class ClientRuntime:
         link.send((cost.wire_bytes + extra_wire)
                   * wire_scale(self.transport, link.bandwidth),
                   deliver,
-                  serialize_overhead=CLIENT_SUBMIT + cost.sender_cpu)
+                  serialize_overhead=CLIENT_SUBMIT + cost.sender_cpu,
+                  ingress=self._nic_in(server))
 
     # ---- migration execution (on source server) ----
     def _start_p2p_push(self, src_srv: ServerSim, ev: Event):
@@ -1178,7 +1257,8 @@ class ClientRuntime:
             self.servers[dst]._complete(ev)
 
         if not self._send_migration_chunks(link, tr, nbytes, reg, arrived,
-                                           egress=src_srv.host.nic):
+                                           egress=src_srv.host.nic,
+                                           ingress=self._nic_in(dst)):
             self._fail_dropped_migration(ev, dst)
 
     def _store_replica_landed(self, buf: Buffer, dst: str):
@@ -1251,7 +1331,8 @@ class ClientRuntime:
             link.send(comp.wire_bytes,
                       lambda p=self.servers[name]:
                       p.notify_remote_complete(ev.id),
-                      serialize_overhead=comp.sender_cpu, egress=nic)
+                      serialize_overhead=comp.sender_cpu, egress=nic,
+                      ingress=self._nic_in(name))
             self.peer_completion_msgs += 1
 
     def _route_completion_via_client(self, ev: Event):
@@ -1266,7 +1347,8 @@ class ClientRuntime:
             self.c_links[name].send(
                 comp.wire_bytes,
                 lambda p=self.servers[name]: p.notify_remote_complete(ev.id),
-                serialize_overhead=comp.sender_cpu)
+                serialize_overhead=comp.sender_cpu,
+                ingress=self._nic_in(name))
             self.client_routed_completion_msgs += 1
 
     def _client_reap(self, ev: Event):
@@ -1288,7 +1370,8 @@ class ClientRuntime:
                     comp.wire_bytes,
                     lambda p=self.servers[name]:
                     p.notify_remote_complete(ev.id),
-                    serialize_overhead=comp.sender_cpu)
+                    serialize_overhead=comp.sender_cpu,
+                    ingress=self._nic_in(name))
                 self.client_routed_completion_msgs += 1
         ev.release()                # client hold: completion observed
 
@@ -1390,9 +1473,11 @@ class ClientRuntime:
                     link.send(cost.wire_bytes,
                               lambda e=ev, d=device, dd=deps:
                               daemon.receive_command(e, d, dd),
-                              serialize_overhead=cost.sender_cpu)
+                              serialize_overhead=cost.sender_cpu,
+                              ingress=self._nic_in(server))
 
-            link.send(64 + 16, handshook)   # handshake incl. session id
+            link.send(64 + 16, handshook,   # handshake incl. session id
+                      ingress=self._nic_in(server))
         if at is None:
             go()
         else:
@@ -1427,7 +1512,10 @@ class ClientRuntime:
         for s in servers:
             if not self.sessions[s].available:
                 continue
-            ev = self.enqueue_kernel(s, fn=None, **kw)
+            # pin=True: the race's value IS the explicit server spread —
+            # a placement policy would happily collapse every copy onto
+            # the one telemetry-best host, defeating the mitigation
+            ev = self.enqueue_kernel(s, fn=None, pin=True, **kw)
             ev.on_complete(on_done)
         return race
 
@@ -1505,6 +1593,9 @@ class ClientRuntime:
             "dedup_hits": self.dedup_hits,
             "dedup_bytes_saved": self.dedup_bytes_saved,
             "detached": self.detached,
+            # placement scoreboard (DESIGN.md §6) — cluster-wide, like
+            # peer_link_bytes: decisions across every attached tenant
+            "placement": self.cluster.placement.stats(),
         }
 
 

@@ -47,24 +47,34 @@ class FIFOPolicy:
     """Single arrival-order queue across every session (baseline)."""
 
     name = "fifo"
-    __slots__ = ("_q",)
+    __slots__ = ("_q", "_cost")
 
     def __init__(self):
-        self._q: deque = deque()      # (tenant, run) in arrival order
+        self._q: deque = deque()      # (tenant, cost, run) in arrival order
+        self._cost = 0.0              # queued device-seconds
 
     def push(self, tenant, weight: float, cost: float, run: Callable):
-        self._q.append((tenant, run))
+        self._q.append((tenant, cost, run))
+        self._cost += cost
 
     def pop(self) -> Optional[Callable]:
-        return self._q.popleft()[1] if self._q else None
+        if not self._q:
+            return None
+        _t, cost, run = self._q.popleft()
+        self._cost -= cost
+        return run
+
+    def queued_seconds(self) -> float:
+        return self._cost
 
     def remove(self, tenant) -> int:
         """Drop every queued command of ``tenant`` (detach); returns the
         number removed. The in-service command, if any, was already
         popped and runs to completion (non-preemptive)."""
-        kept = [(t, r) for t, r in self._q if t is not tenant]
+        kept = [(t, c, r) for t, c, r in self._q if t is not tenant]
         removed = len(self._q) - len(kept)
         self._q = deque(kept)
+        self._cost = sum(c for _t, c, _r in kept)
         return removed
 
     def __len__(self):
@@ -85,7 +95,7 @@ class DRRPolicy:
 
     name = "drr"
     __slots__ = ("quantum", "_queues", "_weights", "_deficit", "_ring",
-                 "_granted")
+                 "_granted", "_cost")
 
     def __init__(self, quantum: float = DEFAULT_QUANTUM):
         if not quantum > 0.0:
@@ -98,6 +108,7 @@ class DRRPolicy:
         self._deficit: dict = {}      # only tenants currently in the ring
         self._ring: deque = deque()
         self._granted = False
+        self._cost = 0.0              # queued device-seconds
 
     def push(self, tenant, weight: float, cost: float, run: Callable):
         self._weights[tenant] = weight
@@ -112,6 +123,10 @@ class DRRPolicy:
             if len(self._ring) == 1:
                 self._granted = False
         q.append((cost, run))
+        self._cost += cost
+
+    def queued_seconds(self) -> float:
+        return self._cost
 
     def pop(self) -> Optional[Callable]:
         ring = self._ring
@@ -128,6 +143,7 @@ class DRRPolicy:
             if cost <= self._deficit[t]:
                 q.popleft()
                 self._deficit[t] -= cost
+                self._cost -= cost
                 if not q:
                     del self._deficit[t]    # forfeit on going idle
                     ring.popleft()
@@ -161,6 +177,8 @@ class DRRPolicy:
         q = self._queues.pop(tenant, None)
         self._weights.pop(tenant, None)
         removed = len(q) if q else 0
+        if q:
+            self._cost -= sum(c for c, _r in q)
         if self._deficit.pop(tenant, None) is not None:
             if self._ring and self._ring[0] is tenant:
                 self._granted = False
@@ -216,6 +234,14 @@ class DeviceScheduler:
         completion; its events were failed by the caller, so completion
         is a no-op there."""
         return self.policy.remove(tenant)
+
+    def queued_seconds(self) -> float:
+        """Queue-depth probe (DESIGN.md §6): device-seconds of work
+        sitting in this run queue, policy-independent. The in-service
+        command is NOT included — its remainder shows on the device's
+        own busy-until timeline, which the placement engine reads
+        alongside this probe."""
+        return self.policy.queued_seconds()
 
     def _dispatch(self):
         run = self.policy.pop()

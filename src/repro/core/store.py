@@ -151,6 +151,15 @@ class BufferStore:
     def entry_for(self, buf: Buffer) -> Optional[StoreEntry]:
         return self._by_buffer.get(buf.id)
 
+    def replica_servers(self, buf: Buffer) -> set:
+        """Replica-location probe (DESIGN.md §6): the servers holding a
+        resident physical replica of ``buf``'s content — ANY tenant's.
+        Placement uses it to send kernels where their inputs already
+        live instead of dragging content to the kernel. Empty when the
+        buffer shares nothing through the store."""
+        entry = self._by_buffer.get(buf.id)
+        return set(entry.valid_on) if entry is not None else set()
+
     def lookup(self, key: bytes) -> Optional[StoreEntry]:
         return self._entries.get(key)
 
