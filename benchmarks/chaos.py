@@ -1,0 +1,412 @@
+"""Chaos gate: the 32-UE AR workload through scripted drain storms and
+server crashes (paper §4.3 robustness; DESIGN.md §7 elastic membership).
+
+Every UE runs the multi-tenant AR frame loop (upload depth map, point
+sort, read back the index) against its primary server, but — unlike the
+``benchmarks.multi_tenant`` UE — tolerates the cluster changing under
+it: when a frame's commands come back ERROR (server crashed) or the
+primary stops taking placements (draining), the UE re-places the frame
+on the least-loaded eligible survivor with bounded exponential backoff.
+A per-UE command ledger counts terminal transitions for every enqueued
+command, so the gate can assert *exactly-once*: no command lost (never
+terminal), none duplicated (terminal twice).
+
+Rows (TCP peers, DRR scheduler, content-addressed store on):
+
+* ``chaos_steady``: no faults — the reference run the recovery gates
+  compare against.
+* ``chaos_drain_storm``: drain s1 at 25% of the steady makespan, join a
+  fresh s4 at 30%, drain s2 at 60%. Gates: zero lost / duplicated /
+  failed / hung frames, the drained servers' replicas all re-homed
+  (none left in any ``valid_on``, tenant or store), the joined server
+  actually served frames, and the storm makespan within
+  ``RECOVERY_CEILING``× steady.
+* ``chaos_crash``: crash s1 at 40% of the steady makespan. Gates: the
+  crash visibly failed commands (fail-fast, not hangs), every affected
+  frame was replayed to completion (zero failed / hung), the bounded
+  reconnect path was exercised and gave up (``reconnect_failures``),
+  and the post-crash p95 frame latency stays within
+  ``POST_CRASH_P95_CEILING``× the steady p95.
+
+Fault times are fractions of the measured steady makespan, which is
+deterministic, so the schedule — and every gate — is bit-reproducible.
+
+  PYTHONPATH=src python -m benchmarks.chaos \
+      [--baseline benchmarks/BENCH_chaos.json] [--write-baseline P]
+
+With ``--baseline``, exits non-zero on a >20% simulated-time regression
+or any chaos-gate violation (used by scripts/ci.sh).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import ETH_40G, GPU_2080TI, MiB, Row, WIFI6, emit
+from repro.core import (COMPLETE, ERROR, ClientRuntime, Cluster,
+                        DeviceUnavailable, FaultSchedule, ServerSpec)
+
+N_SERVERS = 4
+N_UE = 32
+FRAMES = 12
+DEPTH_BYTES = 96 * 1024
+MODEL_BYTES = 2 * MiB
+T_KERNEL = 1e-3
+NIC_BW = 25e9 / 8
+QUANTUM = 2e-3
+STAGGER = 1.3e-3
+RETRIES = 6                     # frame re-placement attempts
+BACKOFF = 2e-3                  # first retry delay (doubles)
+REGRESSION_TOLERANCE = 0.20
+RECOVERY_CEILING = 1.5          # storm makespan vs steady
+POST_CRASH_P95_CEILING = 3.0    # post-crash frame p95 vs steady p95
+REGENERATE = ("python -m benchmarks.chaos "
+              "--write-baseline benchmarks/BENCH_chaos.json")
+
+
+def _mk_cluster() -> Cluster:
+    return Cluster([ServerSpec(f"s{i}", [GPU_2080TI])
+                    for i in range(N_SERVERS)],
+                   peer_link=ETH_40G, peer_transport="tcp",
+                   scheduler="drr", scheduler_quantum=QUANTUM,
+                   nic_bandwidth=NIC_BW, store=True)
+
+
+class ChaosUE:
+    """A fault-tolerant AR client: the closed-loop frame pipeline of
+    ``benchmarks.multi_tenant.UE`` plus re-placement. Frames prefer the
+    primary server while it takes placements; otherwise (and on every
+    retry) the least-loaded eligible session wins. A frame whose
+    commands error is re-enqueued — fresh command ids — after an
+    exponentially growing delay, up to ``RETRIES`` times."""
+
+    def __init__(self, cluster: Cluster, idx: int, frames: int = FRAMES):
+        self.cluster = cluster
+        self.rt = ClientRuntime(cluster=cluster, client_link=WIFI6,
+                                transport="tcp", name=f"ue{idx}")
+        self.idx = idx
+        self.primary = f"s{idx % N_SERVERS}"
+        self.frames = frames
+        self.latencies: list = []
+        self.frame_t0: list = []        # start time of each landed frame
+        self.failed_frames: list = []   # retries exhausted
+        self.retries_used = 0
+        self.frames_by_server: dict = {}
+        self.ledger: dict = {}          # event id -> terminal callbacks
+        self.tracked: list = []
+        self.errors = 0                 # tracked events that ended ERROR
+        self._reconnect_tried = False
+        self.depth = self.rt.create_buffer(DEPTH_BYTES)
+        self.index = self.rt.create_buffer(DEPTH_BYTES)
+        self.model = self.rt.create_buffer(MODEL_BYTES)
+        self._model_data = np.full(MODEL_BYTES // 4, idx, np.uint32)
+        self._frame_no = 0
+
+    # ---- exactly-once ledger ----
+    def _track(self, ev) -> None:
+        self.tracked.append(ev)
+        self.ledger[ev.id] = 0
+
+        def tick(e, i=ev.id):
+            self.ledger[i] += 1
+            if e.status == ERROR:
+                self.errors += 1
+
+        ev.on_complete(tick)
+
+    # ---- placement-aware server pick ----
+    def _pick(self, avoid=None):
+        mm = self.cluster.membership
+        engine = self.cluster.placement
+
+        def ok(s):
+            return (s != avoid and self.rt.sessions[s].available
+                    and mm.is_eligible(s))
+
+        if ok(self.primary):
+            return self.primary
+        best = min(((engine.queue_depth(s), s)
+                    for s in sorted(self.rt.sessions) if ok(s)),
+                   default=None)
+        return best[1] if best is not None else None
+
+    # ---- frame loop ----
+    def start(self, delay: float = 0.0) -> None:
+        self.rt.clock.schedule(delay, self._seed, RETRIES, BACKOFF)
+
+    def _seed(self, tries: int, delay: float) -> None:
+        """Model upload (the app's load phase), retried like a frame."""
+        srv = self._pick()
+        if srv is None:
+            if tries <= 0:
+                self.failed_frames.append(-1)
+                return
+            self.rt.clock.schedule(delay, self._seed, tries - 1,
+                                   delay * 2.0)
+            return
+        ev = self.rt.enqueue_write(srv, self.model, self._model_data)
+        self._track(ev)
+
+        def seeded(_e):
+            if ev.status == COMPLETE:
+                self._next_frame()
+            elif tries > 0:
+                self.rt.clock.schedule(delay, self._seed, tries - 1,
+                                       delay * 2.0)
+            else:
+                self.failed_frames.append(-1)
+
+        ev.on_complete(seeded)
+
+    def _next_frame(self) -> None:
+        i = self._frame_no
+        if i >= self.frames:
+            return
+        self._frame_no += 1
+        self._attempt(i, RETRIES, BACKOFF, self.rt.clock.now, None)
+
+    def _attempt(self, i: int, tries: int, delay: float, t0: float,
+                 avoid) -> None:
+        rt = self.rt
+        srv = self._pick(avoid)
+        if srv is None:
+            # momentarily no eligible host (mid-storm): back off whole
+            if tries <= 0:
+                self.failed_frames.append(i)
+                self._next_frame()
+                return
+            rt.clock.schedule(delay, self._attempt, i, tries - 1,
+                              delay * 2.0, t0, None)
+            return
+        depth_data = np.full(DEPTH_BYTES // 4,
+                             self.idx * 65536 + i, np.uint32)
+        try:
+            e1 = rt.enqueue_write(srv, self.depth, depth_data)
+            e2 = rt.enqueue_kernel(srv, fn=None,
+                                   inputs=[self.depth, self.model],
+                                   outputs=[self.index, self.model],
+                                   duration=T_KERNEL, wait_for=[e1],
+                                   name=f"sort{i}")
+            e3 = rt.enqueue_read(srv, self.index, wait_for=[e2])
+        except DeviceUnavailable:
+            if tries <= 0:
+                self.failed_frames.append(i)
+                self._next_frame()
+                return
+            rt.clock.schedule(delay, self._attempt, i, tries - 1,
+                              delay * 2.0, t0, srv)
+            return
+        for ev in (e1, e2, e3):
+            self._track(ev)
+
+        def settled(_e):
+            if all(ev.status == COMPLETE for ev in (e1, e2, e3)):
+                self.latencies.append(rt.clock.now - t0)
+                self.frame_t0.append(t0)
+                self.frames_by_server[srv] = \
+                    self.frames_by_server.get(srv, 0) + 1
+                self._next_frame()
+                return
+            # server died under the frame: once, probe the bounded
+            # reconnect path (it gives up against a dead host), then
+            # re-place on a survivor
+            if not self._reconnect_tried and \
+                    not self.cluster.membership.is_alive(srv):
+                self._reconnect_tried = True
+                rt.reconnect(srv)
+            if tries > 0:
+                self.retries_used += 1
+                rt.clock.schedule(delay, self._attempt, i, tries - 1,
+                                  delay * 2.0, t0, srv)
+            else:
+                self.failed_frames.append(i)
+                self._next_frame()
+
+        e3.on_complete(settled)
+
+
+def _percentile(lat, q):
+    return float(np.percentile(np.asarray(lat) * 1e3, q))
+
+
+def _run(fault_fn=None):
+    """One scenario: build the cluster + UEs, optionally let
+    ``fault_fn(cluster, t0)`` script a ``FaultSchedule``, run the
+    workload to quiescence, and collect the ledger."""
+    cluster = _mk_cluster()
+    ues = [ChaosUE(cluster, i) for i in range(N_UE)]
+    cluster.run()                           # handshakes drained
+    t0 = cluster.clock.now
+    if fault_fn is not None:
+        fault_fn(cluster, t0).apply(cluster)
+    for i, ue in enumerate(ues):
+        ue.start(delay=i * STAGGER)
+    cluster.run()
+    elapsed = cluster.clock.now - t0
+    lost = dup = errors = failed = done = retries = reconnects = 0
+    for u in ues:
+        lost += sum(1 for ev in u.tracked
+                    if ev.status not in (COMPLETE, ERROR))
+        dup += sum(1 for c in u.ledger.values() if c > 1)
+        errors += u.errors
+        failed += len(u.failed_frames)
+        done += len(u.latencies)
+        retries += u.retries_used
+        reconnects += sum(u.rt.stats()["reconnect_attempts"].values())
+    hung = N_UE * FRAMES - done - failed
+    lats = [x for u in ues for x in u.latencies]
+    return {
+        "cluster": cluster, "ues": ues,
+        "sim_ms": elapsed * 1e3, "t0": t0,
+        "p95_ms": _percentile(lats, 95),
+        "lost": lost, "dup": dup, "errors": errors,
+        "failed": failed, "hung": hung, "retries": retries,
+        "reconnects": reconnects,
+    }
+
+
+def _leftover_replicas(r, names) -> int:
+    """Replicas still recorded on retired servers after the run: any
+    tenant buffer or store entry whose valid_on mentions one."""
+    n = 0
+    for u in r["ues"]:
+        for buf in (u.depth, u.index, u.model):
+            n += sum(1 for s in names if s in buf.valid_on)
+    store = r["cluster"].store
+    if store is not None:
+        for e in store._entries.values():
+            n += sum(1 for s in names if s in e.valid_on)
+    return n
+
+
+def _ledger_derived(r) -> str:
+    return (f"sim_ms={r['sim_ms']:.3f};p95_ms={r['p95_ms']:.3f};"
+            f"lost={r['lost']};dup={r['dup']};failed={r['failed']};"
+            f"hung={r['hung']};errors={r['errors']};"
+            f"retries={r['retries']}")
+
+
+def run():
+    steady = _run()
+    t_steady = steady["sim_ms"] * 1e-3      # makespan, sim seconds
+
+    def storm(cluster, t0):
+        return (FaultSchedule()
+                .drain(t0 + 0.25 * t_steady, "s1")
+                .join(t0 + 0.30 * t_steady,
+                      ServerSpec("s4", [GPU_2080TI]))
+                .drain(t0 + 0.60 * t_steady, "s2"))
+
+    def crash(cluster, t0):
+        return FaultSchedule().crash(t0 + 0.40 * t_steady, "s1")
+
+    st = _run(storm)
+    mm = st["cluster"].membership.stats()
+    joined_frames = sum(u.frames_by_server.get("s4", 0)
+                        for u in st["ues"])
+    cr = _run(crash)
+    post = [lat for u in cr["ues"]
+            for lat, ft0 in zip(u.latencies, u.frame_t0)
+            if ft0 >= cr["t0"] + 0.40 * t_steady]
+    reconnect_failures = sum(
+        len(u.rt.stats()["reconnect_failures"]) for u in cr["ues"])
+    rows = [
+        Row("chaos_steady", steady["p95_ms"] * 1e3,
+            _ledger_derived(steady)),
+        Row("chaos_drain_storm", st["p95_ms"] * 1e3,
+            _ledger_derived(st)
+            + f";requeued={mm['requeued_commands']}"
+            f";migrated={mm['replicas_migrated']}"
+            f";drain_ms={max(mm['drain_ms']):.3f}"
+            f";joined_frames={joined_frames}"
+            f";resid={_leftover_replicas(st, ('s1', 's2'))}"
+            f";recovery_ratio={st['sim_ms'] / steady['sim_ms']:.3f}"),
+        Row("chaos_crash", cr["p95_ms"] * 1e3,
+            _ledger_derived(cr)
+            + f";post_p95_ms={_percentile(post, 95) if post else 0.0:.3f}"
+            f";post_p95_ratio="
+            f"{(_percentile(post, 95) / steady['p95_ms']) if post else 0.0:.3f}"
+            f";reconnects={cr['reconnects']}"
+            f";reconnect_failures={reconnect_failures}"),
+    ]
+    return emit(rows)
+
+
+def check_baseline(rows, baseline_path: str) -> bool:
+    by_name = {r.name: r for r in rows}
+    ok = common.check_rows(rows, baseline_path,
+                           extract=lambda r: common.derived(r, "sim_ms"),
+                           tolerance=REGRESSION_TOLERANCE,
+                           direction="lower_is_better", unit=" sim_ms",
+                           benchmark="chaos")
+
+    def gate(cond, msg):
+        nonlocal ok
+        if cond:
+            print(f"# {msg} ok", file=sys.stderr)
+        else:
+            print(f"# {msg} FAILED", file=sys.stderr)
+            ok = False
+
+    # exactly-once ledger, on every scenario
+    for r in rows:
+        for key in ("lost", "dup", "failed", "hung"):
+            v = common.derived(r, key)
+            gate(v == 0, f"{r.name}: {key}={v:.0f} (must be 0)")
+    st = by_name["chaos_drain_storm"]
+    gate(common.derived(st, "resid") == 0,
+         "chaos_drain_storm: drained replicas re-homed (resid="
+         f"{common.derived(st, 'resid'):.0f})")
+    gate(common.derived(st, "migrated") >= 1,
+         "chaos_drain_storm: sole-replica migrations ran "
+         f"({common.derived(st, 'migrated'):.0f})")
+    gate(common.derived(st, "joined_frames") >= 1,
+         "chaos_drain_storm: joined server served frames "
+         f"({common.derived(st, 'joined_frames'):.0f})")
+    ratio = common.derived(st, "recovery_ratio")
+    gate(ratio <= RECOVERY_CEILING,
+         f"chaos_drain_storm: recovery ratio {ratio:.3f} <= "
+         f"{RECOVERY_CEILING}")
+    cr = by_name["chaos_crash"]
+    gate(common.derived(cr, "errors") >= 1,
+         "chaos_crash: crash failed commands fast "
+         f"(errors={common.derived(cr, 'errors'):.0f})")
+    gate(common.derived(cr, "reconnect_failures") >= 1,
+         "chaos_crash: bounded reconnect exhausted against dead host "
+         f"({common.derived(cr, 'reconnect_failures'):.0f})")
+    pr = common.derived(cr, "post_p95_ratio")
+    gate(0.0 < pr <= POST_CRASH_P95_CEILING,
+         f"chaos_crash: post-crash p95 ratio {pr:.3f} <= "
+         f"{POST_CRASH_P95_CEILING}")
+    return ok
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=None,
+                    help="BENCH_chaos.json; fail on >20%% sim-time "
+                         "regression or any chaos-gate violation")
+    ap.add_argument("--write-baseline", default=None,
+                    help="write measured sim_ms to this JSON path")
+    ap.add_argument("--json-out", default=None,
+                    help="write the result rows to this JSON path")
+    args = ap.parse_args()
+    rows = run()
+    if args.json_out:
+        common.dump_rows(rows, args.json_out)
+    if args.write_baseline:
+        common.write_baseline(
+            args.write_baseline,
+            {r.name: common.derived(r, "sim_ms") for r in rows},
+            benchmark="chaos", metric="sim_ms",
+            direction="lower_is_better", tolerance=REGRESSION_TOLERANCE,
+            regenerate=REGENERATE)
+    if args.baseline and not check_baseline(rows, args.baseline):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -31,6 +31,7 @@ MODULES = [
     ("migpipe", "benchmarks.migration_pipeline"),
     ("mt", "benchmarks.multi_tenant"),
     ("cfdhalo", "benchmarks.cfd_halo"),
+    ("chaos", "benchmarks.chaos"),
     ("fig11", "benchmarks.rdma_vs_tcp"),
     ("fig12", "benchmarks.matmul_scaling"),
     ("fig13", "benchmarks.rdma_matmul"),

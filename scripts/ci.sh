@@ -10,7 +10,10 @@
 # scaling/fairness, shared-weights dedup — the dedup gate also enforces
 # the >=40% payload-reduction floor — and the CFD halo-exchange
 # placement gate, which also enforces the >=0.75 8-server scaling-
-# efficiency floor and hetmec beating locality-off placement by >=20%).
+# efficiency floor and hetmec beating locality-off placement by >=20%,
+# and the chaos membership gate: exactly-once command ledger under
+# drain/crash, drain-storm recovery <=1.5x steady, post-crash p95
+# <=3x the steady p95).
 # Regenerate baselines with the "regenerate" command stamped inside
 # each BENCH_*.json.
 #
@@ -67,5 +70,10 @@ echo "== CFD halo-exchange placement smoke (20% gates + floors) =="
 python -m benchmarks.cfd_halo \
     --baseline benchmarks/BENCH_cfd.json \
     --json-out "$ARTIFACTS/cfd_halo.json"
+
+echo "== chaos membership smoke (20% gates + exactly-once ledger) =="
+python -m benchmarks.chaos \
+    --baseline benchmarks/BENCH_chaos.json \
+    --json-out "$ARTIFACTS/chaos.json"
 
 echo "ci.sh: all checks passed"

@@ -5,7 +5,10 @@ from repro.core.commands import (BuiltinKernel, Marker, MigrateBuffer,  # noqa: 
                                  NDRangeKernel, ReadBuffer, WriteBuffer)
 from repro.core.events import (COMPLETE, ERROR, QUEUED, RUNNING,  # noqa: F401
                                SUBMITTED, Event)
-from repro.core.netsim import NIC, DeviceSim, Link, SimClock  # noqa: F401
+from repro.core.membership import (ACTIVE, DEAD, DRAINING,  # noqa: F401
+                                   JOINING, MembershipManager)
+from repro.core.netsim import (NIC, DeviceSim, FaultSchedule,  # noqa: F401
+                               Link, SimClock)
 from repro.core.placement import (HetMECPolicy, LocalityPolicy,  # noqa: F401
                                   PinnedPolicy, PlacementEngine,
                                   make_placement_policy)

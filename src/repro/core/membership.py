@@ -1,0 +1,323 @@
+"""Elastic cluster membership: server join / drain / crash (DESIGN.md §7).
+
+Until now the server set was frozen at ``Cluster`` construction and the
+only lifecycle verb was ``ClientRuntime.detach()`` — the *client* side
+of the paper's §4.3 robustness story. MEC platforms manage the server
+side too (ETSI MEP application instantiation / migration / termination;
+arXiv:1702.05309 surveys the mobility machinery), so production
+credibility requires surviving server loss, not only radio flaps.
+
+Each host carries a lifecycle state:
+
+    JOINING ──▶ ACTIVE ──▶ DRAINING ──▶ DEAD
+                   │                     ▲
+                   └───── crash ─────────┘
+
+* **join** (``Cluster.join_server``): a new ``ServerHost`` is admitted
+  live — peer links and NIC models created on the spot, a session
+  handshaken for every attached tenant — and becomes placement-eligible
+  (ACTIVE) once every tenant's session is established. A tenant that
+  attaches later sees it like any seed host.
+* **drain** (``Cluster.drain_server``): graceful decommission. New
+  placements stop (every tenant's session flips unavailable and the
+  placement engine drops the host from its candidate set), the host's
+  scheduled-but-unstarted commands — both run-queue entries and
+  dependency waiters — are requeued through the ``PlacementEngine``
+  onto survivors with their remaining dependencies intact (command ids
+  are preserved, so the §4.3 dedup guarantees exactly-once under
+  requeue), and buffers whose ONLY replica lives on the drained host
+  are migrated out over the pipelined P2P path (replicas that exist
+  elsewhere — another server or the client — are simply dropped). The
+  host retires (DEAD) only when every migration landed and its devices,
+  NIC, and links have gone idle: zero lost, zero duplicated commands.
+* **crash** (``Cluster.crash_server``): abrupt loss. Every link
+  touching the host closes (killing mid-flight chunked transfers, see
+  ``Link``), live events targeting the host fail fast — dependents on
+  survivors observe ERROR through the normal completion routing instead
+  of hanging — store replicas and pendings on the host drop (riders
+  fall back exactly like the PR 4 ride-death path), and clients are
+  expected to retry against re-placed servers with bounded exponential
+  backoff (``ClientRuntime.reconnect`` retries; see ``benchmarks/
+  chaos.py`` for the closed-loop recovery pattern).
+
+``FaultSchedule`` (netsim) scripts these verbs — plus link-flap windows
+— deterministically on the simulated clock, so chaos runs are bit-
+reproducible and their sim-time gates portable.
+
+The manager mutates nothing on hosts it is not asked to touch: a
+bystander tenant whose traffic never crosses the failed host's links
+keeps bit-identical timestamps through a drain or crash (tested).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+# host lifecycle states
+JOINING, ACTIVE, DRAINING, DEAD = ("joining", "active", "draining", "dead")
+
+
+class MembershipManager:
+    """Cluster-wide server lifecycle state machine (one per ``Cluster``).
+
+    Holds the authoritative ``state`` per host and orchestrates the
+    three verbs; the per-object mechanics (session attach, command
+    requeue, event failure) live on ``Cluster`` / ``ClientRuntime`` /
+    ``ServerSim`` so this module never needs to import the runtime."""
+
+    def __init__(self, cluster):
+        self.cluster = cluster
+        self.states: dict = {}        # host name -> lifecycle state
+        # scoreboard (Cluster.stats()['membership'])
+        self.joins = 0
+        self.drains = 0
+        self.crashes = 0
+        self.requeued_commands = 0    # drain: commands re-placed
+        self.replicas_migrated = 0    # drain: sole replicas moved out
+        self.replicas_dropped = 0     # drain/crash: redundant replicas
+        self.drain_ms: list = []      # per completed drain, sim ms
+
+    # ---- state ----
+    def register(self, name: str, state: str = ACTIVE) -> None:
+        self.states[name] = state
+
+    def state(self, name: str) -> str:
+        return self.states.get(name, DEAD)
+
+    def is_eligible(self, name: str) -> bool:
+        """Placement-eligible: new work may land here."""
+        return self.states.get(name) == ACTIVE
+
+    def is_alive(self, name: str) -> bool:
+        """Reachable at all (ACTIVE or still draining its own work)."""
+        return self.states.get(name) in (ACTIVE, DRAINING)
+
+    # ---- join ----
+    def join(self, spec, at: Optional[float] = None,
+             on_active: Optional[Callable] = None):
+        """Admit ``spec`` as a live server. Peer links + NIC models are
+        created now; every attached tenant handshakes a session; the
+        host turns ACTIVE (placement-eligible) once the last handshake
+        lands. Rejoining a DEAD name replaces the corpse with a fresh
+        host (fresh sessions, fresh links — nothing resurrects)."""
+        clock = self.cluster.clock
+        if at is not None:
+            clock.schedule_at(at, self.join, spec, None, on_active)
+            return
+        name = spec.name
+        if self.states.get(name) in (JOINING, ACTIVE, DRAINING):
+            raise ValueError(f"server {name!r} already in the cluster "
+                             f"({self.states[name]})")
+        host = self.cluster._admit_host(spec)
+        self.states[name] = JOINING
+        host.state = JOINING
+        self.joins += 1
+
+        def activate():
+            if self.states.get(name) != JOINING:
+                return              # crashed/drained while joining
+            self.states[name] = ACTIVE
+            host.state = ACTIVE
+            if on_active is not None:
+                on_active()
+
+        deadlines = [rt._attach_server(host)
+                     for rt in list(self.cluster.clients)]
+        if deadlines:
+            # handshake completions are scheduled at exactly these sim
+            # times with earlier heap sequence numbers, so activation
+            # observes every session established
+            clock.schedule_at(max(deadlines), activate)
+        else:
+            activate()
+
+    # ---- drain ----
+    def drain(self, name: str, at: Optional[float] = None,
+              on_complete: Optional[Callable] = None):
+        """Gracefully decommission ``name``: stop new placements,
+        requeue its scheduled-but-unstarted commands through the
+        placement engine, migrate sole-replica buffers to survivors,
+        then retire once the host is idle. Exactly-once: requeued
+        commands keep their ids and leave the old queues before any
+        survivor sees them."""
+        clock = self.cluster.clock
+        if at is not None:
+            clock.schedule_at(at, self.drain, name, None, on_complete)
+            return
+        if self.states.get(name) != ACTIVE:
+            raise ValueError(f"cannot drain server {name!r} in state "
+                             f"{self.states.get(name)!r}")
+        cluster = self.cluster
+        host = cluster.hosts[name]
+        self.states[name] = DRAINING
+        host.state = DRAINING
+        self.drains += 1
+        t0 = clock.now
+        obligations = {"n": 1}        # sentinel until the sweep finishes
+
+        def done_one(_e=None):
+            obligations["n"] -= 1
+            if not obligations["n"]:
+                self._finalize_drain(name, t0, on_complete)
+
+        # 1. no new placements: the host leaves every tenant's available
+        # set (enqueue_kernel raises / the placement engine skips it)
+        for rt in list(cluster.clients):
+            sess = rt.sessions.get(name)
+            if sess is not None:
+                sess.available = False
+
+        # 2. requeue scheduled-but-unstarted work. Run-queue entries
+        # first (dep-resolved, waiting for the device), then dependency
+        # waiters (their remaining deps travel with them). Both leave
+        # the draining host's tables BEFORE the re-send, so the command
+        # can only ever execute once.
+        self.requeued_commands += self._requeue_unstarted(name, host)
+
+        # 3. re-home resident data: buffers whose ONLY replica lives
+        # here move to a survivor over the pipelined migration path;
+        # replicas that exist elsewhere (another server, or the client
+        # holding the canonical copy) are simply dropped.
+        for rt in list(cluster.clients):
+            for buf in rt._buffers:
+                if name not in buf.valid_on:
+                    continue
+                if buf.valid_on - {name}:
+                    buf.valid_on.discard(name)
+                    self.replicas_dropped += 1
+                    continue
+                target = rt._pick_failover_server(exclude=name)
+                if target is None:
+                    buf.valid_on.discard(name)  # data survives host-side
+                    self.replicas_dropped += 1
+                    continue
+                obligations["n"] += 1
+                self.replicas_migrated += 1
+                mig = rt.enqueue_migration(buf, target)
+                mig.on_complete(done_one)
+        done_one()                    # release the sentinel
+
+    def _requeue_unstarted(self, name: str, host) -> int:
+        """Requeue every scheduled-but-unstarted command on ``host``:
+        run-queue entries (dep-resolved, waiting for the device) first,
+        then dependency waiters — whose remaining deps travel with
+        them. Both leave the draining host's tables BEFORE the re-send,
+        so a command can only ever execute once. Returns the count."""
+        n = 0
+        for sch in host.schedulers.values():
+            for session, tag in sch.drain_queued():
+                if tag is None:
+                    continue
+                ev, dev_name = tag
+                session.rt._requeue_after_drain(ev, name, dev_name, [])
+                n += 1
+        for srv in list(host.sessions.values()):
+            for ev, dev_name, dep_ids in srv.drain_waiters():
+                srv.rt._requeue_after_drain(ev, name, dev_name, dep_ids)
+                n += 1
+        return n
+
+    def _finalize_drain(self, name: str, t0: float,
+                        on_complete: Optional[Callable]) -> None:
+        """Retire the host once it has gone quiet: devices idle, NIC
+        drained, peer links drained (a requeue-triggered migration may
+        still be pushing FROM the draining host). Re-arms itself at the
+        latest busy-until when anything is still in flight."""
+        cluster = self.cluster
+        clock = cluster.clock
+        host = cluster.hosts.get(name)
+        if host is None or self.states.get(name) != DRAINING:
+            return
+        busy = max((dev._busy_until for dev in host.devices.values()),
+                   default=0.0)
+        if host.nic is not None and host.nic._busy_until > busy:
+            busy = host.nic._busy_until
+        if host.nic_in is not None and host.nic_in._busy_until > busy:
+            busy = host.nic_in._busy_until
+        # a link's last message is delivered ``latency`` after its wire
+        # leg frees — wait for delivery, not just for the wire
+        for (a, b), link in cluster.p_links.items():
+            if name in (a, b) and link._busy_until + link.latency > busy:
+                busy = link._busy_until + link.latency
+        for rt in cluster.clients:
+            link = rt.c_links.get(name)
+            if link is not None and \
+                    link._busy_until + link.latency > busy:
+                busy = link._busy_until + link.latency
+        if busy > clock.now:
+            clock.schedule_at(busy, self._finalize_drain, name, t0,
+                              on_complete)
+            return
+        # late arrivals: commands that were on the wire when the drain
+        # began registered after the first sweep — requeue them and
+        # re-check (their departure may leave fresh link activity)
+        late = self._requeue_unstarted(name, host)
+        if late:
+            self.requeued_commands += late
+            clock.schedule_at(clock.now, self._finalize_drain, name, t0,
+                              on_complete)
+            return
+        self.states[name] = DEAD
+        host.state = DEAD
+        now = clock.now
+        for rt in list(cluster.clients):
+            rt._server_retired(name)
+        for (a, b), link in cluster.p_links.items():
+            if name in (a, b):
+                link.close()
+        host.sessions.clear()
+        if cluster.store is not None:
+            self.replicas_dropped += \
+                cluster.store.server_retired(name)
+        self.drain_ms.append((now - t0) * 1e3)
+        if on_complete is not None:
+            on_complete()
+
+    # ---- crash ----
+    def crash(self, name: str, at: Optional[float] = None):
+        """Abrupt server loss: links die (mid-flight chunked transfers
+        drop per-chunk), live events on the host fail fast with ERROR
+        propagated to dependents on survivors, store replicas and
+        pendings vanish (riders fall back), queued commands are gone.
+        Recovery is the CLIENT's job: retry / re-place with bounded
+        exponential backoff (§4.3 replay dedup keeps it exactly-once)."""
+        clock = self.cluster.clock
+        if at is not None:
+            clock.schedule_at(at, self.crash, name)
+            return
+        if self.states.get(name) not in (JOINING, ACTIVE, DRAINING):
+            raise ValueError(f"cannot crash server {name!r} in state "
+                             f"{self.states.get(name)!r}")
+        cluster = self.cluster
+        host = cluster.hosts[name]
+        self.states[name] = DEAD
+        host.state = DEAD
+        self.crashes += 1
+        # links first: closing kills mid-flight chunked transfers, whose
+        # on_dropped callbacks fire at `now` (after this function) and
+        # find their events already failed below — the guards make that
+        # a no-op, so ordering is safe either way
+        for (a, b), link in cluster.p_links.items():
+            if name in (a, b):
+                link.close()
+        # queued-but-unstarted commands die with the host (their events
+        # fail below); drain the policies so nothing dispatches later
+        for sch in host.schedulers.values():
+            sch.drain_queued()
+        for rt in list(cluster.clients):
+            rt._server_crashed(name)
+        host.sessions.clear()
+        if cluster.store is not None:
+            self.replicas_dropped += cluster.store.server_retired(name)
+
+    # ---- reporting ----
+    def stats(self) -> dict:
+        return {
+            "states": dict(self.states),
+            "joins": self.joins,
+            "drains": self.drains,
+            "crashes": self.crashes,
+            "requeued_commands": self.requeued_commands,
+            "replicas_migrated": self.replicas_migrated,
+            "replicas_dropped": self.replicas_dropped,
+            "drain_ms": list(self.drain_ms),
+        }

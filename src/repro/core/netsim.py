@@ -118,6 +118,19 @@ class NIC:
         q = self._busy_until - now
         return q if q > 0.0 else 0.0
 
+class _Inflight:
+    """A chunked transfer currently occupying the wire: registered by
+    ``Link.send_chunked`` so a mid-flight ``up = False`` can drop the
+    not-yet-delivered remainder instead of letting it arrive anyway."""
+
+    __slots__ = ("wire_end", "on_dropped", "killed")
+
+    def __init__(self, wire_end: float, on_dropped: Optional[Callable]):
+        self.wire_end = wire_end
+        self.on_dropped = on_dropped
+        self.killed = False
+
+
 class Link:
     """Point-to-point link with FIFO serialization + propagation latency.
 
@@ -127,7 +140,8 @@ class Link:
     """
 
     __slots__ = ("clock", "latency", "bandwidth", "name", "_busy_until",
-                 "bytes_sent", "up", "_schedule_at")
+                 "bytes_sent", "_up", "_closed", "_inflight",
+                 "_schedule_at")
 
     def __init__(self, clock: SimClock, latency: float, bandwidth: float,
                  name: str = ""):
@@ -137,8 +151,41 @@ class Link:
         self.name = name
         self._busy_until = 0.0
         self.bytes_sent = 0
-        self.up = True
+        self._up = True
+        self._closed = False
+        self._inflight: list = []
         self._schedule_at = clock.schedule_at   # bound once: send is hot
+
+    @property
+    def up(self) -> bool:
+        return self._up
+
+    @up.setter
+    def up(self, value: bool):
+        value = bool(value)
+        if self._up and not value:
+            self._kill_inflight()
+        if value and self._closed:
+            return                  # closed links never come back up
+        self._up = value
+
+    def _kill_inflight(self):
+        """The link just went down: chunked transfers whose wire leg has
+        not finished lose their remaining chunks — the receiver never
+        assembles the payload, so delivery is cancelled and the sender's
+        ``on_dropped`` fires now (deterministically, at fault time). A
+        transfer already fully off the wire (only receiver-side copy
+        left) still delivers."""
+        now = self.clock.now
+        keep = []
+        for tok in self._inflight:
+            if tok.wire_end > now:
+                tok.killed = True
+                if tok.on_dropped is not None:
+                    self._schedule_at(now, tok.on_dropped)
+            else:
+                keep.append(tok)
+        self._inflight = keep
 
     def rtt(self) -> float:
         return 2.0 * self.latency
@@ -150,9 +197,13 @@ class Link:
         return q if q > 0.0 else 0.0
 
     def close(self):
-        """Administratively down (tenant detach): later sends drop, and
-        unlike a transient ``up = False`` fault nothing re-raises it."""
-        self.up = False
+        """Administratively down (tenant detach, server death): later
+        sends drop, mid-flight chunked transfers drop, and unlike a
+        transient ``up = False`` fault nothing re-raises it."""
+        if self._up:
+            self._kill_inflight()
+        self._up = False
+        self._closed = True
 
     def send(self, nbytes: float, on_delivered: Callable,
              serialize_overhead: float = 0.0, egress: Optional[NIC] = None,
@@ -222,7 +273,8 @@ class Link:
     def send_chunked(self, chunks, on_delivered: Callable,
                      serialize_overhead: float = 0.0,
                      egress: Optional[NIC] = None,
-                     ingress: Optional[NIC] = None):
+                     ingress: Optional[NIC] = None,
+                     on_dropped: Optional[Callable] = None):
         """Pipelined (cut-through) multi-chunk transfer.
 
         ``chunks`` is a sequence of ``(sender_cpu, wire_bytes,
@@ -243,6 +295,10 @@ class Link:
         ``send`` + a receiver-side ``schedule`` (the store-and-forward
         path); on a busy link the sender-side work overlaps the wait
         instead of following it.
+
+        If the link goes down before the final chunk's wire leg ends,
+        the remaining chunks are lost: ``on_delivered`` never fires and
+        ``on_dropped`` (if given) fires at the fault time instead.
         """
         if not self.up:
             return None  # dropped — sender times out via its own logic
@@ -303,7 +359,19 @@ class Link:
             ingress.bytes_sent += total
             ingress.busy_time += in_occupied
         self.bytes_sent += total
-        self._schedule_at(rcv_free, on_delivered)
+        # register the transfer so a mid-flight down drops the remainder
+        # (the pre-flap time-accounting above stands: the wire WAS held
+        # until the fault; the fault model charges it, as TCP would keep
+        # retransmitting into the dead window)
+        tok = _Inflight(wire_free, on_dropped)
+        self._inflight.append(tok)
+
+        def _deliver():
+            if tok.killed:
+                return
+            self._inflight.remove(tok)
+            on_delivered()
+        self._schedule_at(rcv_free, _deliver)
         return rcv_free
 
 
@@ -345,3 +413,62 @@ class DeviceSim:
 
     def utilization(self, horizon: float) -> float:
         return self.busy_time / horizon if horizon > 0 else 0.0
+
+
+class FaultSchedule:
+    """Deterministic scripted fault injection (DESIGN.md §7).
+
+    Chaos runs must be bit-reproducible so their sim-time gates are
+    portable: every fault is pinned to a sim timestamp up front and
+    ``apply`` arms them all on the cluster's clock before the workload
+    starts. Verbs mirror the membership state machine (``crash``,
+    ``drain``, ``join`` dispatch to the ``Cluster`` delegates,
+    duck-typed so netsim keeps zero runtime imports) plus ``flap``,
+    which takes any ``Link`` down for a window — a flap that lands
+    mid-chunked-transfer drops the in-flight remainder (see
+    ``Link.send_chunked``). Builder-style: each verb returns ``self``.
+    """
+
+    def __init__(self):
+        self._faults: list = []
+
+    def crash(self, at: float, server: str) -> "FaultSchedule":
+        self._faults.append(("crash", at, (server,)))
+        return self
+
+    def drain(self, at: float, server: str,
+              on_complete: Optional[Callable] = None) -> "FaultSchedule":
+        self._faults.append(("drain", at, (server, on_complete)))
+        return self
+
+    def join(self, at: float, spec,
+             on_active: Optional[Callable] = None) -> "FaultSchedule":
+        self._faults.append(("join", at, (spec, on_active)))
+        return self
+
+    def flap(self, at: float, duration: float,
+             link: Link) -> "FaultSchedule":
+        self._faults.append(("flap", at, (duration, link)))
+        return self
+
+    def apply(self, cluster) -> "FaultSchedule":
+        """Arm every scheduled fault on ``cluster.clock``."""
+        clock = cluster.clock
+        for kind, at, args in self._faults:
+            if kind == "crash":
+                clock.schedule_at(at, cluster.crash_server, args[0])
+            elif kind == "drain":
+                name, cb = args
+                clock.schedule_at(
+                    at, lambda n=name, c=cb:
+                    cluster.drain_server(n, on_complete=c))
+            elif kind == "join":
+                spec, cb = args
+                clock.schedule_at(
+                    at, lambda s=spec, c=cb:
+                    cluster.join_server(s, on_active=c))
+            elif kind == "flap":
+                duration, link = args
+                clock.schedule_at(at, setattr, link, "up", False)
+                clock.schedule_at(at + duration, setattr, link, "up", True)
+        return self

@@ -274,9 +274,13 @@ class PlacementEngine:
             return requested
         # an explicitly-named device restricts candidates to hosts that
         # actually have it — redirecting a 'gpu0' kernel to a TPU-only
-        # host would KeyError at dispatch, long after the decision
+        # host would KeyError at dispatch, long after the decision.
+        # Membership (DESIGN.md §7) gates eligibility the same way:
+        # only ACTIVE hosts take new placements — joining hosts are not
+        # established everywhere yet, draining ones are being emptied
+        eligible = self.cluster.membership.is_eligible
         candidates = [s for s in sorted(rt.servers)
-                      if rt.sessions[s].available
+                      if rt.sessions[s].available and eligible(s)
                       and (not device
                            or device in self.cluster.hosts[s].devices)]
         if not candidates:

@@ -90,6 +90,8 @@ from repro.core import commands as C
 from repro.core.buffers import Buffer
 from repro.core.events import (COMPLETE, ERROR, QUEUED, RUNNING, SUBMITTED,
                                Event)
+from repro.core.membership import (ACTIVE, DEAD, DRAINING, JOINING,
+                                   MembershipManager)
 from repro.core.netsim import NIC, DeviceSim, Link, SimClock
 from repro.core.placement import (PinnedPolicy, PlacementEngine,
                                   make_placement_policy)
@@ -153,6 +155,9 @@ class ServerHost:
                            f"{self.name}.nic_in")
                        if cluster.nic_ingress_bandwidth else None)
         self.sessions: dict = {}     # session id (bytes) -> ServerSim
+        # membership lifecycle (DESIGN.md §7); the MembershipManager is
+        # authoritative, this mirror makes hot-path checks a plain load
+        self.state = ACTIVE
 
 
 class Cluster:
@@ -201,6 +206,9 @@ class Cluster:
         self.placement = PlacementEngine(self, placement)
         self.p_links: dict = {}
         self._tenant_seq = 0      # monotonic: default names never recycle
+        # kept for membership joins: a host admitted mid-run gets peer
+        # links of the same spec the seed mesh was built with
+        self.peer_link_spec = peer_link
         names = list(self.hosts)
         for i, a in enumerate(names):
             for b in names[i + 1:]:
@@ -208,6 +216,45 @@ class Cluster:
                                             peer_link.bandwidth,
                                             f"{a}<->{b}")
         self.clients: list = []
+        # elastic membership control plane (DESIGN.md §7): seed hosts
+        # start ACTIVE; join/drain/crash move them through the lifecycle
+        self.membership = MembershipManager(self)
+        for name in self.hosts:
+            self.membership.register(name)
+
+    # ---- membership verbs (delegates to the MembershipManager) ----
+    def join_server(self, spec: ServerSpec, at: Optional[float] = None,
+                    on_active: Optional[Callable] = None) -> None:
+        """Admit a new server into the live cluster (DESIGN.md §7)."""
+        self.membership.join(spec, at, on_active)
+
+    def drain_server(self, name: str, at: Optional[float] = None,
+                     on_complete: Optional[Callable] = None) -> None:
+        """Gracefully decommission ``name``: requeue its unstarted
+        commands, re-home its sole replicas, then retire it."""
+        self.membership.drain(name, at, on_complete)
+
+    def crash_server(self, name: str, at: Optional[float] = None) -> None:
+        """Abruptly kill ``name``: links die, live events fail fast."""
+        self.membership.crash(name, at)
+
+    def _admit_host(self, spec: ServerSpec) -> ServerHost:
+        """Membership join mechanics: build the host and wire fresh peer
+        links to every current member. A rejoin of a DEAD name replaces
+        the corpse's closed links — nothing resurrects."""
+        name = spec.name
+        host = ServerHost(self, spec)
+        self.hosts[name] = host
+        lat = self.peer_link_spec.latency
+        bw = self.peer_link_spec.bandwidth
+        for other in self.hosts:
+            if other == name:
+                continue
+            key = ((other, name) if (other, name) in self.p_links
+                   else (name, other))
+            self.p_links[key] = Link(self.clock, lat, bw,
+                                     f"{key[0]}<->{key[1]}")
+        return host
 
     def peer_link(self, a: str, b: str) -> Link:
         return self.p_links.get((a, b)) or self.p_links[(b, a)]
@@ -244,6 +291,7 @@ class Cluster:
                                 for (a, b), l in self.p_links.items()},
             "store": self.store.stats() if self.store is not None else None,
             "placement": self.placement.stats(),
+            "membership": self.membership.stats(),
         }
 
 
@@ -272,6 +320,20 @@ class ServerSim:
     def receive_command(self, ev: Event, dev_name: str, deps: list):
         """``deps`` is [(dep_event_id, is_local_to_this_server), ...] as
         classified by the client at enqueue time."""
+        if self.host.state == DEAD:
+            # delivered to a corpse (the host retired or crashed while
+            # the command was on the wire): bounce it back through
+            # placement instead of executing or silently dropping. The
+            # command id is unchanged, so if a copy was already
+            # requeued the client-side guard dedups this one.
+            events = self.rt.events
+            for dep_id, _local in deps:
+                dep = events.get(dep_id)
+                if dep is not None:
+                    dep.release()             # retained at _send_command
+            self.rt._requeue_after_drain(ev, self.name, dev_name,
+                                         [d for d, _l in deps])
+            return
         if ev.command.id in self.processed:   # replayed after reconnect
             return
         if ev.status == ERROR:
@@ -326,6 +388,34 @@ class ServerSim:
                 dep.release()                 # retained at _send_command
         # caller runs _dispatch_ready (keeps resolve usable mid-dispatch)
 
+    def drain_waiters(self) -> list:
+        """Server drain (DESIGN.md §7): empty the dependency waiter
+        table, returning ``(ev, dev_name, pending_dep_ids)`` per
+        distinct waiting command so the client can requeue each one on
+        a survivor with its unresolved deps intact. The retained dep
+        references are released here (the requeue's ``_send_command``
+        re-retains what is still live); the old ``processed`` entry is
+        dropped so nothing on this host claims the command anymore."""
+        events = self.rt.events
+        by_waiter: dict = {}          # id(w) -> (w, [dep ids])
+        order: list = []
+        for dep_id, lst in self._waiters.items():
+            for w in lst:
+                rec = by_waiter.get(id(w))
+                if rec is None:
+                    by_waiter[id(w)] = rec = (w, [])
+                    order.append(rec)
+                rec[1].append(dep_id)
+                dep = events.get(dep_id)
+                if dep is not None:
+                    dep.release()             # retained at _send_command
+        self._waiters.clear()
+        out = []
+        for w, dep_ids in order:
+            self.processed.discard(w.ev.command.id)
+            out.append((w.ev, w.dev_name, dep_ids))
+        return out
+
     def notify_remote_complete(self, dep_id: int):
         # record only while the event is live: once retired, any command
         # arriving later resolves via the events-table miss, and a stale
@@ -372,9 +462,21 @@ class ServerSim:
         cost = dev.kernel_cost(flops, bytes_moved, duration)
 
         def run(release):
+            if ev.status == ERROR:
+                # failed while queued (crash fail-fast, detach) but the
+                # entry outlived the sweep: never run a dead command —
+                # and never let RUNNING overwrite a terminal status
+                release()
+                return
             ev.status = RUNNING
 
             def done():
+                if ev.status == ERROR:
+                    # failed while on the device (the host crashed or
+                    # the tenant detached): the outputs must not be
+                    # written — completion is void
+                    release()
+                    return
                 if isinstance(cmd, C.NDRangeKernel) and cmd.fn is not None:
                     ins = [b.data for b in cmd.inputs]
                     outs = cmd.fn(*ins)
@@ -391,7 +493,10 @@ class ServerSim:
 
             ev.t_start, _ = dev.execute(cost, done)
 
-        self.host.schedulers[dname].submit(self, self.rt.weight, cost, run)
+        # the (event, device) tag lets a drain requeue scheduled-but-
+        # unstarted commands without ever firing their run closures
+        self.host.schedulers[dname].submit(self, self.rt.weight, cost, run,
+                                           (ev, dname))
 
     def _complete(self, ev: Event):
         if ev.status == ERROR:
@@ -458,6 +563,8 @@ class ClientRuntime:
                  name: Optional[str] = None,
                  weight: float = 1.0,
                  replay_window: int = 64,
+                 reconnect_retries: int = 4,
+                 reconnect_backoff: float = 2e-3,
                  scheduler: Optional[str] = None,
                  scheduler_quantum: Optional[float] = None,
                  nic_bandwidth: Optional[float] = None,
@@ -541,6 +648,26 @@ class ClientRuntime:
         self.client_routed_completion_msgs = 0  # client → server forwards
         self.sessions = {s: Session(s, replay_window)
                          for s in self.servers}
+        # kept for membership joins: a server admitted mid-run gets a
+        # session and access link of the same spec the seed set did
+        self._replay_window = replay_window
+        self._client_link_spec = client_link
+        # bounded reconnect (DESIGN.md §7): retries with exponential
+        # backoff instead of hanging on a server that never comes back
+        if reconnect_retries < 0:
+            raise ValueError(f"reconnect_retries must be >= 0, "
+                             f"got {reconnect_retries!r}")
+        if not reconnect_backoff > 0.0:
+            raise ValueError(f"reconnect_backoff must be positive, "
+                             f"got {reconnect_backoff!r}")
+        self.reconnect_retries = reconnect_retries
+        self.reconnect_backoff = reconnect_backoff
+        self.reconnect_attempts: dict = {s: 0 for s in self.servers}
+        self.reconnect_failures: dict = {}    # server -> surfaced reason
+        # drain requeue dedup (DESIGN.md §7): a command bounced off a
+        # draining/dead host is re-placed at most once — a replayed or
+        # in-flight duplicate arriving later finds the id here
+        self._requeued: set = set()
         self.local_device = DeviceSim(
             self.clock, "local",
             *( (local_device.flops, local_device.mem_bw)
@@ -577,9 +704,13 @@ class ClientRuntime:
         # established, as clCreateContext would block. A full drain here
         # would fast-forward every other tenant's in-flight work on a
         # shared cluster, so a dynamically-arriving UE could never
-        # contend with work already queued.
-        deadline = max(self._handshake(s) for s in self.servers)
-        self.clock.run(until=deadline)
+        # contend with work already queued. Hosts that are not live
+        # (DEAD/DRAINING members of an elastic cluster) return None —
+        # their sessions simply stay unavailable.
+        deadlines = [d for d in (self._handshake(s) for s in self.servers)
+                     if d is not None]
+        if deadlines:
+            self.clock.run(until=max(deadlines))
 
     # ------------------------------------------------------------------
     def peer_link(self, a: str, b: str) -> Link:
@@ -592,8 +723,12 @@ class ClientRuntime:
         side has no modeled port."""
         return self.cluster.hosts[server].nic_in
 
-    def _handshake(self, server: str) -> float:
-        """Returns the sim time at which the session becomes available."""
+    def _handshake(self, server: str) -> Optional[float]:
+        """Returns the sim time at which the session becomes available,
+        or None when no session can be established (host not live, or
+        the access link is down)."""
+        if self.cluster.hosts[server].state not in (ACTIVE, JOINING):
+            return None
         sess = self.sessions[server]
 
         def done():
@@ -608,6 +743,182 @@ class ClientRuntime:
 
         return self.c_links[server].send(64, done,
                                          ingress=self._nic_in(server))
+
+    # ---- elastic membership hooks (DESIGN.md §7) ----
+    def _attach_server(self, host: ServerHost) -> float:
+        """A server joined the live cluster: build this tenant's session
+        state and access link to it and handshake, exactly as the
+        constructor does for the seed set. Returns the sim time the
+        session becomes available (now, if the handshake cannot start).
+        A rejoin of a previously-dead name replaces the corpse's
+        session wholesale — nothing resurrects."""
+        name = host.name
+        self.servers[name] = ServerSim(self, host)
+        self.sessions[name] = Session(name, self._replay_window)
+        self.c_links[name] = Link(self.clock,
+                                  self._client_link_spec.latency,
+                                  self._client_link_spec.bandwidth,
+                                  f"{self.name}<->{name}")
+        self.reconnect_attempts.setdefault(name, 0)
+        self.reconnect_failures.pop(name, None)
+        d = self._handshake(name)
+        return d if d is not None else self.clock.now
+
+    def _server_retired(self, name: str) -> None:
+        """A drain finished: the host leaves cleanly — every command
+        was executed or requeued and every sole replica re-homed, so
+        this is bookkeeping: close the session and link, drop replica
+        validity (the canonical bytes live on the ``Buffer``), and
+        defensively fail anything that still targets the host."""
+        sess = self.sessions.get(name)
+        if sess is not None:
+            sess.available = False
+            sess.replay.clear()
+            sess.session_id = bytes(16)
+        srv = self.servers.get(name)
+        if srv is not None:
+            srv.processed.clear()
+            srv.resolved_remote.clear()
+            srv._waiters.clear()      # drained: empty unless raced
+            srv._ready.clear()
+            srv.session_id = None
+        link = self.c_links.get(name)
+        if link is not None:
+            link.close()
+        for b in self._buffers:
+            b.valid_on.discard(name)
+        self._fail_events_on(name, f"server {name} retired")
+
+    def _server_crashed(self, name: str) -> None:
+        """Abrupt server loss: every live event targeting the host
+        fails fast — dependents on survivors observe ERROR through the
+        normal completion routing instead of hanging — the session is
+        destroyed (a rejoin is a FRESH server), and replica validity
+        drops. Recovery (retry, re-place, reconnect with backoff) is
+        the client application's move, §4.3-style."""
+        sess = self.sessions.get(name)
+        if sess is not None:
+            sess.available = False
+            sess.replay.clear()
+            sess.session_id = bytes(16)
+        srv = self.servers.get(name)
+        if srv is not None:
+            # commands waiting on deps die with the host; release the
+            # dep references they retained or those events never retire
+            for dep_id, lst in list(srv._waiters.items()):
+                dep = self.events.get(dep_id)
+                if dep is not None:
+                    for _w in lst:
+                        dep.release()
+            srv._waiters.clear()
+            srv._ready.clear()
+            srv.processed.clear()
+            srv.resolved_remote.clear()
+            srv.session_id = None
+        link = self.c_links.get(name)
+        if link is not None:
+            link.close()              # kills mid-flight chunked uploads
+        for b in self._buffers:
+            b.valid_on.discard(name)
+        self._fail_events_on(name, f"server {name} crashed")
+
+    def _fail_events_on(self, name: str, reason: str) -> None:
+        """Fail-fast every live event executing on ``name`` or moving
+        data into it. The in-flight migration table self-cleans: fail()
+        fires the entry's drop callback."""
+        now = self.clock.now
+        for ev in list(self.events.values()):
+            if ev.status in (COMPLETE, ERROR):
+                continue
+            if ev.server == name or \
+                    getattr(ev.command, "dst_server", None) == name:
+                ev.fail(now, reason)
+                self._route_completion_via_client(ev)
+                ev.release()          # no completion ack will ever come
+
+    def _pick_failover_server(self, exclude: Optional[str] = None) \
+            -> Optional[str]:
+        """Least-loaded survivor this tenant can use (drain/crash
+        failover): an available session on an ACTIVE host, by (queue
+        depth, name) so the choice is deterministic."""
+        engine = self.cluster.placement
+        eligible = self.cluster.membership.is_eligible
+        best = None
+        best_key = None
+        for s in sorted(self.sessions):
+            if s == exclude or not eligible(s):
+                continue
+            if not self.sessions[s].available:
+                continue
+            key = (engine.queue_depth(s), s)
+            if best_key is None or key < best_key:
+                best, best_key = s, key
+        return best
+
+    def _requeue_after_drain(self, ev: Event, old_server: str,
+                             dev_name: str, dep_ids: list) -> None:
+        """A draining (or just-dead) server handed back a scheduled-
+        but-unstarted command: re-place it on a survivor. The command
+        id is unchanged, so the §4.3 dedup guarantees exactly-once —
+        the old host's tables dropped the command before this runs, and
+        ``_requeued`` stops a replayed or in-flight duplicate from
+        bouncing a second time."""
+        if self.detached or ev.status in (COMPLETE, ERROR):
+            return
+        if ev.id in self._requeued:
+            return                    # already re-placed: this copy is
+        self._requeued.add(ev.id)     # the §4.3 duplicate — drop it
+        cmd = ev.command
+        if isinstance(cmd, C.MigrateBuffer):
+            self._requeue_migration(ev, cmd)
+            return
+        target = self._pick_failover_server(exclude=old_server)
+        if target is None:
+            ev.fail(self.clock.now,
+                    f"server {old_server} left and no failover target")
+            self._route_completion_via_client(ev)
+            ev.release()              # no completion ack will ever come
+            return
+        dep_ids = list(dep_ids)
+        payload = 0.0
+        if isinstance(cmd, C.NDRangeKernel):
+            # the kernel's implicit input migrations targeted the old
+            # host; re-derive them for the new one
+            for b in cmd.inputs:
+                if target not in b.valid_on:
+                    dep_ids.append(self.enqueue_migration(b, target).id)
+        elif isinstance(cmd, C.WriteBuffer):
+            payload = cmd.nbytes      # the bytes go to the new host now
+            cmd.buffer.valid_on.discard(old_server)
+            cmd.buffer.valid_on.add(target)
+        if dev_name and \
+                dev_name not in self.cluster.hosts[target].devices:
+            dev_name = ""             # heterogeneous fleet: default dev
+        ev.server = target
+        self._send_command(ev, target, dev_name, dep_ids, payload=payload)
+
+    def _requeue_migration(self, ev: Event, cmd) -> None:
+        """Re-drive a migration whose source host left: a fresh
+        enqueue picks a surviving replica (or falls back to a client
+        upload) and the result is mirrored onto the original handle."""
+        buf, dst = cmd.buffer, cmd.dst_server
+        # the handle must leave the coalescing table first: the fresh
+        # migration would otherwise coalesce onto the very event it is
+        # meant to complete
+        self._drop_inflight((buf.id, dst), ev)
+        retry = self.enqueue_migration(buf, dst)
+
+        def mirror(r):
+            if ev.status in (COMPLETE, ERROR):
+                return
+            if r.status == ERROR:
+                ev.fail(self.clock.now, r.error or "migration failed")
+            else:
+                ev.complete(self.clock.now)
+            self._route_completion_via_client(ev)
+            ev.release()              # client observed completion directly
+
+        retry.on_complete(mirror)
 
     # ---- buffers ----
     def create_buffer(self, nbytes: int, content_size_buffer: Buffer = None,
@@ -893,12 +1204,17 @@ class ClientRuntime:
                 if not live:
                     return ride
                 return self._join_events([ride, *live])
-        srcs = [s for s in buf.valid_on if s != "client"]
+        # membership (DESIGN.md §7): a DEAD host's replicas are gone —
+        # never source from one (DRAINING hosts still serve: the drain's
+        # own re-homing pushes FROM the draining host)
+        alive = self.cluster.membership.is_alive
+        srcs = [s for s in buf.valid_on if s != "client" and alive(s)]
         if sentry is not None and sentry.valid_on:
             # §5 replica-aware sourcing across tenants: any server
             # holding a valid replica of this content can serve the
             # push, not just the ones this tenant put it on
-            srcs = sorted({*srcs, *sentry.valid_on})
+            srcs = sorted({*srcs, *(s for s in sentry.valid_on
+                                    if alive(s))})
         if not srcs:  # client-held data: plain upload
             return self.enqueue_write(dst, buf, buf.data
                                       if buf.data is not None
@@ -1083,7 +1399,11 @@ class ClientRuntime:
         re-sent (the daemon already marked the command processed, so a
         replay is deduped): fail fast like the read-return leg does —
         the in-flight entry releases via the failure callbacks, so a
-        retry after reconnect starts a fresh transfer."""
+        retry after reconnect starts a fresh transfer. Idempotent: a
+        crash's fail-fast sweep and the link's mid-flight drop callback
+        can both reach the same event — only the first acts."""
+        if ev.status in (COMPLETE, ERROR):
+            return
         ev.fail(self.clock.now, f"link to {dst} down during migration")
         self._route_completion_via_client(ev)
         ev.release()                # no completion ack will ever come
@@ -1101,14 +1421,18 @@ class ClientRuntime:
                                extra_overhead: float,
                                arrived: Callable,
                                egress: Optional[NIC] = None,
-                               ingress: Optional[NIC] = None) -> bool:
+                               ingress: Optional[NIC] = None,
+                               on_dropped: Optional[Callable] = None) \
+            -> bool:
         """Shared bulk-payload leg for both migration paths: build the
         transport's cut-through plan, apply wire inflation, keep the
         scoreboard, and send (``egress`` is the sending host's shared
         NIC when the transfer leaves a server, ``ingress`` the
         receiving host's when it lands on one). ``arrived`` fires after
         the last chunk's receiver-side work. Returns False if the link
-        is down (the transfer was dropped)."""
+        is down at send time (the transfer was dropped); ``on_dropped``
+        fires instead of ``arrived`` if the link dies mid-flight — the
+        remaining chunks are lost deterministically at fault time."""
         if nbytes > 0:
             fixed, chunks = tr.chunk_plan(nbytes)
         else:   # content-size says empty: command struct only
@@ -1124,9 +1448,15 @@ class ClientRuntime:
             self.chunks_in_flight -= n_chunks
             arrived()
 
+        def dropped():
+            self.chunks_in_flight -= n_chunks
+            if on_dropped is not None:
+                on_dropped()
+
         if link.send_chunked(chunks, delivered,
                              serialize_overhead=extra_overhead + fixed,
-                             egress=egress, ingress=ingress) is None:
+                             egress=egress, ingress=ingress,
+                             on_dropped=dropped) is None:
             return False
         self.chunks_in_flight += n_chunks
         if self.chunks_in_flight > self.peak_chunks_in_flight:
@@ -1150,10 +1480,10 @@ class ClientRuntime:
             # (subscription vs broadcast) with every other path
             self.servers[dst]._complete(ev)
 
-        if not self._send_migration_chunks(self.c_links[dst],
-                                           self.transport, nbytes, 0.0,
-                                           arrived,
-                                           ingress=self._nic_in(dst)):
+        if not self._send_migration_chunks(
+                self.c_links[dst], self.transport, nbytes, 0.0, arrived,
+                ingress=self._nic_in(dst),
+                on_dropped=lambda: self._fail_dropped_migration(ev, dst)):
             self._fail_dropped_migration(ev, dst)
 
     def marker(self) -> Event:
@@ -1256,9 +1586,10 @@ class ClientRuntime:
             ev.server = dst
             self.servers[dst]._complete(ev)
 
-        if not self._send_migration_chunks(link, tr, nbytes, reg, arrived,
-                                           egress=src_srv.host.nic,
-                                           ingress=self._nic_in(dst)):
+        if not self._send_migration_chunks(
+                link, tr, nbytes, reg, arrived,
+                egress=src_srv.host.nic, ingress=self._nic_in(dst),
+                on_dropped=lambda: self._fail_dropped_migration(ev, dst)):
             self._fail_dropped_migration(ev, dst)
 
     def _store_replica_landed(self, buf: Buffer, dst: str):
@@ -1285,6 +1616,11 @@ class ClientRuntime:
         ev.t_start = self.clock.now
 
         def arrived():
+            if ev.status in (COMPLETE, ERROR):
+                # failed fast while the return leg was in flight (the
+                # serving host crashed): the client already observed
+                # ERROR — completing now would double-fire callbacks
+                return
             if buf.version == ev.data_version:
                 # downloaded bytes still match the canonical contents;
                 # a write that landed mid-read makes this copy stale
@@ -1447,41 +1783,89 @@ class ClientRuntime:
     def reconnect(self, server: str, at: Optional[float] = None):
         """Restore the link; replay unacknowledged commands (server dedupes
         by command id). The session ID survives even if the client's
-        address changed."""
+        address changed.
+
+        Bounded (DESIGN.md §7): if the server is gone — crashed,
+        retired, or the link stays dead — the handshake is retried with
+        exponential backoff (``reconnect_backoff`` doubling, up to
+        ``reconnect_retries`` retries beyond the first attempt), then
+        the failure is surfaced: the unacked commands still targeting
+        the server fail so their dependents observe ERROR instead of
+        waiting forever on a session that will never come back. A
+        server that rejoins mid-backoff is picked up by the next
+        attempt (the fresh link is re-read each try)."""
         self._check_live()
 
+        def attempt(tries_left: int, delay: float):
+            self.reconnect_attempts[server] = \
+                self.reconnect_attempts.get(server, 0) + 1
+            link = self.c_links.get(server)
+            if self.cluster.membership.is_alive(server) and \
+                    link is not None:
+                link.up = True        # a closed (dead-host) link stays down
+                if link.up and link.send(
+                        64 + 16,      # handshake incl. session id
+                        lambda: handshook(link),
+                        ingress=self._nic_in(server)) is not None:
+                    return
+            if tries_left > 0:
+                self.clock.schedule(delay, attempt, tries_left - 1,
+                                    delay * 2.0)
+                return
+            self._reconnect_exhausted(server)
+
+        def handshook(link):
+            sess = self.sessions[server]
+            srv = self.servers[server]
+            # present the session id to the daemon's session table
+            # (§4.3): the id, not the transport address, resolves
+            # the server-side session — its replay-dedup state is
+            # what makes the replayed commands below idempotent
+            daemon = srv.host.sessions.get(sess.session_id)
+            if daemon is None:          # expired/unknown: re-admit
+                daemon = srv.host.sessions[sess.session_id] = srv
+            sess.available = True
+            for (ev, _srv_name, device, deps, payload) in \
+                    list(sess.replay):
+                if ev.status in (COMPLETE, ERROR):
+                    continue
+                cost = self.transport.command_cost(payload)
+                link.send(cost.wire_bytes,
+                          lambda e=ev, d=device, dd=deps:
+                          daemon.receive_command(e, d, dd),
+                          serialize_overhead=cost.sender_cpu,
+                          ingress=self._nic_in(server))
+
         def go():
-            link = self.c_links[server]
-            link.up = True
+            attempt(self.reconnect_retries, self.reconnect_backoff)
 
-            def handshook():
-                sess = self.sessions[server]
-                srv = self.servers[server]
-                # present the session id to the daemon's session table
-                # (§4.3): the id, not the transport address, resolves
-                # the server-side session — its replay-dedup state is
-                # what makes the replayed commands below idempotent
-                daemon = srv.host.sessions.get(sess.session_id)
-                if daemon is None:          # expired/unknown: re-admit
-                    daemon = srv.host.sessions[sess.session_id] = srv
-                sess.available = True
-                for (ev, _srv_name, device, deps, payload) in \
-                        list(sess.replay):
-                    if ev.status in (COMPLETE, ERROR):
-                        continue
-                    cost = self.transport.command_cost(payload)
-                    link.send(cost.wire_bytes,
-                              lambda e=ev, d=device, dd=deps:
-                              daemon.receive_command(e, d, dd),
-                              serialize_overhead=cost.sender_cpu,
-                              ingress=self._nic_in(server))
-
-            link.send(64 + 16, handshook,   # handshake incl. session id
-                      ingress=self._nic_in(server))
         if at is None:
             go()
         else:
             self.clock.schedule_at(at, go)
+
+    def _reconnect_exhausted(self, server: str) -> None:
+        """Every reconnect attempt failed: surface it. The commands
+        still unacked in the replay buffer can never be replayed —
+        fail them (unless a drain already re-placed them elsewhere) so
+        nothing upstream hangs on this session."""
+        reason = (f"reconnect to {server} failed after "
+                  f"{self.reconnect_attempts.get(server, 0)} attempts")
+        log.warning("%s: %s", self.name, reason)
+        self.reconnect_failures[server] = reason
+        now = self.clock.now
+        sess = self.sessions.get(server)
+        if sess is None:
+            return
+        for (ev, *_rest) in list(sess.replay):
+            # a drain may have requeued the command to a survivor —
+            # its event now targets that host and must stay live
+            if ev.status in (COMPLETE, ERROR) or ev.server != server:
+                continue
+            ev.fail(now, reason)
+            self._route_completion_via_client(ev)
+            ev.release()            # no completion ack will ever come
+        sess.replay.clear()
 
     def enqueue_kernel_redundant(self, servers: Sequence[str], **kw) -> Event:
         """Straggler mitigation: dispatch the same kernel to several
@@ -1582,6 +1966,9 @@ class ClientRuntime:
                               for s, sess in self.sessions.items()},
             "replay_overflows": {s: sess.lost_unacked
                                  for s, sess in self.sessions.items()},
+            # bounded reconnect (DESIGN.md §7)
+            "reconnect_attempts": dict(self.reconnect_attempts),
+            "reconnect_failures": dict(self.reconnect_failures),
             # data-plane scoreboard (DESIGN.md §3)
             "bytes_on_wire": self.bytes_on_wire,
             "upload_bytes_on_wire": self.upload_bytes_on_wire,

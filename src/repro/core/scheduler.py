@@ -50,17 +50,20 @@ class FIFOPolicy:
     __slots__ = ("_q", "_cost")
 
     def __init__(self):
-        self._q: deque = deque()      # (tenant, cost, run) in arrival order
+        # (tenant, cost, run, tag) in arrival order; ``tag`` identifies
+        # the command for drain-time requeue (the Event, in the runtime)
+        self._q: deque = deque()
         self._cost = 0.0              # queued device-seconds
 
-    def push(self, tenant, weight: float, cost: float, run: Callable):
-        self._q.append((tenant, cost, run))
+    def push(self, tenant, weight: float, cost: float, run: Callable,
+             tag=None):
+        self._q.append((tenant, cost, run, tag))
         self._cost += cost
 
     def pop(self) -> Optional[Callable]:
         if not self._q:
             return None
-        _t, cost, run = self._q.popleft()
+        _t, cost, run, _g = self._q.popleft()
         self._cost -= cost
         return run
 
@@ -71,11 +74,20 @@ class FIFOPolicy:
         """Drop every queued command of ``tenant`` (detach); returns the
         number removed. The in-service command, if any, was already
         popped and runs to completion (non-preemptive)."""
-        kept = [(t, c, r) for t, c, r in self._q if t is not tenant]
+        kept = [e for e in self._q if e[0] is not tenant]
         removed = len(self._q) - len(kept)
         self._q = deque(kept)
-        self._cost = sum(c for _t, c, _r in kept)
+        self._cost = sum(e[1] for e in kept)
         return removed
+
+    def drain_queued(self) -> list:
+        """Empty the queue, returning ``(tenant, tag)`` per entry in
+        arrival order (server drain: the commands are requeued on a
+        survivor, so their ``run`` closures must never fire here)."""
+        out = [(t, g) for t, _c, _r, g in self._q]
+        self._q.clear()
+        self._cost = 0.0
+        return out
 
     def __len__(self):
         return len(self._q)
@@ -103,14 +115,15 @@ class DRRPolicy:
             # it); a negative one shrinks deficits forever
             raise ValueError(f"quantum must be positive, got {quantum!r}")
         self.quantum = quantum
-        self._queues: dict = {}       # tenant -> deque[(cost, run)]
+        self._queues: dict = {}       # tenant -> deque[(cost, run, tag)]
         self._weights: dict = {}
         self._deficit: dict = {}      # only tenants currently in the ring
         self._ring: deque = deque()
         self._granted = False
         self._cost = 0.0              # queued device-seconds
 
-    def push(self, tenant, weight: float, cost: float, run: Callable):
+    def push(self, tenant, weight: float, cost: float, run: Callable,
+             tag=None):
         self._weights[tenant] = weight
         q = self._queues.get(tenant)
         if q is None:
@@ -122,7 +135,7 @@ class DRRPolicy:
             self._ring.append(tenant)
             if len(self._ring) == 1:
                 self._granted = False
-        q.append((cost, run))
+        q.append((cost, run, tag))
         self._cost += cost
 
     def queued_seconds(self) -> float:
@@ -139,7 +152,7 @@ class DRRPolicy:
             if not self._granted:
                 self._deficit[t] += self.quantum * self._weights[t]
                 self._granted = True
-            cost, run = q[0]
+            cost, run, _g = q[0]
             if cost <= self._deficit[t]:
                 q.popleft()
                 self._deficit[t] -= cost
@@ -178,7 +191,7 @@ class DRRPolicy:
         self._weights.pop(tenant, None)
         removed = len(q) if q else 0
         if q:
-            self._cost -= sum(c for c, _r in q)
+            self._cost -= sum(c for c, _r, _g in q)
         if self._deficit.pop(tenant, None) is not None:
             if self._ring and self._ring[0] is tenant:
                 self._granted = False
@@ -187,6 +200,23 @@ class DRRPolicy:
             except ValueError:
                 pass
         return removed
+
+    def drain_queued(self) -> list:
+        """Empty every queue, returning ``(tenant, tag)`` per entry in
+        ring order (server drain: the commands are requeued elsewhere,
+        so their ``run`` closures must never fire here)."""
+        out = []
+        order = list(self._ring) + [t for t in self._queues
+                                    if t not in self._deficit]
+        for t in order:
+            for _c, _r, g in self._queues.get(t, ()):
+                out.append((t, g))
+        self._queues.clear()
+        self._deficit.clear()
+        self._ring.clear()
+        self._granted = False
+        self._cost = 0.0
+        return out
 
     def __len__(self):
         return sum(len(q) for q in self._queues.values())
@@ -220,8 +250,9 @@ class DeviceScheduler:
         self.dispatched = 0          # commands run through this queue
         self.queue_peak = 0          # max commands ever waiting
 
-    def submit(self, tenant, weight: float, cost: float, run: Callable):
-        self.policy.push(tenant, weight, cost, run)
+    def submit(self, tenant, weight: float, cost: float, run: Callable,
+               tag=None):
+        self.policy.push(tenant, weight, cost, run, tag)
         backlog = len(self.policy)
         if backlog > self.queue_peak:
             self.queue_peak = backlog
@@ -234,6 +265,14 @@ class DeviceScheduler:
         completion; its events were failed by the caller, so completion
         is a no-op there."""
         return self.policy.remove(tenant)
+
+    def drain_queued(self) -> list:
+        """Server lifecycle (drain/crash): empty the run queue, returning
+        ``(tenant, tag)`` per queued command so the caller can requeue
+        (drain) or fail (crash) each one. The in-service command — if
+        any — runs to completion; its ``_release`` finds the queue
+        empty."""
+        return self.policy.drain_queued()
 
     def queued_seconds(self) -> float:
         """Queue-depth probe (DESIGN.md §6): device-seconds of work

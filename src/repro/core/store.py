@@ -229,6 +229,26 @@ class BufferStore:
             self._maybe_gc(e)
         self.resident_bytes[server] = used
 
+    # ---- server lifecycle ----
+    def server_retired(self, server: str) -> int:
+        """``server`` left the cluster (drain finished or crash): its
+        resident replicas vanish and its in-flight arrivals will never
+        land. Pending events are NOT failed here — the transfer's own
+        failure path (link kill / fail-fast) owns that; this only drops
+        the pending registration so no later request gates on a transfer
+        into a corpse. Riders on those transfers fall back through the
+        normal ride-death settle (they observe the event's terminal
+        status). Returns the number of replicas dropped."""
+        dropped = 0
+        for entry in list(self._entries.values()):
+            if server in entry.valid_on:
+                entry.valid_on.discard(server)
+                dropped += 1
+            entry.pending.pop(server, None)
+            self._maybe_gc(entry)
+        self.resident_bytes.pop(server, None)
+        return dropped
+
     # ---- reporting ----
     def stats(self) -> dict:
         return {

@@ -1,0 +1,394 @@
+"""Elastic cluster membership (DESIGN.md §7): server join / drain /
+crash, deterministic fault injection, mid-flight chunk drops on link
+faults, and the bounded client reconnect path."""
+import random
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # deterministic fallback, see _hypothesis_stub
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import (ACTIVE, COMPLETE, DEAD, ERROR, ClientRuntime,
+                        Cluster, DeviceSpec, DeviceUnavailable,
+                        FaultSchedule, Link, LinkSpec, ServerSpec,
+                        SimClock)
+
+GPU = DeviceSpec("gpu0")
+PEER = LinkSpec(latency=20e-6, bandwidth=40e9 / 8)
+CLIENT = LinkSpec(latency=61e-6, bandwidth=1e9 / 8)
+
+
+def mk_cluster(n=2, **kw):
+    kw.setdefault("peer_link", PEER)
+    kw.setdefault("peer_transport", "tcp")
+    return Cluster([ServerSpec(f"s{i}", [GPU]) for i in range(n)], **kw)
+
+
+def attach(cluster, **kw):
+    kw.setdefault("client_link", CLIENT)
+    return ClientRuntime(cluster=cluster, **kw)
+
+
+def ledger(events):
+    """Terminal-transition counter per event: the exactly-once probe
+    (0 = lost/hung, 2+ = duplicated completion)."""
+    counts = {e.id: 0 for e in events}
+    for e in events:
+        e.on_complete(lambda _x, i=e.id:
+                      counts.__setitem__(i, counts[i] + 1))
+    return counts
+
+
+# ---- join ----
+
+def test_join_server_mid_workload_becomes_eligible():
+    cluster = mk_cluster(n=2)
+    rt = attach(cluster, name="a")
+    cluster.run()
+    mm = cluster.membership
+    assert mm.state("s0") == ACTIVE and not mm.is_eligible("s2")
+    buf = rt.create_buffer(64)
+    w = rt.enqueue_write("s0", buf, np.ones(16, np.float32))
+    k0 = rt.enqueue_kernel("s0", fn=None, duration=5e-3, wait_for=[w])
+    activated = []
+    cluster.join_server(ServerSpec("s2", [GPU]),
+                        at=cluster.clock.now + 1e-3,
+                        on_active=lambda:
+                        activated.append(cluster.clock.now))
+    cluster.run()
+    assert activated and mm.state("s2") == ACTIVE
+    assert rt.sessions["s2"].available
+    assert k0.status == COMPLETE
+    # the joined host serves a kernel, dragging the input over the
+    # freshly created peer link
+    k = rt.enqueue_kernel("s2", fn=lambda x: x + 1.0, inputs=[buf],
+                          outputs=[buf], duration=1e-3)
+    cluster.run()
+    assert k.status == COMPLETE
+    np.testing.assert_array_equal(buf.data, np.full(16, 2.0, np.float32))
+    assert cluster.stats()["membership"]["joins"] == 1
+
+
+def test_join_existing_name_rejected():
+    cluster = mk_cluster(n=2)
+    attach(cluster, name="a")
+    cluster.run()
+    with pytest.raises(ValueError):
+        cluster.join_server(ServerSpec("s0", [GPU]))
+
+
+# ---- drain ----
+
+def test_drain_requeues_unstarted_exactly_once():
+    cluster = mk_cluster(n=2)
+    rt = attach(cluster, name="a")
+    cluster.run()
+    buf = rt.create_buffer(64)
+    w = rt.enqueue_write("s0", buf, np.full(16, 1.0, np.float32))
+    k1 = rt.enqueue_kernel("s0", fn=lambda x: x * 2.0, inputs=[buf],
+                           outputs=[buf], duration=10e-3, wait_for=[w])
+    k2 = rt.enqueue_kernel("s0", fn=lambda x: x * 2.0, inputs=[buf],
+                           outputs=[buf], duration=1e-3, wait_for=[k1])
+    k3 = rt.enqueue_kernel("s0", fn=lambda x: x * 2.0, inputs=[buf],
+                           outputs=[buf], duration=1e-3, wait_for=[k2])
+    evs = [w, k1, k2, k3]
+    counts = ledger(evs)
+    # k1 is in service when the drain lands (non-preemptive, it finishes
+    # on the draining host); k2/k3 are waiters and must requeue to s1
+    drained = []
+    cluster.drain_server("s0", at=cluster.clock.now + 2e-3,
+                         on_complete=lambda:
+                         drained.append(cluster.clock.now))
+    cluster.run()
+    assert [e.status for e in evs] == [COMPLETE] * 4
+    assert all(c == 1 for c in counts.values())
+    np.testing.assert_array_equal(buf.data, np.full(16, 8.0, np.float32))
+    mm = cluster.stats()["membership"]
+    assert mm["states"]["s0"] == DEAD
+    assert mm["requeued_commands"] >= 1
+    assert drained and mm["drain_ms"]
+    assert "s0" not in buf.valid_on
+    assert rt.stats()["events_live"] == 0
+    with pytest.raises(DeviceUnavailable):
+        rt.enqueue_kernel("s0", fn=None, duration=1e-3)
+
+
+def test_drain_migrates_sole_replica_and_drops_redundant():
+    cluster = mk_cluster(n=2)
+    rt = attach(cluster, name="a")
+    cluster.run()
+    sole = rt.create_buffer(256 * 1024)
+    both = rt.create_buffer(64)
+    w = rt.enqueue_write("s0", sole,
+                         np.zeros(256 * 1024 // 4, np.float32))
+    rt.enqueue_kernel("s0", fn=lambda x: x + 1.0, inputs=[sole],
+                      outputs=[sole], duration=1e-3, wait_for=[w])
+    w2 = rt.enqueue_write("s0", both, np.ones(16, np.float32))
+    # a read-only use on s1 replicates without invalidating s0
+    rt.enqueue_kernel("s1", fn=None, inputs=[both], duration=1e-3,
+                      wait_for=[w2])
+    cluster.run()
+    assert set(sole.valid_on) == {"s0"}
+    assert set(both.valid_on) == {"s0", "s1"}
+    cluster.drain_server("s0")
+    cluster.run()
+    mm = cluster.stats()["membership"]
+    assert mm["replicas_migrated"] == 1
+    assert mm["replicas_dropped"] >= 1
+    assert "s0" not in sole.valid_on and "s1" in sole.valid_on
+    assert set(both.valid_on) == {"s1"}
+    r = rt.enqueue_read("s1", sole)
+    cluster.run()
+    assert r.status == COMPLETE
+    np.testing.assert_array_equal(
+        sole.data, np.ones(256 * 1024 // 4, np.float32))
+
+
+def test_drain_clears_store_replicas():
+    cluster = mk_cluster(n=2, store=True)
+    rt = attach(cluster, name="a")
+    cluster.run()
+    buf = rt.create_buffer(1024)
+    rt.enqueue_write("s0", buf, np.ones(256, np.float32))
+    cluster.run()
+    entry = cluster.store.entry_for(buf)
+    assert "s0" in entry.valid_on
+    cluster.drain_server("s0")
+    cluster.run()
+    assert "s0" not in entry.valid_on
+    assert "s0" not in cluster.store.resident_bytes
+    assert "s0" not in buf.valid_on and "s1" in buf.valid_on
+
+
+# ---- crash ----
+
+def test_crash_fails_fast_and_dependents_do_not_hang():
+    cluster = mk_cluster(n=2)
+    rt = attach(cluster, name="a")
+    cluster.run()
+    k1 = rt.enqueue_kernel("s0", fn=None, duration=10e-3)
+    k2 = rt.enqueue_kernel("s1", fn=None, duration=1e-3, wait_for=[k1])
+    counts = ledger([k1, k2])
+    cluster.crash_server("s0", at=cluster.clock.now + 2e-3)
+    cluster.run()
+    assert k1.status == ERROR and "crash" in k1.error
+    # error counts as a finished dependency: the dependent on the
+    # survivor observes ERROR and runs, it does not hang
+    assert k2.status == COMPLETE
+    assert counts[k1.id] == 1 and counts[k2.id] == 1
+    assert not rt.sessions["s0"].available
+    assert cluster.membership.state("s0") == DEAD
+    assert rt.stats()["events_live"] == 0
+
+
+def test_crash_kills_midflight_migration():
+    cluster = mk_cluster(n=2)
+    rt = attach(cluster, name="a")
+    cluster.run()
+    buf = rt.create_buffer(4 * 1024 * 1024)
+    rt.enqueue_write("s0", buf, np.zeros(1024 * 1024, np.float32))
+    cluster.run()
+    mig = rt.enqueue_migration(buf, "s1")
+    # 4 MiB over the 40G peer wire takes ~0.8 ms: crash the DESTINATION
+    # while chunks are on the wire
+    cluster.crash_server("s1", at=cluster.clock.now + 2e-4)
+    cluster.run()
+    assert mig.status == ERROR
+    assert "s1" not in buf.valid_on and "s0" in buf.valid_on
+    assert rt.stats()["events_live"] == 0
+
+
+# ---- bounded reconnect (satellite: §4.3 backoff) ----
+
+def test_reconnect_bounded_retries_then_surfaces_failure():
+    cluster = mk_cluster(n=2)
+    rt = attach(cluster, name="a", reconnect_retries=2,
+                reconnect_backoff=1e-3)
+    cluster.run()
+    cluster.crash_server("s0")
+    rt.reconnect("s0")
+    cluster.run()
+    stats = rt.stats()
+    assert stats["reconnect_attempts"]["s0"] == 3     # 1 + 2 retries
+    assert "s0" in stats["reconnect_failures"]
+    assert not rt.sessions["s0"].available
+
+
+def test_reconnect_succeeds_within_budget_after_flap():
+    cluster = mk_cluster(n=2)
+    rt = attach(cluster, name="a")
+    cluster.run()
+    rt.c_links["s0"].up = False
+    rt.sessions["s0"].available = False
+    rt.reconnect("s0")
+    cluster.run()
+    stats = rt.stats()
+    assert rt.sessions["s0"].available
+    assert stats["reconnect_attempts"]["s0"] >= 1
+    assert "s0" not in stats["reconnect_failures"]
+
+
+def test_reconnect_config_validation():
+    with pytest.raises(ValueError):
+        attach(mk_cluster(), name="a", reconnect_retries=-1)
+    with pytest.raises(ValueError):
+        attach(mk_cluster(), name="a", reconnect_backoff=0.0)
+
+
+# ---- link faults: mid-flight chunk drops (satellite bugfix) ----
+
+def test_link_flap_mid_chunk_drops_remainder():
+    clock = SimClock()
+    link = Link(clock, latency=1e-3, bandwidth=1e6)
+    got = []
+    chunks = [(0.0, 1000.0, 0.0)] * 10            # 10 ms of wire time
+    link.send_chunked(chunks, lambda: got.append(("ok", clock.now)),
+                      on_dropped=lambda: got.append(("drop", clock.now)))
+    clock.schedule_at(5e-3, setattr, link, "up", False)
+    clock.run()
+    # the receiver never assembles the payload; the drop is reported at
+    # the fault time, not at the would-be delivery time
+    assert got == [("drop", pytest.approx(5e-3))]
+
+
+def test_link_flap_after_wire_end_still_delivers():
+    clock = SimClock()
+    link = Link(clock, latency=1e-3, bandwidth=1e6)
+    got = []
+    chunks = [(0.0, 1000.0, 0.0)] * 10
+    link.send_chunked(chunks, lambda: got.append(("ok", clock.now)),
+                      on_dropped=lambda: got.append(("drop", clock.now)))
+    # the last chunk leaves the wire at 10 ms; a fault during the final
+    # propagation leg loses nothing
+    clock.schedule_at(10.5e-3, setattr, link, "up", False)
+    clock.run()
+    assert got == [("ok", pytest.approx(11e-3))]
+
+
+def test_closed_link_never_resurrects():
+    clock = SimClock()
+    link = Link(clock, latency=1e-3, bandwidth=1e6)
+    link.close()
+    link.up = True
+    assert not link.up
+    assert link.send(100, lambda: None) is None
+    assert link.send_chunked([(0.0, 100.0, 0.0)], lambda: None) is None
+
+
+# ---- deterministic fault injection ----
+
+def test_fault_schedule_scripts_membership_verbs():
+    cluster = mk_cluster(n=3)
+    rt = attach(cluster, name="a")
+    cluster.run()
+    t0 = cluster.clock.now
+    seen = []
+    (FaultSchedule()
+     .join(t0 + 1e-3, ServerSpec("s3", [GPU]),
+           on_active=lambda: seen.append("joined"))
+     .drain(t0 + 2e-3, "s1",
+            on_complete=lambda: seen.append("drained"))
+     .crash(t0 + 5e-3, "s2")).apply(cluster)
+    k = rt.enqueue_kernel("s0", fn=None, duration=10e-3)
+    cluster.run()
+    mm = cluster.membership
+    assert mm.state("s3") == ACTIVE
+    assert mm.state("s1") == DEAD and mm.state("s2") == DEAD
+    assert seen.count("joined") == 1 and seen.count("drained") == 1
+    assert k.status == COMPLETE
+    assert cluster.stats()["membership"]["crashes"] == 1
+
+
+def test_fault_schedule_flap_window():
+    cluster = mk_cluster(n=2)
+    attach(cluster, name="a")
+    cluster.run()
+    link = cluster.p_links[("s0", "s1")]
+    t0 = cluster.clock.now
+    FaultSchedule().flap(t0 + 1e-3, 2e-3, link).apply(cluster)
+    probes = []
+    for dt in (0.5e-3, 2e-3, 4e-3):
+        cluster.clock.schedule_at(t0 + dt,
+                                  lambda: probes.append(link.up))
+    cluster.run()
+    assert probes == [True, False, True]
+
+
+# ---- properties: exactly-once under random fault schedules ----
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1),
+       st.sampled_from(["none", "drain", "crash"]),
+       st.integers(1, 8))
+def test_property_faults_never_lose_or_duplicate_completions(
+        seed, verb, fault_ms):
+    cluster = mk_cluster(n=3)
+    rt = attach(cluster, name="a")
+    cluster.run()
+    rng = random.Random(seed)
+    events = []
+    for i in range(14):
+        deps = ([events[rng.randrange(len(events))]]
+                if events and rng.random() < 0.7 else [])
+        events.append(rt.enqueue_kernel(
+            f"s{rng.randrange(3)}", fn=None,
+            duration=rng.choice([1e-4, 1e-3, 3e-3]),
+            wait_for=deps, name=f"k{i}"))
+    counts = ledger(events)
+    if verb != "none":
+        target = f"s{rng.randrange(3)}"
+        at = cluster.clock.now + fault_ms * 1e-3
+        if verb == "drain":
+            cluster.drain_server(target, at=at)
+        else:
+            cluster.crash_server(target, at=at)
+    cluster.run()
+    for e in events:
+        assert e.status in (COMPLETE, ERROR)      # nothing lost or hung
+        assert counts[e.id] == 1                  # nothing duplicated
+    if verb != "crash":
+        # a graceful drain loses no work: survivors absorb everything
+        assert all(e.status == COMPLETE for e in events)
+    assert rt.stats()["events_live"] == 0
+
+
+def _bystander_run(crash_at):
+    """Tenant A hammers s0/s1; bystander B touches only s2. Returns B's
+    event timestamps."""
+    cluster = mk_cluster(n=3)
+    a = attach(cluster, name="a")
+    b = attach(cluster, name="b")
+    cluster.run()
+    buf_a = a.create_buffer(64 * 1024)
+    evs_a = [a.enqueue_write("s0", buf_a,
+                             np.zeros(16 * 1024, np.float32))]
+    for i in range(6):
+        evs_a.append(a.enqueue_kernel(f"s{i % 2}", fn=None,
+                                      inputs=[buf_a], duration=2e-3,
+                                      wait_for=[evs_a[-1]]))
+    buf_b = b.create_buffer(1024)
+    evs_b = [b.enqueue_write("s2", buf_b,
+                             np.arange(256, dtype=np.float32))]
+    for _ in range(6):
+        evs_b.append(b.enqueue_kernel("s2", fn=lambda x: x + 1.0,
+                                      inputs=[buf_b], outputs=[buf_b],
+                                      duration=1e-3,
+                                      wait_for=[evs_b[-1]]))
+    if crash_at is not None:
+        cluster.crash_server("s0", at=crash_at)
+    cluster.run()
+    assert all(e.status == COMPLETE for e in evs_b)
+    return [(e.t_submitted, e.t_start, e.t_end, e.t_client_ack)
+            for e in evs_b]
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(2, 12))
+def test_property_bystander_timestamps_bit_identical_under_crash(
+        fault_ms):
+    base = _bystander_run(None)
+    faulted = _bystander_run(crash_at=fault_ms * 1e-3)
+    assert faulted == base                        # bit-identical floats
