@@ -1,9 +1,16 @@
 """Dispatch/completion hot-path throughput: deep random command DAGs
-over 1/4/8 servers, subscription routing vs all-peers broadcast.
+over 1/4/8 servers, subscription routing vs all-peers broadcast, plus
+batched-enqueue rows (``ClientRuntime.enqueue_many``).
 
 Reports wall-clock commands/sec (the Python runtime's own dispatch cost,
 not simulated time), peer completion-message counts, and the live-event
-count after the drain (0 ⇒ retirement keeps tables bounded).
+count after the drain (0 ⇒ retirement keeps tables bounded). The
+``_subscription``/``_broadcast`` rows time enqueue + drain including the
+DAG construction RNG (the historical definition); the ``_batched`` rows
+pre-build the same seeded DAG as a spec list outside the timed region
+and time only ``enqueue_many`` + drain — the runtime's raw dispatch
+rate, which is what the calendar-queue engine work (DESIGN.md §8)
+optimizes.
 
   PYTHONPATH=src python -m benchmarks.dispatch_throughput \
       [--n 10000] [--smoke] [--baseline benchmarks/BENCH_dispatch.json]
@@ -16,6 +23,7 @@ from __future__ import annotations
 
 import argparse
 import logging
+import random
 import time
 
 from benchmarks import common
@@ -24,23 +32,61 @@ from repro.core import ClientRuntime, DeviceSpec, ServerSpec
 
 SERVER_COUNTS = (1, 4, 8)
 ROUTINGS = ("subscription", "broadcast")
+BATCHED_SERVER_COUNTS = (1, 4)
 REGRESSION_TOLERANCE = 0.20
 REGENERATE = ("python -m benchmarks.dispatch_throughput --smoke "
               "--write-baseline benchmarks/BENCH_dispatch.json")
 
 
-def _measure(n_cmds: int, n_srv: int, routing: str) -> Row:
-    rt = ClientRuntime(
+def build_specs(n_cmds: int, n_srv: int, seed: int = 42, fanin: int = 3,
+                window: int = 50, duration: float = 1e-7) -> list:
+    """The ``common.build_dag`` DAG as an ``enqueue_many`` spec list:
+    same seeded server choices and same dependency structure, with
+    in-batch deps expressed as integer indices."""
+    rng = random.Random(seed)
+    specs = []
+    for i in range(n_cmds):
+        srv = f"s{rng.randrange(n_srv)}"
+        deps = []
+        if specs:
+            lo = max(0, len(specs) - window)
+            for _ in range(rng.randint(1, fanin)):
+                deps.append(rng.randrange(lo, len(specs)))
+        specs.append({"server": srv, "duration": duration,
+                      "wait_for": deps, "name": f"k{i}"})
+    return specs
+
+
+def _make_rt(n_srv: int, routing: str) -> ClientRuntime:
+    return ClientRuntime(
         servers=[ServerSpec(f"s{i}", [DeviceSpec("gpu0")])
                  for i in range(n_srv)],
         client_link=LOOPBACK, peer_link=LOOPBACK,
         completion_routing=routing)
+
+
+def _measure(n_cmds: int, n_srv: int, routing: str) -> Row:
+    rt = _make_rt(n_srv, routing)
     t0 = time.perf_counter()
     build_dag(rt, n_cmds, n_srv, seed=42)
     rt.finish()
     wall = time.perf_counter() - t0
     st = rt.stats()
     return Row(f"dispatch_{n_srv}srv_{routing}", wall / n_cmds * 1e6,
+               f"cmds_per_sec={n_cmds / wall:.0f};"
+               f"peer_completion_msgs={st['peer_completion_msgs']};"
+               f"events_live={st['events_live']}")
+
+
+def _measure_batched(n_cmds: int, n_srv: int) -> Row:
+    rt = _make_rt(n_srv, "subscription")
+    specs = build_specs(n_cmds, n_srv, seed=42)   # untimed workload gen
+    t0 = time.perf_counter()
+    rt.enqueue_many("s0", specs)
+    rt.finish()
+    wall = time.perf_counter() - t0
+    st = rt.stats()
+    return Row(f"dispatch_{n_srv}srv_batched", wall / n_cmds * 1e6,
                f"cmds_per_sec={n_cmds / wall:.0f};"
                f"peer_completion_msgs={st['peer_completion_msgs']};"
                f"events_live={st['events_live']}")
@@ -59,6 +105,8 @@ def run(n_cmds: int = 10000):
         for n_srv in SERVER_COUNTS:
             for routing in ROUTINGS:
                 rows.append(_measure(n_cmds, n_srv, routing))
+        for n_srv in BATCHED_SERVER_COUNTS:
+            rows.append(_measure_batched(n_cmds, n_srv))
     finally:
         rt_log.setLevel(prev_level)
     return emit(rows)
@@ -69,14 +117,15 @@ def _cmds_per_sec(row: Row) -> float:
 
 
 def check_baseline(rows, baseline_path: str) -> bool:
-    """Gate only the subscription rows — that is the shipped dispatch
-    path; the broadcast rows exist as a comparison baseline and their
-    absolute wall-clock speed is not a product property."""
+    """Gate the subscription and batched rows — those are the shipped
+    dispatch paths; the broadcast rows exist as a comparison baseline
+    and their absolute wall-clock speed is not a product property."""
     return common.check_rows(
         rows, baseline_path, extract=_cmds_per_sec,
         tolerance=REGRESSION_TOLERANCE, direction="higher_is_better",
         unit=" cmds/s", benchmark="dispatch_throughput",
-        gated=lambda row: row.name.endswith("_subscription"))
+        gated=lambda row: row.name.endswith(("_subscription",
+                                             "_batched")))
 
 
 def main() -> None:

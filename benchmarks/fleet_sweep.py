@@ -1,0 +1,146 @@
+"""1000-UE fleet sweep: the calendar-queue engine's headline workload
+(DESIGN.md §8).
+
+A whole fleet of thin UE sessions shares one MEC cluster. Each UE
+batches a short dependent kernel chain onto its home server with
+``ClientRuntime.enqueue_many`` at a staggered start time, so the event
+engine sees what a city-scale sweep produces: thousands of sessions'
+worth of commands interleaved across the calendar queue's buckets, with
+far-future staggered starts exercising the overflow heap and bucket
+rotation, and the drain exercising the dispatch/completion hot path at
+fleet density.
+
+Two things are measured per row:
+
+* ``sim_ms`` — simulated drain time. Deterministic, portable, and gated
+  against ``benchmarks/BENCH_fleet.json`` (the calendar queue must stay
+  bit-exact with the reference heap, so this number never moves unless
+  the model itself changes).
+* ``wall_s`` / ``cmds_per_sec`` — the Python runtime's real dispatch
+  cost. Host-specific; ``--max-wall-s`` turns it into a smoke ceiling
+  (scripts/ci.sh skips the ceiling under ``CI_SKIP_WALLCLOCK=1``).
+
+  PYTHONPATH=src python -m benchmarks.fleet_sweep \
+      [--baseline benchmarks/BENCH_fleet.json] [--max-wall-s 30]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import common
+from benchmarks.common import LOOPBACK, Row, emit
+from repro.core import ClientRuntime, Cluster, DeviceSpec, ServerSpec
+
+N_SERVERS = 4
+FLEET_SIZES = (250, 1000)
+KERNELS_PER_UE = 6
+T_KERNEL = 2e-4                 # short AR-style kernel on the server GPU
+STAGGER = 5e-5                  # UE batch-submit offset (sim seconds)
+REGRESSION_TOLERANCE = 0.20
+REGENERATE = ("python -m benchmarks.fleet_sweep "
+              "--write-baseline benchmarks/BENCH_fleet.json")
+
+
+def _mk_cluster() -> Cluster:
+    return Cluster([ServerSpec(f"s{i}", [DeviceSpec("gpu0")])
+                    for i in range(N_SERVERS)],
+                   peer_link=LOOPBACK)
+
+
+def _chain_specs(ue: int) -> list:
+    """One UE's batch: a dependent chain of short kernels (each waits on
+    the previous one by in-batch index)."""
+    return [{"duration": T_KERNEL, "name": f"u{ue}k{j}",
+             "wait_for": [j - 1] if j else []}
+            for j in range(KERNELS_PER_UE)]
+
+
+def _measure(n_ues: int) -> Row:
+    cluster = _mk_cluster()
+    rts = [ClientRuntime(cluster=cluster, client_link=LOOPBACK,
+                         transport="tcp", name=f"ue{i}")
+           for i in range(n_ues)]
+    cluster.run()                       # handshakes drained
+    sim0 = cluster.clock.now
+    t0 = time.perf_counter()
+    for i, rt in enumerate(rts):
+        rt.clock.schedule(
+            i * STAGGER,
+            lambda rt=rt, i=i: rt.enqueue_many(f"s{i % N_SERVERS}",
+                                               _chain_specs(i)))
+    cluster.run()
+    wall = time.perf_counter() - t0
+    sim_ms = (cluster.clock.now - sim0) * 1e3
+    n_cmds = n_ues * KERNELS_PER_UE
+    live = sum(rt.stats()["events_live"] for rt in rts)
+    return Row(f"fleet_{n_ues}ue", sim_ms,
+               f"sim_ms={sim_ms:.3f};wall_s={wall:.3f};"
+               f"cmds_per_sec={n_cmds / wall:.0f};"
+               f"events_live={live}")
+
+
+def run():
+    return emit([_measure(n) for n in FLEET_SIZES])
+
+
+def check_baseline(rows, baseline_path: str) -> bool:
+    return common.check_rows(rows, baseline_path,
+                             extract=lambda r: common.derived(r, "sim_ms"),
+                             tolerance=REGRESSION_TOLERANCE,
+                             direction="lower_is_better", unit=" sim_ms",
+                             benchmark="fleet_sweep")
+
+
+def check_wallclock(rows, ceiling_s: float) -> bool:
+    """Smoke ceiling: the whole fleet must dispatch within ``ceiling_s``
+    of real time per row (generous — catches order-of-magnitude
+    dispatch regressions, not noise)."""
+    ok = True
+    for row in rows:
+        wall = common.derived(row, "wall_s")
+        if wall > ceiling_s:
+            print(f"# {row.name}: wall {wall:.1f}s > ceiling "
+                  f"{ceiling_s:.1f}s CEILING", file=sys.stderr)
+            ok = False
+        else:
+            print(f"# {row.name}: wall {wall:.1f}s (ceiling "
+                  f"{ceiling_s:.1f}s) ok", file=sys.stderr)
+    return ok
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=None,
+                    help="JSON {row_name: sim_ms}; fail on >20%% "
+                         "regression (deterministic, portable)")
+    ap.add_argument("--max-wall-s", type=float, default=None,
+                    help="fail if any row's wall-clock drain exceeds "
+                         "this many seconds (host-specific smoke)")
+    ap.add_argument("--write-baseline", default=None,
+                    help="write measured sim_ms to this JSON path")
+    ap.add_argument("--json-out", default=None,
+                    help="write the result rows to this JSON path")
+    args = ap.parse_args()
+    rows = run()
+    if args.json_out:
+        common.dump_rows(rows, args.json_out)
+    if args.write_baseline:
+        common.write_baseline(
+            args.write_baseline,
+            {r.name: common.derived(r, "sim_ms") for r in rows},
+            benchmark="fleet_sweep", metric="sim_ms",
+            direction="lower_is_better", tolerance=REGRESSION_TOLERANCE,
+            regenerate=REGENERATE)
+    ok = True
+    if args.baseline:
+        ok = check_baseline(rows, args.baseline) and ok
+    if args.max_wall_s is not None:
+        ok = check_wallclock(rows, args.max_wall_s) and ok
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

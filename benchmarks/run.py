@@ -32,6 +32,7 @@ MODULES = [
     ("mt", "benchmarks.multi_tenant"),
     ("cfdhalo", "benchmarks.cfd_halo"),
     ("chaos", "benchmarks.chaos"),
+    ("fleet", "benchmarks.fleet_sweep"),
     ("fig11", "benchmarks.rdma_vs_tcp"),
     ("fig12", "benchmarks.matmul_scaling"),
     ("fig13", "benchmarks.rdma_matmul"),
@@ -72,6 +73,10 @@ def main() -> None:
     ap.add_argument("--check-baselines", action="store_true",
                     help="validate benchmarks/BENCH_*.json against the "
                          "shared schema and exit")
+    ap.add_argument("--profile", action="store_true",
+                    help="cProfile each selected benchmark and print the "
+                         "top 25 functions by cumulative time to stderr "
+                         "(pair with --only to profile one)")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "results.json"))
     args = ap.parse_args()
@@ -86,7 +91,17 @@ def main() -> None:
             continue
         t0 = time.time()
         mod = importlib.import_module(modname)
-        rows = mod.run()
+        if args.profile:
+            import cProfile
+            import pstats
+            prof = cProfile.Profile()
+            rows = prof.runcall(mod.run)
+            stats = pstats.Stats(prof, stream=sys.stderr)
+            print(f"# profile: {tag} ({modname}) top 25 by cumulative",
+                  file=sys.stderr)
+            stats.sort_stats("cumulative").print_stats(25)
+        else:
+            rows = mod.run()
         all_rows.extend({"name": r.name, "us_per_call": r.us_per_call,
                          "derived": r.derived} for r in rows)
         print(f"# {tag} done in {time.time()-t0:.1f}s", file=sys.stderr)

@@ -13,7 +13,8 @@
 # efficiency floor and hetmec beating locality-off placement by >=20%,
 # and the chaos membership gate: exactly-once command ledger under
 # drain/crash, drain-storm recovery <=1.5x steady, post-crash p95
-# <=3x the steady p95).
+# <=3x the steady p95, and the 1000-UE fleet-sweep sim-time gate,
+# whose wall-clock ceiling is skipped under CI_SKIP_WALLCLOCK=1).
 # Regenerate baselines with the "regenerate" command stamped inside
 # each BENCH_*.json.
 #
@@ -75,5 +76,17 @@ echo "== chaos membership smoke (20% gates + exactly-once ledger) =="
 python -m benchmarks.chaos \
     --baseline benchmarks/BENCH_chaos.json \
     --json-out "$ARTIFACTS/chaos.json"
+
+if [[ "$SIMTIME_ONLY" == "1" ]]; then
+    echo "== 1000-UE fleet sweep (sim-time gate; wall ceiling SKIPPED) =="
+    python -m benchmarks.fleet_sweep \
+        --baseline benchmarks/BENCH_fleet.json \
+        --json-out "$ARTIFACTS/fleet.json"
+else
+    echo "== 1000-UE fleet sweep (sim-time gate + 30s wall ceiling) =="
+    python -m benchmarks.fleet_sweep \
+        --baseline benchmarks/BENCH_fleet.json --max-wall-s 30 \
+        --json-out "$ARTIFACTS/fleet.json"
+fi
 
 echo "ci.sh: all checks passed"

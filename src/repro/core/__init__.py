@@ -8,7 +8,7 @@ from repro.core.events import (COMPLETE, ERROR, QUEUED, RUNNING,  # noqa: F401
 from repro.core.membership import (ACTIVE, DEAD, DRAINING,  # noqa: F401
                                    JOINING, MembershipManager)
 from repro.core.netsim import (NIC, DeviceSim, FaultSchedule,  # noqa: F401
-                               Link, SimClock)
+                               HeapSimClock, Link, SimClock)
 from repro.core.placement import (HetMECPolicy, LocalityPolicy,  # noqa: F401
                                   PinnedPolicy, PlacementEngine,
                                   make_placement_policy)

@@ -1,52 +1,72 @@
 """OpenCL-style events: dependency handles with profiling timestamps."""
 from __future__ import annotations
 
-import dataclasses
-import itertools
 from typing import Callable, Optional
-
-_ids = itertools.count(1)
 
 QUEUED, SUBMITTED, RUNNING, COMPLETE, ERROR = (
     "queued", "submitted", "running", "complete", "error")
 
+_next_id = 0
 
-@dataclasses.dataclass
+
 class Event:
-    command: object = None
-    server: Optional[str] = None          # executing server ('' = client)
-    status: str = QUEUED
-    user: bool = False                    # user event (client-controlled)
-    id: int = dataclasses.field(default_factory=lambda: next(_ids))
-    # profiling (sim seconds)
-    t_queued: float = 0.0
-    t_submitted: float = 0.0
-    t_start: float = 0.0
-    t_end: float = 0.0
-    t_client_ack: float = 0.0   # when the client observed completion
-    error: Optional[str] = None
-    # for ReadBuffer events: the buffer's content generation at the
-    # moment the bytes left the server (consumers of the read — e.g. the
-    # staged naive-migration write — must judge staleness against this,
-    # not against the version at delivery time)
-    data_version: Optional[int] = None
-    _callbacks: list = dataclasses.field(default_factory=list)
-    # ---- lifecycle refcounting (runtime table retirement) ----
-    # Holders: the client (until it observes completion) and every
-    # not-yet-resolved dependent command. When the count drops to zero on
-    # a finished event, ``on_retire`` fires once so the runtime can drop
-    # the event from its lookup tables. The Event object itself is never
-    # mutated by retirement — user code can keep reading timestamps.
-    _refs: int = 0
-    retired: bool = False
-    on_retire: Optional[Callable] = None
+    """Dependency handle with profiling timestamps.
+
+    A plain ``__slots__`` class rather than a dataclass: the dispatch
+    hot path allocates one per command, and the generated dataclass
+    ``__init__`` (15 keyword defaults + two default factories) showed up
+    as a top-ten cost in the dispatch profile. Field set and semantics
+    are unchanged.
+
+    Lifecycle refcounting (runtime table retirement): holders are the
+    client (until it observes completion) and every not-yet-resolved
+    dependent command. When the count drops to zero on a finished
+    event, ``on_retire`` fires once so the runtime can drop the event
+    from its lookup tables. The Event object itself is never mutated by
+    retirement — user code can keep reading timestamps."""
+
+    __slots__ = ("command", "server", "status", "user", "id",
+                 "t_queued", "t_submitted", "t_start", "t_end",
+                 "t_client_ack", "error", "data_version", "_callbacks",
+                 "_refs", "retired", "on_retire")
+
+    def __init__(self, command=None, server: Optional[str] = None,
+                 status: str = QUEUED, user: bool = False):
+        global _next_id
+        _next_id += 1
+        self.id = _next_id
+        self.command = command
+        self.server = server                # executing server ('' = client)
+        self.status = status
+        self.user = user                    # user event (client-controlled)
+        # profiling (sim seconds)
+        self.t_queued = 0.0
+        self.t_submitted = 0.0
+        self.t_start = 0.0
+        self.t_end = 0.0
+        self.t_client_ack = 0.0   # when the client observed completion
+        self.error: Optional[str] = None
+        # for ReadBuffer events: the buffer's content generation at the
+        # moment the bytes left the server (consumers of the read — e.g.
+        # the staged naive-migration write — must judge staleness against
+        # this, not against the version at delivery time)
+        self.data_version: Optional[int] = None
+        self._callbacks = None    # lazily allocated list
+        self._refs = 0
+        self.retired = False
+        self.on_retire: Optional[Callable] = None
 
     def retain(self):
         self._refs += 1
 
     def release(self):
         self._refs -= 1
-        self._maybe_retire()
+        if self._refs <= 0 and not self.retired \
+                and (self.status == COMPLETE or self.status == ERROR):
+            self.retired = True
+            cb, self.on_retire = self.on_retire, None
+            if cb is not None:
+                cb(self)
 
     def _maybe_retire(self):
         if self._refs <= 0 and not self.retired \
@@ -59,24 +79,30 @@ class Event:
     def on_complete(self, fn: Callable):
         if self.status == COMPLETE:
             fn(self)
+        elif self._callbacks is None:
+            self._callbacks = [fn]
         else:
             self._callbacks.append(fn)
 
     def complete(self, t: float):
         self.status = COMPLETE
         self.t_end = t
-        cbs, self._callbacks = self._callbacks, []
-        for fn in cbs:
-            fn(self)
+        cbs = self._callbacks
+        if cbs is not None:
+            self._callbacks = None
+            for fn in cbs:
+                fn(self)
         self._maybe_retire()
 
     def fail(self, t: float, reason: str):
         self.status = ERROR
         self.error = reason
         self.t_end = t
-        cbs, self._callbacks = self._callbacks, []
-        for fn in cbs:
-            fn(self)
+        cbs = self._callbacks
+        if cbs is not None:
+            self._callbacks = None
+            for fn in cbs:
+                fn(self)
         self._maybe_retire()
 
     @property
@@ -87,3 +113,7 @@ class Event:
     def latency(self) -> float:
         """Client-observed: queued → complete."""
         return self.t_end - self.t_queued
+
+    def __repr__(self):  # debugging/error messages only
+        return (f"Event(id={self.id}, status={self.status!r}, "
+                f"server={self.server!r}, command={self.command!r})")

@@ -26,12 +26,15 @@ import heapq
 from typing import Callable, Optional
 
 
-class SimClock:
-    """Logical clock over a binary heap. This is the innermost loop of
-    every benchmark, so the hot methods avoid per-call allocation beyond
-    the heap entry itself: a plain int sequence counter (no itertools
-    iterator), module functions bound once, and ``run`` keeps the queue
-    and pop in locals instead of re-reading attributes per event."""
+class HeapSimClock:
+    """Reference logical clock over a binary heap — the original engine.
+
+    Kept as the correctness oracle for the calendar-queue ``SimClock``:
+    the property tests in ``tests/test_event_engine.py`` assert both
+    engines pop identical ``(t, seq)`` sequences for arbitrary schedules.
+    The hot methods avoid per-call allocation beyond the heap entry
+    itself: a plain int sequence counter, module functions bound once,
+    and ``run`` keeps the queue and pop in locals."""
 
     __slots__ = ("_q", "_seq", "now", "_push")
 
@@ -53,6 +56,7 @@ class SimClock:
             t = now
         self._seq = seq = self._seq + 1
         self._push(self._q, (t, seq, fn, args))
+        return t
 
     def run(self, until: Optional[float] = None) -> float:
         q = self._q
@@ -68,6 +72,248 @@ class SimClock:
                 self.now = t
                 fn(*args)
         return self.now
+
+
+class SimClock:
+    """Logical clock over a calendar queue (bucketed timeline).
+
+    The event mix every benchmark produces is near-future dominated:
+    almost all of the O(100k) pending-at-peak events land within a few
+    milliseconds of ``now``. A binary heap pays O(log n) tuple
+    comparisons per push *and* per pop against that whole backlog; the
+    calendar queue instead hashes each event into one of ``_NBUCKETS``
+    fixed-width time buckets covering a sliding window
+    ``[base, base + _NBUCKETS * width)``:
+
+    * the *current* bucket (index ``_cur``) is kept as a heap — it is
+      heapified once when the cursor lands on it, and any insert at or
+      behind the cursor (including past-deadline clamps and float
+      truncation artifacts) goes through ``heappush`` into it;
+    * future in-window buckets are plain lists — insert is one float
+      multiply plus ``list.append``;
+    * events beyond the window go to an overflow heap and are pulled
+      forward bucket-by-bucket when the window advances past them.
+
+    Ordering is bit-exact with the heap engine: the bucket index
+    ``int((t - base) * inv_width)`` is monotone non-decreasing in ``t``,
+    so the bucket partition refines the global ``(t, seq)`` order —
+    equal timestamps always share a bucket, and draining the current
+    bucket's heap before advancing reproduces heapq's total order
+    exactly. ``seq`` assignment (one per schedule call) is identical.
+
+    Width retunes itself at window wraps: if a whole window went by with
+    far fewer events than buckets (cursor scans dominated), the width
+    doubles toward the observed event spacing; if the current backlog
+    would overflow the window, it grows to span it. Retuning only moves
+    bucket *boundaries*, never the (t, seq) order, so it is invisible to
+    simulation results. See DESIGN.md §8."""
+
+    __slots__ = ("now", "_seq", "_base", "_width", "_inv", "_cur",
+                 "_buckets", "_overflow", "_n", "_popped")
+
+    _MAX_WIDTH = 1e3
+
+    def __init__(self, nbuckets: int = 1024):
+        self.now = 0.0
+        self._seq = 0
+        self._base = 0.0
+        self._width = 1e-5          # ~10 µs: typical inter-event gap here
+        self._inv = 1.0 / self._width
+        self._cur = 0
+        self._n = nbuckets
+        self._buckets = [[] for _ in range(nbuckets)]
+        self._overflow: list = []   # heap of (t, seq, fn, args)
+        self._popped = 0            # ~events drained since last wrap
+
+    # -- scheduling -----------------------------------------------------
+    # No per-event size bookkeeping: emptiness is detected by `_advance`
+    # (a full scan finding nothing with an empty overflow), so the
+    # per-event cost here is one index computation plus a list append.
+
+    def schedule(self, delay: float, fn: Callable, *args):
+        t = self.now + delay if delay > 0.0 else self.now
+        self._seq = seq = self._seq + 1
+        idx = int((t - self._base) * self._inv)
+        cur = self._cur
+        if cur < idx < self._n:
+            self._buckets[idx].append((t, seq, fn, args))
+        elif idx <= cur:
+            heapq.heappush(self._buckets[cur], (t, seq, fn, args))
+        else:
+            heapq.heappush(self._overflow, (t, seq, fn, args))
+        return t
+
+    def schedule_at(self, t: float, fn: Callable, *args):
+        now = self.now
+        if t < now:
+            t = now
+        self._seq = seq = self._seq + 1
+        idx = int((t - self._base) * self._inv)
+        cur = self._cur
+        if cur < idx < self._n:
+            self._buckets[idx].append((t, seq, fn, args))
+        elif idx <= cur:
+            heapq.heappush(self._buckets[cur], (t, seq, fn, args))
+        else:
+            heapq.heappush(self._overflow, (t, seq, fn, args))
+        return t
+
+    def pending(self) -> int:
+        """Number of scheduled-but-undrained events (diagnostics/tests
+        only — the hot path never tracks this)."""
+        return sum(len(b) for b in self._buckets) + len(self._overflow)
+
+    # -- window management ----------------------------------------------
+
+    def _advance(self) -> int:
+        """Move the cursor to the next non-empty bucket (heapifying it),
+        wrapping the window — and pulling overflow forward — as needed.
+        Returns the new cursor index, or ``-1`` if the queue is empty
+        (the window is then re-anchored at ``now`` for future inserts).
+        Pre-condition: the current bucket is empty."""
+        buckets = self._buckets
+        n = self._n
+        cur = self._cur
+        while True:
+            cur += 1
+            if cur >= n:
+                nxt = self._wrap()
+                if nxt >= 0:
+                    self._cur = nxt
+                    self._popped += len(buckets[nxt])
+                    return nxt
+                if nxt == -1:   # empty queue
+                    self._cur = 0
+                    return -1
+                cur = -1        # rounding edge: rescan → next wrap jumps
+                continue
+            b = buckets[cur]
+            if b:
+                heapq.heapify(b)
+                self._cur = cur
+                self._popped += len(b)
+                return cur
+
+    def _wrap(self):
+        """Advance the window one span (jumping over dead spans and
+        retuning the width as needed), refill buckets from overflow, and
+        return the new cursor position — the first bucket holding an
+        event, already heapified. Returns ``-1`` when the queue is empty
+        (every bucket was empty and so is the overflow), or ``-2`` in
+        the rare rounding edge where the overflow head computes to
+        exactly bucket ``N``; the caller rescans and the next wrap jumps
+        the base onto the head, which then lands at bucket 0.
+
+        Pre-condition: every bucket is empty (the cursor scanned the
+        whole window), so all pending events live in the overflow heap
+        and any ``base``/``width`` change is safe — rebucketing only
+        moves partition boundaries, never the ``(t, seq)`` pop order."""
+        n = self._n
+        ovf = self._overflow
+        width = self._width
+
+        # Retune 1: the window drained with cursor scans dominating the
+        # events actually popped → buckets far finer than the observed
+        # event spacing. Widen toward the spacing.
+        if self._popped < (n >> 3) and width < self._MAX_WIDTH:
+            width = width * 8.0
+            if width > self._MAX_WIDTH:
+                width = self._MAX_WIDTH
+            self._width = width
+            self._inv = 1.0 / width
+        self._popped = 0
+        span = n * width
+
+        if not ovf:
+            # Every bucket is empty and so is the overflow → the queue
+            # is empty. Re-anchor the window at `now` for whatever gets
+            # scheduled next.
+            self._base = self.now
+            return -1
+
+        head_t = ovf[0][0]
+        new_base = self._base + span
+        if head_t < new_base or head_t >= new_base + span:
+            # Either the width grew past the head (a plain advance would
+            # overshoot → negative bucket indices), or whole dead spans
+            # sit ahead of it. Jump the window onto the head.
+            new_base = head_t
+
+        # Retune 2: the whole backlog lives in the overflow here (every
+        # bucket is empty), so if it outnumbers the buckets the window
+        # is too narrow for the live span. Widen so it spreads out.
+        if len(ovf) > n:
+            last_t = max(e[0] for e in ovf)
+            need = (last_t - new_base) / (n - 1)
+            if need > width:
+                width = need * 1.5
+                if width > self._MAX_WIDTH:
+                    width = self._MAX_WIDTH
+                self._width = width
+                self._inv = 1.0 / width
+
+        self._base = new_base
+        inv = self._inv
+        buckets = self._buckets
+        pop = heapq.heappop
+        first = n
+        while ovf:
+            idx = int((ovf[0][0] - new_base) * inv)
+            if idx >= n:
+                break
+            buckets[idx].append(pop(ovf))
+            if idx < first:
+                first = idx
+        if first == n:
+            return -2
+        b = buckets[first]
+        heapq.heapify(b)
+        return first
+
+    # -- draining -------------------------------------------------------
+
+    def _peek(self):
+        """Earliest pending timestamp (positions the cursor on its
+        bucket), or ``None`` when the queue is empty."""
+        b = self._buckets[self._cur]
+        if b:
+            return b[0][0]
+        nxt = self._advance()
+        return self._buckets[nxt][0][0] if nxt >= 0 else None
+
+    def run(self, until: Optional[float] = None) -> float:
+        # Per-event work is identical to the heap engine's loop (pop,
+        # stamp, call); bucket bookkeeping happens only on the (much
+        # rarer) bucket transitions. The current bucket is re-read from
+        # self._cur on each transition so reentrant run() calls from
+        # inside a callback (the client-handshake pattern) stay safe.
+        pop = heapq.heappop
+        buckets = self._buckets
+        if until is None:
+            while True:
+                b = buckets[self._cur]
+                while b:
+                    t, _, fn, args = pop(b)
+                    self.now = t
+                    fn(*args)
+                if buckets[self._cur]:
+                    continue    # reentrant run() moved the cursor
+                if self._advance() < 0:
+                    return self.now
+        else:
+            while True:
+                b = buckets[self._cur]
+                while b:
+                    t = b[0][0]
+                    if t > until:
+                        return self.now
+                    _, _, fn, args = pop(b)
+                    self.now = t
+                    fn(*args)
+                if buckets[self._cur]:
+                    continue    # reentrant run() moved the cursor
+                if self._advance() < 0:
+                    return self.now
 
 
 class NIC:
@@ -207,12 +453,14 @@ class Link:
 
     def send(self, nbytes: float, on_delivered: Callable,
              serialize_overhead: float = 0.0, egress: Optional[NIC] = None,
-             ingress: Optional[NIC] = None):
-        """Queue a message; ``on_delivered`` fires at the receiver.
+             ingress: Optional[NIC] = None, args: tuple = ()):
+        """Queue a message; ``on_delivered(*args)`` fires at the
+        receiver (``args`` lets hot senders pass a bound method plus
+        arguments instead of allocating a closure per send).
         ``egress`` is the sending host's shared port (tandem ahead of
         the link), ``ingress`` the receiving host's (tandem after it) —
         see ``NIC`` for both models."""
-        if not self.up:
+        if not self._up:     # slot read, not the property: send is hot
             return None  # dropped — sender times out via its own logic
         start = self.clock.now
         bw = self.bandwidth
@@ -267,7 +515,7 @@ class Link:
             ingress.busy_time += in_end - in_start
             if in_end > arrive:
                 arrive = in_end
-        self._schedule_at(arrive, on_delivered)
+        self._schedule_at(arrive, on_delivered, *args)
         return arrive
 
     def send_chunked(self, chunks, on_delivered: Callable,
@@ -300,7 +548,7 @@ class Link:
         the remaining chunks are lost: ``on_delivered`` never fires and
         ``on_dropped`` (if given) fires at the fault time instead.
         """
-        if not self.up:
+        if not self._up:
             return None  # dropped — sender times out via its own logic
         snd_free = self.clock.now + serialize_overhead
         wire_free = self._busy_until

@@ -59,7 +59,18 @@ from __future__ import annotations
 
 from typing import Optional, Sequence
 
+from repro.core.membership import ACTIVE
 from repro.core.transport import CMD_BYTES, wire_scale
+
+try:                      # vectorized transfer-ETA math (optional)
+    import numpy as _np
+except ImportError:       # pragma: no cover - numpy ships with the image
+    _np = None
+
+# Vectorizing the per-source ETA arithmetic pays only once enough
+# replica sources exist to amortize the array round-trip (DESIGN.md §8);
+# below the cutoff the scalar loop is faster — zero cost when unused.
+_VEC_MIN_SOURCES = 8
 
 
 class PinnedPolicy:
@@ -220,27 +231,80 @@ class PlacementEngine:
         in_queue = nic_in.queue_seconds(now) if nic_in is not None else 0.0
         best = None
         tr = rt.peer_transport
-        for s in sorted(srcs):
-            link = self.cluster.p_links.get((s, dst)) \
-                or self.cluster.p_links.get((dst, s))
-            if link is None or not link.up:
-                continue
-            queue = link.queue_seconds(now)
-            nic = hosts[s].nic
-            if nic is not None:
-                nq = nic.queue_seconds(now)
-                if nq > queue:
-                    queue = nq
-            if in_queue > queue:
-                queue = in_queue
-            bw = link.bandwidth
-            t = queue + link.latency + (
-                (CMD_BYTES + nbytes) * wire_scale(tr, bw) / bw
-                if bw else 0.0)
-            if (buf.id, s, dst) not in rt._mr_registered:
-                t += tr.register_buffer(nbytes, peers=len(rt.servers) - 1)
-            if best is None or t < best:
-                best = t
+        srcs_sorted = sorted(srcs)
+        if _np is not None and len(srcs_sorted) >= _VEC_MIN_SOURCES:
+            # Vectorized ETA: the probe gathering (link/NIC occupancy)
+            # stays scalar, but the per-source arithmetic runs as four
+            # float64 array ops with the exact operand grouping of the
+            # scalar loop below — (queue + latency) + num/bw, then
+            # + registration — so each lane is the same IEEE operation
+            # sequence and the result is bit-identical. argmin returns
+            # the FIRST minimal lane, matching the strict-< keep-first
+            # scan over the same sorted source order. Sources with
+            # bw == 0 carry num = 0, bw = 1 (wire term exactly 0.0, as
+            # the scalar conditional yields); registered sources carry
+            # reg = 0.0 (t + 0.0 == t for these non-negative ETAs).
+            q_rows, lat_rows, num_rows, bw_rows, reg_rows = \
+                [], [], [], [], []
+            reg_cost = None
+            for s in srcs_sorted:
+                link = self.cluster.p_links.get((s, dst)) \
+                    or self.cluster.p_links.get((dst, s))
+                if link is None or not link.up:
+                    continue
+                queue = link.queue_seconds(now)
+                nic = hosts[s].nic
+                if nic is not None:
+                    nq = nic.queue_seconds(now)
+                    if nq > queue:
+                        queue = nq
+                if in_queue > queue:
+                    queue = in_queue
+                bw = link.bandwidth
+                if bw:
+                    num = (CMD_BYTES + nbytes) * wire_scale(tr, bw)
+                else:
+                    num, bw = 0.0, 1.0
+                if (buf.id, s, dst) not in rt._mr_registered:
+                    if reg_cost is None:
+                        reg_cost = tr.register_buffer(
+                            nbytes, peers=len(rt.servers) - 1)
+                    reg = reg_cost
+                else:
+                    reg = 0.0
+                q_rows.append(queue)
+                lat_rows.append(link.latency)
+                num_rows.append(num)
+                bw_rows.append(bw)
+                reg_rows.append(reg)
+            if q_rows:
+                t = (_np.array(q_rows) + _np.array(lat_rows)
+                     + _np.array(num_rows) / _np.array(bw_rows))
+                t = t + _np.array(reg_rows)
+                best = float(t[int(t.argmin())])
+        else:
+            for s in srcs_sorted:
+                link = self.cluster.p_links.get((s, dst)) \
+                    or self.cluster.p_links.get((dst, s))
+                if link is None or not link.up:
+                    continue
+                queue = link.queue_seconds(now)
+                nic = hosts[s].nic
+                if nic is not None:
+                    nq = nic.queue_seconds(now)
+                    if nq > queue:
+                        queue = nq
+                if in_queue > queue:
+                    queue = in_queue
+                bw = link.bandwidth
+                t = queue + link.latency + (
+                    (CMD_BYTES + nbytes) * wire_scale(tr, bw) / bw
+                    if bw else 0.0)
+                if (buf.id, s, dst) not in rt._mr_registered:
+                    t += tr.register_buffer(nbytes,
+                                            peers=len(rt.servers) - 1)
+                if best is None or t < best:
+                    best = t
         if best is not None:
             return best
         # client-held only: an upload over this tenant's access link
@@ -256,9 +320,27 @@ class PlacementEngine:
             if bw else 0.0)
 
     # ---- the enqueue hook ----
+    def candidates_for(self, rt, device: str) -> list:
+        """Eligible placement candidates for ``rt``'s kernels naming
+        ``device`` (sorted; see ``place``). Pure read — safe to hoist
+        across a batch of same-instant enqueues (``enqueue_many``):
+        availability, membership state, and device inventories only
+        change when simulated time advances or an explicit lifecycle
+        call runs, neither of which can happen mid-batch. Eligibility
+        reads the host's own ``state`` slot (mirrored by
+        ``MembershipManager`` on every transition) instead of the
+        name-keyed membership table — one attribute load per candidate
+        on the every-enqueue path."""
+        hosts = self.cluster.hosts
+        return [s for s in sorted(rt.servers)
+                if rt.sessions[s].available
+                and hosts[s].state == ACTIVE
+                and (not device or device in hosts[s].devices)]
+
     def place(self, rt, requested: str, device: str, inputs,
               flops: float, bytes_moved: float,
-              duration: Optional[float]) -> str:
+              duration: Optional[float],
+              candidates: Optional[list] = None) -> str:
         """Pick the execution server for one kernel. Pure bookkeeping:
         consumes no simulated time, mutates nothing shared. Candidates
         are the tenant's available sessions in sorted order (the
@@ -278,11 +360,8 @@ class PlacementEngine:
         # Membership (DESIGN.md §7) gates eligibility the same way:
         # only ACTIVE hosts take new placements — joining hosts are not
         # established everywhere yet, draining ones are being emptied
-        eligible = self.cluster.membership.is_eligible
-        candidates = [s for s in sorted(rt.servers)
-                      if rt.sessions[s].available and eligible(s)
-                      and (not device
-                           or device in self.cluster.hosts[s].devices)]
+        if candidates is None:
+            candidates = self.candidates_for(rt, device)
         if not candidates:
             return requested
         chosen = policy.place(self, rt, requested, candidates, device,

@@ -97,7 +97,7 @@ from repro.core.placement import (PinnedPolicy, PlacementEngine,
                                   make_placement_policy)
 from repro.core.scheduler import DeviceScheduler, make_policy
 from repro.core.store import BufferStore, DIGEST_BYTES, content_digest
-from repro.core.transport import (make_transport, wire_scale,
+from repro.core.transport import (make_transport, wire_scale, scale_chunks,
     CLIENT_SUBMIT, CLIENT_REAP, CMD_BYTES, DISPATCH, COMPLETE_WRITE)
 
 log = logging.getLogger(__name__)
@@ -123,12 +123,16 @@ class LinkSpec:
 
 
 class _Waiter:
-    """One submitted command waiting on unresolved dependencies."""
-    __slots__ = ("ev", "dev_name", "remaining")
+    """One submitted command waiting on unresolved dependencies.
+    ``dev_idx`` is the host's interned device index (resolved once at
+    arrival so dispatch never repeats the name lookup); ``dev_name``
+    is kept for the drain/requeue API boundary."""
+    __slots__ = ("ev", "dev_name", "dev_idx", "remaining")
 
-    def __init__(self, ev: Event, dev_name: str):
+    def __init__(self, ev: Event, dev_name: str, dev_idx: int = -1):
         self.ev = ev
         self.dev_name = dev_name
+        self.dev_idx = dev_idx
         self.remaining = 0
 
 
@@ -142,6 +146,10 @@ class ServerHost:
     def __init__(self, cluster: "Cluster", spec: ServerSpec):
         self.cluster = cluster
         self.name = spec.name
+        # interned host id (DESIGN.md §8): small int, unique across the
+        # cluster's lifetime (rejoins of a reused *name* get a fresh id)
+        cluster._sid_seq += 1
+        self.sid = cluster._sid_seq
         self.devices = {d.name: DeviceSim(cluster.clock, d.name,
                                           d.flops, d.mem_bw)
                         for d in spec.devices}
@@ -149,6 +157,14 @@ class ServerHost:
             name: DeviceScheduler(make_policy(cluster.scheduler_policy,
                                               cluster.scheduler_quantum))
             for name in self.devices}
+        # interned device tables: index-aligned lists + name -> index,
+        # so the dispatch hot path replaces two string-dict lookups per
+        # kernel with two list indexes ('' = default device = index 0)
+        self.device_names = list(self.devices)
+        self.device_list = list(self.devices.values())
+        self.scheduler_list = [self.schedulers[n] for n in self.device_names]
+        self.dev_index = {n: i for i, n in enumerate(self.device_names)}
+        self.dev_index[""] = 0
         self.nic = (NIC(cluster.nic_bandwidth, f"{self.name}.nic")
                     if cluster.nic_bandwidth else None)
         self.nic_in = (NIC(cluster.nic_ingress_bandwidth,
@@ -200,6 +216,10 @@ class Cluster:
         # bit-exact (it is also the dedup benchmark's baseline)
         self.store = (BufferStore(self.clock, store_capacity)
                       if store or store_capacity is not None else None)
+        # interning counters (DESIGN.md §8): hosts and sessions get
+        # small-int ids for the hot-path tables; names stay the API
+        self._sid_seq = 0
+        self._skey_seq = 0
         self.hosts = {s.name: ServerHost(self, s) for s in servers}
         # cluster-wide placement control plane (DESIGN.md §6); 'pinned'
         # keeps every caller's hard-picked server bit-exactly
@@ -305,6 +325,11 @@ class ServerSim:
         self.rt = rt
         self.host = host
         self.name = host.name
+        # interned session key (DESIGN.md §8): the scheduler run queues
+        # key their per-tenant tables by this small int instead of the
+        # (tenant name, server name) strings
+        host.cluster._skey_seq += 1
+        self.skey = host.cluster._skey_seq
         self.session_id: Optional[bytes] = None
         self.processed: set = set()           # command ids (replay dedup)
         self.resolved_remote: set = set()     # remote event ids seen complete
@@ -343,8 +368,11 @@ class ServerSim:
         self.processed.add(ev.command.id)
         ev.status = SUBMITTED
         ev.t_submitted = self.rt.clock.now
-        w = _Waiter(ev, dev_name)
+        w = _Waiter(ev, dev_name, self.host.dev_index.get(dev_name, -1))
         events = self.rt.events
+        waiters = self._waiters
+        resolved = self.resolved_remote
+        remaining = 0
         for dep_id, local in deps:
             dep = events.get(dep_id)
             # ERROR counts as finished (the runtime's loose error-
@@ -352,21 +380,24 @@ class ServerSim:
             # failed while this command was on the wire must not leave
             # the waiter registered on an event whose callbacks already
             # flushed — that command would hang forever
-            if dep is None or dep.status in (COMPLETE, ERROR) or \
-                    (not local and dep_id in self.resolved_remote):
+            if dep is None or dep.status == COMPLETE \
+                    or dep.status == ERROR \
+                    or (not local and dep_id in resolved):
                 if dep is not None:
                     dep.release()             # retained at _send_command
                 continue
-            lst = self._waiters.get(dep_id)
+            lst = waiters.get(dep_id)
             if lst is None:
-                lst = self._waiters[dep_id] = []
+                lst = waiters[dep_id] = []
                 if local:
                     # one callback per dep regardless of waiter count;
                     # fires wherever the event eventually completes
                     dep.on_complete(self._local_dep_complete)
             lst.append(w)
-            w.remaining += 1
-        if not w.remaining:
+            remaining += 1
+        if remaining:
+            w.remaining = remaining
+        else:
             self._ready.append(w)
         self._dispatch_ready()
 
@@ -434,32 +465,46 @@ class ServerSim:
             wave = self._ready
             self._ready = deque()
             for w in wave:
-                self._execute(w.ev, w.dev_name)
+                self._execute(w.ev, w.dev_name, w.dev_idx)
 
     # ---- execution ----
-    def _execute(self, ev: Event, dev_name: str):
+    def _execute(self, ev: Event, dev_name: str, dev_idx: int = -1):
         cmd = ev.command
-        if isinstance(cmd, C.MigrateBuffer):
-            self.rt._start_p2p_push(self, ev)
-            return
-        if isinstance(cmd, C.ReadBuffer):
-            self.rt._start_read_return(self, ev)
-            return
-        dname = dev_name or next(iter(self.host.devices))
-        dev = self.host.devices[dname]
-        if isinstance(cmd, C.WriteBuffer):
-            cmd.buffer.set_data(np.asarray(cmd.data), self.name)
-            ev.status = RUNNING
-            ev.t_start = self.rt.clock.now
-            self._complete(ev)
-            return
-        # NDRangeKernel / BuiltinKernel / Marker: device time is
-        # arbitrated across sessions by the host's per-device scheduler —
-        # a ready command queues until the policy dispatches it
-        flops = getattr(cmd, "flops", 0.0)
-        bytes_moved = getattr(cmd, "bytes_moved", 0.0)
-        duration = getattr(cmd, "duration", None)
-        cost = dev.kernel_cost(flops, bytes_moved, duration)
+        if type(cmd) is C.NDRangeKernel:
+            # hot path: plain kernels skip the command-union isinstance
+            # chain entirely and read cost fields as direct slots
+            host = self.host
+            if dev_idx < 0:
+                dev_idx = host.dev_index[dev_name]
+            dev = host.device_list[dev_idx]
+            duration = cmd.duration
+            cost = duration if duration is not None else \
+                dev.kernel_cost(cmd.flops, cmd.bytes_moved, None)
+        else:
+            if isinstance(cmd, C.MigrateBuffer):
+                self.rt._start_p2p_push(self, ev)
+                return
+            if isinstance(cmd, C.ReadBuffer):
+                self.rt._start_read_return(self, ev)
+                return
+            host = self.host
+            if dev_idx < 0:
+                dev_idx = host.dev_index[dev_name]
+            dev = host.device_list[dev_idx]
+            if isinstance(cmd, C.WriteBuffer):
+                cmd.buffer.set_data(np.asarray(cmd.data), self.name)
+                ev.status = RUNNING
+                ev.t_start = self.rt.clock.now
+                self._complete(ev)
+                return
+            # BuiltinKernel / Marker / foreign commands: device time is
+            # arbitrated across sessions by the host's per-device
+            # scheduler — a ready command queues until the policy
+            # dispatches it
+            cost = dev.kernel_cost(getattr(cmd, "flops", 0.0),
+                                   getattr(cmd, "bytes_moved", 0.0),
+                                   getattr(cmd, "duration", None))
+        dname = host.device_names[dev_idx]
 
         def run(release):
             if ev.status == ERROR:
@@ -477,13 +522,18 @@ class ServerSim:
                     # written — completion is void
                     release()
                     return
-                if isinstance(cmd, C.NDRangeKernel) and cmd.fn is not None:
-                    ins = [b.data for b in cmd.inputs]
-                    outs = cmd.fn(*ins)
-                    if not isinstance(outs, (tuple, list)):
-                        outs = (outs,)
-                    for b, arr in zip(cmd.outputs, outs):
-                        b.set_data(np.asarray(arr), self.name)
+                if isinstance(cmd, C.NDRangeKernel):
+                    if cmd.fn is not None:
+                        ins = [b.data for b in cmd.inputs]
+                        outs = cmd.fn(*ins)
+                        if not isinstance(outs, (tuple, list)):
+                            outs = (outs,)
+                        for b, arr in zip(cmd.outputs, outs):
+                            b.set_data(np.asarray(arr), self.name)
+                    else:
+                        for b in cmd.outputs:
+                            b.invalidate_except(self.name)
+                            b.valid_on = {self.name}
                 else:
                     for b in getattr(cmd, "outputs", ()):
                         b.invalidate_except(self.name)
@@ -495,8 +545,8 @@ class ServerSim:
 
         # the (event, device) tag lets a drain requeue scheduled-but-
         # unstarted commands without ever firing their run closures
-        self.host.schedulers[dname].submit(self, self.rt.weight, cost, run,
-                                           (ev, dname))
+        host.scheduler_list[dev_idx].submit(self, self.rt.weight, cost, run,
+                                            (ev, dname))
 
     def _complete(self, ev: Event):
         if ev.status == ERROR:
@@ -534,7 +584,10 @@ class Session:
         and could not be replayed after a reconnect — that loss used to
         be silent; now it is counted and logged once per session."""
         buf = self.replay
-        while buf and buf[0][0].status in (COMPLETE, ERROR):
+        while buf:
+            s = buf[0][0].status
+            if s != COMPLETE and s != ERROR:
+                break
             buf.popleft()
         if buf.maxlen is not None and len(buf) == buf.maxlen:
             if not self.lost_unacked:
@@ -636,6 +689,24 @@ class ClientRuntime:
         self.scheduling = scheduling
         self.p2p_migration = p2p_migration
         self.completion_routing = completion_routing
+        # dispatch hot-path constants (DESIGN.md §8): the zero-payload
+        # command cost and the completion cost are per-transport
+        # constants, and the scheduling mode is fixed at construction —
+        # the per-send ternaries and cost calls fold to these reads.
+        # Each derived float is computed with the exact operand pair the
+        # per-send expression used, so timestamps are bit-identical.
+        _c0 = self.transport.command_cost(0.0)
+        self._cmd_cost0 = _c0
+        self._submit_overhead0 = CLIENT_SUBMIT + _c0.sender_cpu
+        self._recv_delay0 = _c0.receiver_cpu + DISPATCH
+        self._comp_cost = (self.peer_transport
+                           if scheduling == "decentralized"
+                           else self.transport).completion_cost()
+        self._complete_overhead = COMPLETE_WRITE + self._comp_cost.sender_cpu
+        # every client link (seed and joined alike) is built from
+        # `client_link`, so the client-side wire inflation factor is a
+        # per-runtime constant too
+        self._cscale0 = wire_scale(self.transport, client_link.bandwidth)
         self.servers = {h.name: ServerSim(self, h)
                         for h in cluster.hosts.values()}
         self.events: dict = {}
@@ -938,7 +1009,13 @@ class ClientRuntime:
         return ev
 
     def _new_event(self, cmd, server: str) -> Event:
-        return self._register_event(Event(command=cmd, server=server))
+        # _register_event, inlined (one enqueue-path call per command)
+        ev = Event(command=cmd, server=server)
+        ev.t_queued = self.clock.now
+        ev._refs += 1               # client hold until completion observed
+        ev.on_retire = self._retire
+        self.events[ev.id] = ev
+        return ev
 
     def _retire(self, ev: Event):
         """Last reference dropped on a finished event: remove it from
@@ -1012,6 +1089,94 @@ class ClientRuntime:
             # contents, so the version bumps at enqueue time too
             b.invalidate_except(server)
         return ev
+
+    def enqueue_many(self, server: str, kernels: Sequence[dict],
+                     device: str = "", pin: bool = False) -> list:
+        """Batched ``enqueue_kernel``: one call, many kernels, identical
+        schedule (DESIGN.md §8).
+
+        ``kernels`` is a sequence of dicts carrying ``enqueue_kernel``'s
+        keyword arguments (``fn``, ``inputs``, ``outputs``, ``flops``,
+        ``bytes_moved``, ``duration``, ``wait_for``, ``name``; optional
+        per-kernel ``server``/``device``/``pin`` overriding the
+        call-level defaults). ``wait_for`` entries may be Event objects
+        or **integer indices** into this batch, referencing an earlier
+        kernel's event — the natural way to express a dependency chain
+        built in one call. Returns the Events in batch order.
+
+        Produces the *exact* sequence of clock-schedule calls the
+        equivalent ``enqueue_kernel`` loop would (same timestamps, same
+        seq numbers — bit-exact), because no simulated time passes
+        between batch entries: the liveness check, placement policy
+        resolution, placement candidate lists (per named device), and
+        table lookups are hoisted out of the loop, while everything
+        observable — placement decisions and counters, implicit
+        migrations, CoW forks, telemetry records, wire sends, eager
+        invalidation — runs per kernel in the loop's order."""
+        self._check_live()
+        engine = self.cluster.placement
+        policy = self._placement_policy or engine.default_policy
+        pinned_policy = type(policy) is PinnedPolicy
+        telemetry = engine.telemetry_active
+        sessions = self.sessions
+        store = self.cluster.store
+        new_event = self._new_event
+        send = self._send_command
+        cand_cache: dict = {}          # device -> hoisted candidate list
+        results: list = []
+        for spec in kernels:
+            get = spec.get
+            srv = get("server", server)
+            dev = get("device", device)
+            inputs = get("inputs", ())
+            outputs = get("outputs", ())
+            flops = get("flops", 0.0)
+            bytes_moved = get("bytes_moved", 0.0)
+            duration = get("duration")
+            wait_for = [results[w] if type(w) is int else w
+                        for w in get("wait_for", ())]
+            if not (pin or get("pin", False)):
+                if pinned_policy:
+                    # inlined PlacementEngine.place fast path: counters
+                    # only, the requested server stands
+                    engine.decisions += 1
+                    engine.placed_local += 1
+                else:
+                    cands = cand_cache.get(dev)
+                    if cands is None:
+                        cands = cand_cache[dev] = \
+                            engine.candidates_for(self, dev)
+                    srv = engine.place(self, srv, dev, inputs, flops,
+                                       bytes_moved, duration,
+                                       candidates=cands)
+            if not sessions[srv].available:
+                raise DeviceUnavailable(srv)
+            if inputs:
+                deps = list(wait_for)
+                for b in inputs:
+                    if srv not in b.valid_on:
+                        deps.append(self.enqueue_migration(
+                            b, srv, wait_for=wait_for))
+            else:
+                deps = wait_for     # fresh private list: no copy needed
+            if store is not None:
+                for b in outputs:
+                    if store.cow_fork(b):
+                        bytes_moved += 2.0 * b.nbytes
+            cmd = C.NDRangeKernel(get("fn"), tuple(inputs),
+                                  tuple(outputs), flops, bytes_moved,
+                                  duration, get("name", "kernel"))
+            ev = new_event(cmd, srv)
+            if telemetry:
+                engine.record(srv,
+                              engine.kernel_cost(srv, dev, flops,
+                                                 bytes_moved, duration),
+                              ev)
+            send(ev, srv, dev, [d.id for d in deps])
+            for b in outputs:
+                b.invalidate_except(srv)
+            results.append(ev)
+        return results
 
     def enqueue_write(self, server: str, buf: Buffer, data,
                       wait_for: Sequence[Event] = ()) -> Event:
@@ -1441,7 +1606,7 @@ class ClientRuntime:
                                                cost.receiver_cpu)]
         scale = wire_scale(tr, link.bandwidth)
         if scale != 1.0:
-            chunks = [(s, wb * scale, r) for s, wb, r in chunks]
+            chunks = scale_chunks(chunks, scale)
         n_chunks = len(chunks)
 
         def delivered():
@@ -1502,19 +1667,33 @@ class ClientRuntime:
         # remote, the target server subscribes to their completion
         deps = []
         if dep_ids:
-            seen = set()
-            for dep_id in dep_ids:
-                if dep_id in seen:
-                    continue
-                seen.add(dep_id)
-                dep = self.events.get(dep_id)
-                if dep is None or dep.status in (COMPLETE, ERROR):
-                    continue          # finished (error counts): no wire dep
-                dep.retain()
-                local = dep.server == server
-                if not local and self.completion_routing == "subscription":
-                    self._subs.setdefault(dep_id, set()).add(server)
-                deps.append((dep_id, local))
+            events = self.events
+            by_sub = self.completion_routing == "subscription"
+            if len(dep_ids) == 1:     # common case: skip the dedup set
+                dep_id = dep_ids[0]
+                dep = events.get(dep_id)
+                if dep is not None and dep.status != COMPLETE \
+                        and dep.status != ERROR:
+                    dep.retain()
+                    local = dep.server == server
+                    if not local and by_sub:
+                        self._subs.setdefault(dep_id, set()).add(server)
+                    deps.append((dep_id, local))
+            else:
+                seen = set()
+                for dep_id in dep_ids:
+                    if dep_id in seen:
+                        continue
+                    seen.add(dep_id)
+                    dep = events.get(dep_id)
+                    if dep is None or dep.status == COMPLETE \
+                            or dep.status == ERROR:
+                        continue      # finished (error counts): no wire dep
+                    dep.retain()
+                    local = dep.server == server
+                    if not local and by_sub:
+                        self._subs.setdefault(dep_id, set()).add(server)
+                    deps.append((dep_id, local))
         sess = self.sessions[server]
         sess.record((ev, server, device, deps, payload))
         link = self.c_links[server]
@@ -1523,9 +1702,9 @@ class ClientRuntime:
             # equal cost.sender_cpu/receiver_cpu, so single-chunk timing
             # on an idle link is unchanged)
             fixed, chunks = self.transport.chunk_plan(payload)
-            scale = wire_scale(self.transport, link.bandwidth)
+            scale = self._cscale0
             if scale != 1.0:
-                chunks = [(s, wb * scale, r) for s, wb, r in chunks]
+                chunks = scale_chunks(chunks, scale)
 
             def deliver_chunked():
                 self.clock.schedule(
@@ -1540,18 +1719,22 @@ class ClientRuntime:
                 # drops the send) — mirrors bytes_on_wire's accounting
                 self.upload_bytes_on_wire += payload * scale
             return
-        cost = self.transport.command_cost(payload)
+        # zero-payload: the cost triple is the transport's cached
+        # constant (`_cmd_cost0`) and the derived overhead/delay floats
+        # were folded at construction; the delivery callback is a bound
+        # method + args instead of a per-send closure
+        cost = self._cmd_cost0
+        link.send((cost.wire_bytes + extra_wire) * self._cscale0,
+                  self._deliver_command,
+                  serialize_overhead=self._submit_overhead0,
+                  ingress=self.cluster.hosts[server].nic_in,
+                  args=(server, ev, device, deps))
 
-        def deliver():
-            self.clock.schedule(
-                cost.receiver_cpu + DISPATCH,
-                self.servers[server].receive_command, ev, device, deps)
-
-        link.send((cost.wire_bytes + extra_wire)
-                  * wire_scale(self.transport, link.bandwidth),
-                  deliver,
-                  serialize_overhead=CLIENT_SUBMIT + cost.sender_cpu,
-                  ingress=self._nic_in(server))
+    def _deliver_command(self, server: str, ev: Event, device: str,
+                         deps: list):
+        self.clock.schedule(self._recv_delay0,
+                            self.servers[server].receive_command,
+                            ev, device, deps)
 
     # ---- migration execution (on source server) ----
     def _start_p2p_push(self, src_srv: ServerSim, ev: Event):
@@ -1645,14 +1828,13 @@ class ClientRuntime:
 
     # ---- completion propagation ----
     def _broadcast_completion(self, srv: ServerSim, ev: Event):
-        comp = (self.peer_transport if self.scheduling == "decentralized"
-                else self.transport).completion_cost()
+        comp = self._comp_cost          # per-transport constant
         nic = srv.host.nic              # every leg leaves this server
         # to client (always)
         self.c_links[srv.name].send(
-            comp.wire_bytes, lambda: self._client_reap(ev),
-            serialize_overhead=COMPLETE_WRITE + comp.sender_cpu,
-            egress=nic)
+            comp.wire_bytes, self._client_reap,
+            serialize_overhead=self._complete_overhead,
+            egress=nic, args=(ev,))
         self.client_completion_msgs += 1
         if self.scheduling != "decentralized":
             return
@@ -1665,10 +1847,9 @@ class ClientRuntime:
                 continue
             link = self.peer_link(srv.name, name)
             link.send(comp.wire_bytes,
-                      lambda p=self.servers[name]:
-                      p.notify_remote_complete(ev.id),
+                      self.servers[name].notify_remote_complete,
                       serialize_overhead=comp.sender_cpu, egress=nic,
-                      ingress=self._nic_in(name))
+                      ingress=self._nic_in(name), args=(ev.id,))
             self.peer_completion_msgs += 1
 
     def _route_completion_via_client(self, ev: Event):
@@ -1682,9 +1863,9 @@ class ClientRuntime:
         for name in sorted(subs):
             self.c_links[name].send(
                 comp.wire_bytes,
-                lambda p=self.servers[name]: p.notify_remote_complete(ev.id),
+                self.servers[name].notify_remote_complete,
                 serialize_overhead=comp.sender_cpu,
-                ingress=self._nic_in(name))
+                ingress=self._nic_in(name), args=(ev.id,))
             self.client_routed_completion_msgs += 1
 
     def _client_reap(self, ev: Event):
@@ -1704,10 +1885,9 @@ class ClientRuntime:
                     continue
                 self.c_links[name].send(
                     comp.wire_bytes,
-                    lambda p=self.servers[name]:
-                    p.notify_remote_complete(ev.id),
+                    self.servers[name].notify_remote_complete,
                     serialize_overhead=comp.sender_cpu,
-                    ingress=self._nic_in(name))
+                    ingress=self._nic_in(name), args=(ev.id,))
                 self.client_routed_completion_msgs += 1
         ev.release()                # client hold: completion observed
 

@@ -43,6 +43,16 @@ from typing import Callable, Optional
 DEFAULT_QUANTUM = 2e-3
 
 
+def _intern(tenant):
+    """Run-queue key for a tenant: the session's interned small int
+    (``ServerSim.skey``, DESIGN.md §8) when it has one, else the object
+    itself (unit tests push plain strings). Int keys hash to themselves
+    and compare with one machine op — the queues never touch session
+    *names* on the hot path; names stay at the API boundary
+    (``drain_queued`` returns the tenant objects, stats render names)."""
+    return getattr(tenant, "skey", tenant)
+
+
 class FIFOPolicy:
     """Single arrival-order queue across every session (baseline)."""
 
@@ -50,20 +60,22 @@ class FIFOPolicy:
     __slots__ = ("_q", "_cost")
 
     def __init__(self):
-        # (tenant, cost, run, tag) in arrival order; ``tag`` identifies
-        # the command for drain-time requeue (the Event, in the runtime)
+        # (skey, tenant, cost, run, tag) in arrival order; ``tag``
+        # identifies the command for drain-time requeue (the Event, in
+        # the runtime) and ``skey`` is the interned session id used for
+        # tenant-match scans (``remove``)
         self._q: deque = deque()
         self._cost = 0.0              # queued device-seconds
 
     def push(self, tenant, weight: float, cost: float, run: Callable,
              tag=None):
-        self._q.append((tenant, cost, run, tag))
+        self._q.append((_intern(tenant), tenant, cost, run, tag))
         self._cost += cost
 
     def pop(self) -> Optional[Callable]:
         if not self._q:
             return None
-        _t, cost, run, _g = self._q.popleft()
+        _k, _t, cost, run, _g = self._q.popleft()
         self._cost -= cost
         return run
 
@@ -74,17 +86,18 @@ class FIFOPolicy:
         """Drop every queued command of ``tenant`` (detach); returns the
         number removed. The in-service command, if any, was already
         popped and runs to completion (non-preemptive)."""
-        kept = [e for e in self._q if e[0] is not tenant]
+        key = _intern(tenant)
+        kept = [e for e in self._q if e[0] != key]
         removed = len(self._q) - len(kept)
         self._q = deque(kept)
-        self._cost = sum(e[1] for e in kept)
+        self._cost = sum(e[2] for e in kept)
         return removed
 
     def drain_queued(self) -> list:
         """Empty the queue, returning ``(tenant, tag)`` per entry in
         arrival order (server drain: the commands are requeued on a
         survivor, so their ``run`` closures must never fire here)."""
-        out = [(t, g) for t, _c, _r, g in self._q]
+        out = [(t, g) for _k, t, _c, _r, g in self._q]
         self._q.clear()
         self._cost = 0.0
         return out
@@ -107,7 +120,7 @@ class DRRPolicy:
 
     name = "drr"
     __slots__ = ("quantum", "_queues", "_weights", "_deficit", "_ring",
-                 "_granted", "_cost")
+                 "_granted", "_cost", "_tenants")
 
     def __init__(self, quantum: float = DEFAULT_QUANTUM):
         if not quantum > 0.0:
@@ -115,24 +128,30 @@ class DRRPolicy:
             # it); a negative one shrinks deficits forever
             raise ValueError(f"quantum must be positive, got {quantum!r}")
         self.quantum = quantum
-        self._queues: dict = {}       # tenant -> deque[(cost, run, tag)]
+        # every per-tenant table is keyed by the interned session key
+        # (``_intern``); ``_tenants`` maps it back to the tenant object
+        # for the drain-time API boundary
+        self._queues: dict = {}       # skey -> deque[(cost, run, tag)]
         self._weights: dict = {}
         self._deficit: dict = {}      # only tenants currently in the ring
-        self._ring: deque = deque()
+        self._ring: deque = deque()   # skeys with queued work
         self._granted = False
         self._cost = 0.0              # queued device-seconds
+        self._tenants: dict = {}      # skey -> tenant object
 
     def push(self, tenant, weight: float, cost: float, run: Callable,
              tag=None):
-        self._weights[tenant] = weight
-        q = self._queues.get(tenant)
+        key = _intern(tenant)
+        self._tenants[key] = tenant
+        self._weights[key] = weight
+        q = self._queues.get(key)
         if q is None:
-            q = self._queues[tenant] = deque()
+            q = self._queues[key] = deque()
         if not q:
             # going active: join the rotation with zero credit (idle
             # periods bank nothing)
-            self._deficit[tenant] = 0.0
-            self._ring.append(tenant)
+            self._deficit[key] = 0.0
+            self._ring.append(key)
             if len(self._ring) == 1:
                 self._granted = False
         q.append((cost, run, tag))
@@ -187,16 +206,18 @@ class DRRPolicy:
         """Drop ``tenant``'s queue, deficit, and ring slot (detach);
         returns the number of queued commands removed. If the tenant was
         at the ring head its latched grant is discarded with it."""
-        q = self._queues.pop(tenant, None)
-        self._weights.pop(tenant, None)
+        key = _intern(tenant)
+        q = self._queues.pop(key, None)
+        self._weights.pop(key, None)
+        self._tenants.pop(key, None)
         removed = len(q) if q else 0
         if q:
             self._cost -= sum(c for c, _r, _g in q)
-        if self._deficit.pop(tenant, None) is not None:
-            if self._ring and self._ring[0] is tenant:
+        if self._deficit.pop(key, None) is not None:
+            if self._ring and self._ring[0] == key:
                 self._granted = False
             try:
-                self._ring.remove(tenant)
+                self._ring.remove(key)
             except ValueError:
                 pass
         return removed
@@ -204,16 +225,20 @@ class DRRPolicy:
     def drain_queued(self) -> list:
         """Empty every queue, returning ``(tenant, tag)`` per entry in
         ring order (server drain: the commands are requeued elsewhere,
-        so their ``run`` closures must never fire here)."""
+        so their ``run`` closures must never fire here). Tenant objects
+        — not interned keys — cross this boundary."""
         out = []
-        order = list(self._ring) + [t for t in self._queues
-                                    if t not in self._deficit]
-        for t in order:
-            for _c, _r, g in self._queues.get(t, ()):
+        order = list(self._ring) + [k for k in self._queues
+                                    if k not in self._deficit]
+        tenants = self._tenants
+        for k in order:
+            t = tenants.get(k, k)
+            for _c, _r, g in self._queues.get(k, ()):
                 out.append((t, g))
         self._queues.clear()
         self._deficit.clear()
         self._ring.clear()
+        self._tenants.clear()
         self._granted = False
         self._cost = 0.0
         return out
@@ -252,8 +277,25 @@ class DeviceScheduler:
 
     def submit(self, tenant, weight: float, cost: float, run: Callable,
                tag=None):
-        self.policy.push(tenant, weight, cost, run, tag)
-        backlog = len(self.policy)
+        policy = self.policy
+        if not self._busy and type(policy) is FIFOPolicy and \
+                not policy._q and policy._cost == 0.0:
+            # Uncontended fast path: an idle device with an empty FIFO
+            # queue would push this entry and immediately pop it back —
+            # skip the queue round-trip. Observable state transitions
+            # exactly as the general path: backlog peaked at 1,
+            # dispatched counted, device marked busy. FIFO only: a
+            # DRR push/pop mutates deficits, and a nonzero residual
+            # ``_cost`` (float cancellation dust) must keep flowing
+            # through the same += / -= sequence to stay bit-exact.
+            if self.queue_peak < 1:
+                self.queue_peak = 1
+            self._busy = True
+            self.dispatched += 1
+            run(self._release)
+            return
+        policy.push(tenant, weight, cost, run, tag)
+        backlog = len(policy)
         if backlog > self.queue_peak:
             self.queue_peak = backlog
         if not self._busy:

@@ -18,7 +18,10 @@ faster from 32 B and plateauing ~65 % above 134 MiB with the knee at the
 """
 from __future__ import annotations
 
-import dataclasses
+try:                      # vectorized chunk-plan math (optional)
+    import numpy as _np
+except ImportError:       # pragma: no cover - numpy ships with the image
+    _np = None
 
 KiB = 1024
 MiB = 1024 * 1024
@@ -66,11 +69,42 @@ def wire_scale(transport, link_bandwidth: float) -> float:
     return 1.0
 
 
-@dataclasses.dataclass
 class TransferCost:
-    sender_cpu: float      # time on the sending side before the wire
-    wire_bytes: float      # bytes that cross the link
-    receiver_cpu: float    # time on the receiving side after delivery
+    """Per-message cost triple. A ``__slots__`` value object (one is
+    built per command send on the dispatch hot path); the zero-payload
+    instances are cached per transport and shared — holders only read
+    the fields."""
+
+    __slots__ = ("sender_cpu", "wire_bytes", "receiver_cpu")
+
+    def __init__(self, sender_cpu: float, wire_bytes: float,
+                 receiver_cpu: float):
+        self.sender_cpu = sender_cpu      # sending-side time before the wire
+        self.wire_bytes = wire_bytes      # bytes that cross the link
+        self.receiver_cpu = receiver_cpu  # receiving-side time after delivery
+
+    def __repr__(self):
+        return (f"TransferCost(sender_cpu={self.sender_cpu!r}, "
+                f"wire_bytes={self.wire_bytes!r}, "
+                f"receiver_cpu={self.receiver_cpu!r})")
+
+
+# Vectorizing the per-chunk wire-scale multiply pays only once a plan is
+# big enough to amortize the array round-trip (DESIGN.md §8); below the
+# cutoff the plain list comprehension is faster — zero cost when unused.
+_VEC_MIN_CHUNKS = 64
+
+
+def scale_chunks(chunks: list, scale: float) -> list:
+    """Apply a wire inflation factor to a chunk plan's wire-bytes
+    column. Elementwise multiply only — each output float is the same
+    single IEEE operation the scalar path performs, so results are
+    bit-exact either way."""
+    if _np is not None and len(chunks) >= _VEC_MIN_CHUNKS:
+        arr = _np.array(chunks, dtype=_np.float64)
+        arr[:, 1] *= scale
+        return [tuple(row) for row in arr.tolist()]
+    return [(s, wb * scale, r) for s, wb, r in chunks]
 
 
 def _chunk_sizes(payload: float, chunk_bytes: float) -> list:
@@ -93,23 +127,33 @@ class TCPTransport:
     """Size-prefixed command stream over tuned TCP sockets."""
     name = "tcp"
 
+    def __init__(self):
+        # The dispatch hot path asks for these two costs once per
+        # command/completion; both are payload-independent constants, so
+        # build them once and share (holders never mutate TransferCost).
+        self._cost_zero = TransferCost(
+            THREAD_WAKE + 2 * SYSCALL, CMD_BYTES + 0.0,
+            THREAD_WAKE + SYSCALL)
+        self._cost_completion = TransferCost(
+            THREAD_WAKE + SYSCALL, COMPLETION_BYTES, THREAD_WAKE + SYSCALL)
+
     def command_cost(self, payload: float = 0.0) -> TransferCost:
-        writes = 2 + (1 if payload > 0 else 0)
+        if not payload:
+            return self._cost_zero
+        writes = 3
         if payload > TCP_SNDBUF:
             writes += int(payload // TCP_SNDBUF)
         # every byte is copied into the kernel send buffer, and out again;
         # each message wakes the writer (sender) and reader (receiver)
-        copy = payload / COPY_BW if payload else 0.0
+        copy = payload / COPY_BW
         return TransferCost(
             sender_cpu=THREAD_WAKE + writes * SYSCALL + copy,
             wire_bytes=CMD_BYTES + payload,
-            receiver_cpu=THREAD_WAKE + SYSCALL
-            + (payload / COPY_BW if payload else 0.0),
+            receiver_cpu=THREAD_WAKE + SYSCALL + copy,
         )
 
     def completion_cost(self) -> TransferCost:
-        return TransferCost(THREAD_WAKE + SYSCALL, COMPLETION_BYTES,
-                            THREAD_WAKE + SYSCALL)
+        return self._cost_completion
 
     def chunk_plan(self, payload: float):
         """Split a bulk payload at the kernel send-buffer granularity for
@@ -126,10 +170,25 @@ class TCPTransport:
         # strictly exceeds the send buffer)
         chunk_writes = 1 + (int(payload // TCP_SNDBUF)
                             if payload > TCP_SNDBUF else 0)
+        n = len(sizes)
+        if n >= 3:
+            # Chunks are equal-sized by construction, so every interior
+            # chunk is the *same* cost tuple — build the plan by
+            # replication instead of re-deriving n identical rows. The
+            # first/middle/last tuples go through the exact arithmetic
+            # of the general loop below, so the plan is bit-identical.
+            c = sizes[0]
+            copy = c / COPY_BW
+            head = (SYSCALL + copy, CMD_BYTES + c, copy)
+            mid = (SYSCALL + copy, c, copy)
+            tail = ((1 + chunk_writes - n) * SYSCALL + copy, c,
+                    copy + THREAD_WAKE + SYSCALL)
+            chunks = [head] + [mid] * (n - 2) + [tail]
+            return THREAD_WAKE + 2 * SYSCALL, chunks
         chunks = []
-        last = len(sizes) - 1
+        last = n - 1
         for i, c in enumerate(sizes):
-            writes = 1 + (chunk_writes - len(sizes) if i == last else 0)
+            writes = 1 + (chunk_writes - n if i == last else 0)
             chunks.append((
                 writes * SYSCALL + c / COPY_BW,
                 (CMD_BYTES if i == 0 else 0.0) + c,
@@ -147,9 +206,15 @@ class RDMATransport:
 
     def __init__(self, svm: bool = False):
         self.svm = svm
+        self._cost_zero = TransferCost(RDMA_POST, CMD_BYTES + 0.0,
+                                       RDMA_COMPLETE)
+        self._cost_completion = TransferCost(
+            RDMA_POST, COMPLETION_BYTES, RDMA_COMPLETE)
 
     def command_cost(self, payload: float = 0.0) -> TransferCost:
-        stage = 0.0 if (self.svm or payload == 0) else payload / COPY_BW
+        if not payload:
+            return self._cost_zero
+        stage = 0.0 if self.svm else payload / COPY_BW
         return TransferCost(
             sender_cpu=RDMA_POST + stage,
             wire_bytes=CMD_BYTES + payload,
@@ -157,7 +222,7 @@ class RDMATransport:
         )
 
     def completion_cost(self) -> TransferCost:
-        return TransferCost(RDMA_POST, COMPLETION_BYTES, RDMA_COMPLETE)
+        return self._cost_completion
 
     def chunk_plan(self, payload: float):
         """Split at the HCA staging-fragment granularity; the shadow-

@@ -1,0 +1,323 @@
+"""Calendar-queue event engine vs the reference heap (DESIGN.md §8).
+
+The calendar ``SimClock`` must be *bit-exact* with ``HeapSimClock`` —
+same ``(t, seq)`` total order, same returned timestamps, same clamping
+— because every simulated-time regression baseline in ``benchmarks/``
+was pinned under the heap engine and is required to survive the engine
+swap unchanged. These tests drive both engines through the same
+operation streams (property-based) and the same full runtime scenario
+(monkeypatching the engine under ``Cluster``), and require identical
+observable behavior.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # deterministic fallback, see _hypothesis_stub
+    from _hypothesis_stub import given, settings, st
+
+import repro.core.runtime as runtime_mod
+from repro.core import (COMPLETE, ClientRuntime, Cluster, DeviceSpec,
+                        DeviceUnavailable, HeapSimClock, LinkSpec,
+                        ServerSpec, SimClock)
+
+FAST = LinkSpec(latency=5e-6, bandwidth=40e9 / 8)
+RADIO = LinkSpec(latency=1e-4, bandwidth=1.2e9 / 8)
+
+
+# ---------------------------------------------------------------------------
+# engine-level equivalence
+
+
+def _drive(clock, ops):
+    """Apply one operation stream to ``clock``; return the observable
+    log: every callback firing (timestamp + label), every scheduling
+    return value, every ``run`` stopping point."""
+    log = []
+
+    def fire(label, chain):
+        log.append(("fire", clock.now, label))
+        for delay, sub in chain:
+            clock.schedule(delay, fire, sub, ())
+
+    for op in ops:
+        kind = op[0]
+        if kind == "sched":
+            _, delay, label, chain = op
+            log.append(("sched", clock.schedule(delay, fire, label,
+                                                chain)))
+        elif kind == "sched_at":
+            _, t_abs, label = op
+            log.append(("sched_at", clock.schedule_at(t_abs, fire,
+                                                      label, ())))
+        elif kind == "run_until":
+            log.append(("ran", clock.run(until=op[1])))
+        else:                       # "run"
+            log.append(("ran_all", clock.run()))
+    log.append(("drain", clock.run()))
+    return log
+
+
+def _gen_ops(data):
+    """One random operation stream: same-timestamp bursts, zero and
+    negative delays, past ``schedule_at`` targets, delays spanning nine
+    orders of magnitude (sub-bucket to far-overflow), interleaved
+    ``run(until=)`` slices."""
+    ops = []
+    label = 0
+    for _ in range(data.draw(st.integers(5, 40), label="n_ops")):
+        kind = data.draw(st.sampled_from(
+            ("sched", "sched", "sched", "burst", "sched_at",
+             "run_until")), label="kind")
+        if kind in ("sched", "burst"):
+            # delay = m * 10^-k: k=0 reaches the overflow heap and the
+            # window-wrap retunes, k=7 lands far inside one bucket,
+            # m=0 is a zero delay (fires at now, later seq)
+            k = data.draw(st.integers(0, 7), label="k")
+            m = data.draw(st.integers(0, 25), label="m")
+            delay = m * (10.0 ** -k)
+            if kind == "sched" and data.draw(st.booleans(),
+                                             label="neg"):
+                delay = -delay      # negative: clamps to now
+            chain = []
+            if data.draw(st.booleans(), label="chain"):
+                # follow-ups rescheduled from inside the callback,
+                # including a zero-delay same-timestamp cascade
+                chain = [(0.0, label + 1000), (delay * 0.5, label + 2000)]
+            reps = (data.draw(st.integers(2, 6), label="reps")
+                    if kind == "burst" else 1)
+            for _ in range(reps):   # burst: identical timestamps
+                ops.append(("sched", delay, label, tuple(chain)))
+                label += 1
+        elif kind == "sched_at":
+            # absolute target in [0, 2.5]s — often in the past once the
+            # clock has advanced, exercising the clamp
+            t_abs = data.draw(st.integers(0, 2500),
+                              label="t_abs") * 1e-3
+            ops.append(("sched_at", t_abs, label))
+            label += 1
+        else:
+            until = data.draw(st.integers(0, 2500), label="until") * 1e-3
+            ops.append(("run_until", until))
+    ops.append(("run",))
+    return ops
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_calendar_matches_heap_pop_order(data):
+    ops = _gen_ops(data)
+    heap_log = _drive(HeapSimClock(), ops)
+    cal = SimClock()
+    cal_log = _drive(cal, ops)
+    assert cal_log == heap_log
+    assert cal.pending() == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 64), st.integers(0, 10))
+def test_small_calendar_still_exact(nbuckets, seed_k):
+    """Tiny bucket counts force constant wrapping, overflow refills,
+    and both retune rules — order must survive all of it."""
+    import random
+    rng = random.Random(0xF1EE7 + seed_k)
+    ops = []
+    for i in range(200):
+        ops.append(("sched", rng.choice((0.0, 1e-7, 3e-5, 2e-3, 0.7)),
+                    i, ()))
+        if i % 50 == 49:
+            ops.append(("run_until", rng.random()))
+    ops.append(("run",))
+    heap_log = _drive(HeapSimClock(), ops)
+    cal = SimClock(nbuckets=nbuckets)
+    assert _drive(cal, ops) == heap_log
+    assert cal.pending() == 0
+
+
+def test_overflow_backlog_bit_exact():
+    """A backlog far wider than the window (> nbuckets events deep in
+    the overflow heap) triggers the span retune; pop order and
+    timestamps must still match the heap exactly."""
+    import random
+    rng = random.Random(7)
+    ops = []
+    t = 0.0
+    for i in range(3000):
+        t += rng.choice((1e-7, 1e-6, 5e-4, 0.05))
+        ops.append(("sched_at", t, i))
+    ops.append(("run",))
+    assert _drive(SimClock(), ops) == _drive(HeapSimClock(), ops)
+
+
+@pytest.mark.parametrize("engine", [SimClock, HeapSimClock])
+def test_schedule_returns_effective_time(engine):
+    """Both ``schedule`` and ``schedule_at`` return the time the event
+    will actually fire — clamped to ``now`` for past targets and
+    non-positive delays — so callers can anchor follow-up work without
+    re-deriving the clamp."""
+    clock = engine()
+    assert clock.schedule(1e-3, lambda: None) == 1e-3
+    clock.run()
+    assert clock.now == 1e-3
+    assert clock.schedule(0.0, lambda: None) == clock.now
+    assert clock.schedule(-5.0, lambda: None) == clock.now
+    assert clock.schedule_at(0.0, lambda: None) == clock.now   # past
+    assert clock.schedule_at(2e-3, lambda: None) == 2e-3       # future
+    fired_at = []
+    clock.schedule_at(1e-9, lambda: fired_at.append(clock.now))
+    clock.run()
+    assert fired_at == [1e-3]       # clamped to the old now, not 1e-9
+
+
+# ---------------------------------------------------------------------------
+# full-runtime bit-exactness
+
+
+def _fleet_scenario():
+    """A small multi-tenant workload touching every hot path: writes,
+    roaming kernels with implicit migrations, reads, an explicit
+    migration, batched enqueue, and stepped ``run(until=)`` draining.
+    Returns every observable timestamp in completion order."""
+    cluster = Cluster([ServerSpec(f"s{i}", [DeviceSpec("gpu0")])
+                       for i in range(3)],
+                      peer_link=FAST, peer_transport="tcp",
+                      scheduler="drr")
+    rts = [ClientRuntime(cluster=cluster, client_link=RADIO,
+                         transport="tcp", name=f"ue{i}")
+           for i in range(3)]
+    cluster.run()                   # handshakes drained
+    times = []
+    for i, rt in enumerate(rts):
+        a = rt.create_buffer(64 * 1024)
+        b = rt.create_buffer(16 * 1024)
+        prev = None
+        for j in range(5):
+            srv = f"s{(i + j) % 3}"     # roam → implicit migrations
+            w = rt.enqueue_write(srv, a,
+                                 np.full(16 * 1024, i * 100 + j,
+                                         np.uint32))
+            deps = [w] if prev is None else [w, prev]
+            k = rt.enqueue_kernel(srv, fn=None, inputs=[a],
+                                  outputs=[b, a], duration=1e-4,
+                                  wait_for=deps, name=f"k{i}.{j}")
+            r = rt.enqueue_read(srv, b, wait_for=[k])
+            for tag, ev in (("w", w), ("k", k), ("r", r)):
+                ev.on_complete(lambda _e, t=f"ue{i}.{j}.{tag}", rt=rt:
+                               times.append((t, rt.clock.now)))
+            prev = r
+        m = rt.enqueue_migration(a, f"s{(i + 1) % 3}", wait_for=[prev])
+        m.on_complete(lambda _e, t=f"ue{i}.mig", rt=rt:
+                      times.append((t, rt.clock.now)))
+    batch = rts[0].enqueue_many(
+        "s0", [{"duration": 5e-5, "name": f"b{j}",
+                "wait_for": [j - 1] if j else []} for j in range(8)])
+    batch[-1].on_complete(lambda _e: times.append(("batch",
+                                                   rts[0].clock.now)))
+    # stepped drain: run(until=) boundaries must not perturb anything
+    t = cluster.clock.now
+    for _ in range(40):
+        t += 7.3e-4
+        cluster.run(until=t)
+    cluster.run()
+    times.append(("final", cluster.clock.now))
+    times.append(("live", sum(rt.stats()["events_live"] for rt in rts)))
+    return times
+
+
+def test_runtime_bit_exact_across_engines(monkeypatch):
+    """The whole simulated timeline — every completion timestamp, in
+    order — is identical under the calendar engine and the reference
+    heap (``Cluster`` instantiates whichever ``SimClock`` the runtime
+    module's global names)."""
+    calendar = _fleet_scenario()
+    monkeypatch.setattr(runtime_mod, "SimClock", HeapSimClock)
+    heap = _fleet_scenario()
+    assert calendar == heap
+
+
+def test_enqueue_many_matches_loop():
+    """``enqueue_many`` is a batching of ``enqueue_kernel`` — same
+    placement, same dependency edges, same timestamps — not a different
+    semantic. The same DAG submitted both ways must complete every
+    command at identical simulated times."""
+    def build(batched: bool):
+        cluster = Cluster([ServerSpec(f"s{i}", [DeviceSpec("gpu0")])
+                           for i in range(2)], peer_link=FAST)
+        rt = ClientRuntime(cluster=cluster, client_link=RADIO,
+                           transport="tcp", name="ue0")
+        cluster.run()
+        specs = [{"server": f"s{j % 2}", "duration": 3e-5,
+                  "name": f"k{j}",
+                  "wait_for": ([j - 1, j - 2] if j >= 2 else
+                               [j - 1] if j else [])}
+                 for j in range(40)]
+        if batched:
+            evs = rt.enqueue_many("s0", specs)
+        else:
+            evs = []
+            for s in specs:
+                evs.append(rt.enqueue_kernel(
+                    s["server"], fn=None, duration=s["duration"],
+                    name=s["name"],
+                    wait_for=[evs[d] for d in s["wait_for"]]))
+        rt.finish()
+        return [(ev.command.name, ev.t_end, ev.t_client_ack)
+                for ev in evs] + [("final", rt.clock.now)]
+
+    assert build(batched=True) == build(batched=False)
+
+
+# ---------------------------------------------------------------------------
+# interning stays invisible at the API boundary
+
+
+def test_stats_and_errors_render_names_after_churn():
+    """Server/tenant ids are interned to small ints internally; every
+    user-facing surface (stats dict keys, error messages) must keep
+    rendering human-readable *names* — including after lifecycle churn
+    that recycles interned ids (detach, drain, rejoin reusing a name)."""
+    cluster = Cluster([ServerSpec(f"s{i}", [DeviceSpec("gpu0")])
+                       for i in range(3)],
+                      peer_link=FAST, peer_transport="tcp",
+                      scheduler="drr")
+    rt = ClientRuntime(cluster=cluster, client_link=RADIO,
+                       transport="tcp", name="ue0")
+    extra = ClientRuntime(cluster=cluster, client_link=RADIO,
+                          transport="tcp", name="ue1")
+    cluster.run()
+    buf = rt.create_buffer(8192)
+    rt.enqueue_write("s1", buf, np.ones(2048, np.uint32))
+    rt.finish()
+    extra.detach()                              # tenant churn
+    drained = []
+    cluster.drain_server("s1", on_complete=lambda: drained.append(1))
+    cluster.run()
+    assert drained
+    cluster.join_server(ServerSpec("s1", [DeviceSpec("gpu0")]))
+    cluster.run()                               # rejoin reusing the name
+    ev = rt.enqueue_kernel("s1", fn=None, duration=1e-5)
+    rt.finish()
+    assert ev.status == COMPLETE
+
+    cst = cluster.stats()
+    assert set(cst["sessions"]) == {"s0", "s1", "s2"}
+    assert all(isinstance(k, str) and k.startswith("s")
+               for k in cst["sessions"])
+    assert cst["clients"] == ["ue0"]            # ue1 detached, by name
+    assert set(cst["membership"]["states"]) == {"s0", "s1", "s2"}
+    assert all(k.split("/")[0] in ("s0", "s1", "s2")
+               for k in cst["device_busy"])
+    rst = rt.stats()
+    for key in ("client_link_bytes", "replay_window",
+                "replay_overflows"):
+        assert all(isinstance(k, str) and k.startswith("s")
+                   for k in rst[key]), key
+
+    cluster.drain_server("s2")
+    cluster.run()
+    with pytest.raises(DeviceUnavailable) as exc:
+        rt.enqueue_kernel("s2", fn=None, duration=1e-5)
+    assert "s2" in str(exc.value)               # name, not interned id
