@@ -67,12 +67,12 @@ REGENERATE = ("python -m benchmarks.chaos "
               "--write-baseline benchmarks/BENCH_chaos.json")
 
 
-def _mk_cluster() -> Cluster:
+def _mk_cluster(trace=None) -> Cluster:
     return Cluster([ServerSpec(f"s{i}", [GPU_2080TI])
                     for i in range(N_SERVERS)],
                    peer_link=ETH_40G, peer_transport="tcp",
                    scheduler="drr", scheduler_quantum=QUANTUM,
-                   nic_bandwidth=NIC_BW, store=True)
+                   nic_bandwidth=NIC_BW, store=True, trace=trace)
 
 
 class ChaosUE:
@@ -232,11 +232,11 @@ def _percentile(lat, q):
     return float(np.percentile(np.asarray(lat) * 1e3, q))
 
 
-def _run(fault_fn=None):
+def _run(fault_fn=None, trace=None):
     """One scenario: build the cluster + UEs, optionally let
     ``fault_fn(cluster, t0)`` script a ``FaultSchedule``, run the
     workload to quiescence, and collect the ledger."""
-    cluster = _mk_cluster()
+    cluster = _mk_cluster(trace=trace)
     ues = [ChaosUE(cluster, i) for i in range(N_UE)]
     cluster.run()                           # handshakes drained
     t0 = cluster.clock.now
@@ -289,7 +289,7 @@ def _ledger_derived(r) -> str:
             f"retries={r['retries']}")
 
 
-def run():
+def run(storm_trace=None):
     steady = _run()
     t_steady = steady["sim_ms"] * 1e-3      # makespan, sim seconds
 
@@ -303,7 +303,7 @@ def run():
     def crash(cluster, t0):
         return FaultSchedule().crash(t0 + 0.40 * t_steady, "s1")
 
-    st = _run(storm)
+    st = _run(storm, trace=storm_trace)
     mm = st["cluster"].membership.stats()
     joined_frames = sum(u.frames_by_server.get("s4", 0)
                         for u in st["ues"])
@@ -393,8 +393,28 @@ def main() -> None:
                     help="write measured sim_ms to this JSON path")
     ap.add_argument("--json-out", default=None,
                     help="write the result rows to this JSON path")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="trace the drain-storm scenario and write "
+                         "Perfetto trace_event JSON to FILE; the export "
+                         "must carry fault markers (drain/join/crash "
+                         "instants) or the run fails")
     args = ap.parse_args()
-    rows = run()
+    storm_trace = None
+    if args.trace:
+        from repro.core import Tracer
+        storm_trace = Tracer()
+    rows = run(storm_trace=storm_trace)
+    if storm_trace is not None:
+        storm_trace.write_perfetto(args.trace)
+        errs = common.validate_perfetto(args.trace,
+                                        require_fault_markers=True)
+        for e in errs:
+            print(f"# trace: {e}", file=sys.stderr)
+        print(f"# trace: {len(storm_trace.cmds)} commands, "
+              f"{len(storm_trace.faults)} fault markers -> {args.trace} "
+              f"({'INVALID' if errs else 'schema ok'})", file=sys.stderr)
+        if errs:
+            raise SystemExit(1)
     if args.json_out:
         common.dump_rows(rows, args.json_out)
     if args.write_baseline:

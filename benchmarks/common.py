@@ -220,3 +220,72 @@ def build_dag(rt, n_cmds: int, n_srv: int, seed: int = 0, fanin: int = 3,
         events.append(rt.enqueue_kernel(srv, fn=None, duration=duration,
                                         wait_for=deps, name=f"k{i}"))
     return events
+
+
+def validate_perfetto(trace, require_fault_markers: bool = False) -> list:
+    """Schema check for an emitted Chrome/Perfetto ``trace_event`` JSON
+    file (or already-loaded dict): returns a list of error strings
+    (empty = valid). Checks the envelope, every event's phase/timestamp
+    shape, balanced async begin/end pairs per ``(cat, id)``, and —
+    for chaos traces — that fault markers are present. Used by
+    scripts/ci.sh on the traced smokes so a malformed export fails CI
+    instead of failing silently in the viewer."""
+    errs: list = []
+    if isinstance(trace, str):
+        try:
+            with open(trace) as f:
+                trace = json.load(f)
+        except (OSError, ValueError) as e:
+            return [f"unreadable trace: {e}"]
+    if not isinstance(trace, dict):
+        return ["trace must be a JSON object"]
+    events = trace.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return ["traceEvents must be a non-empty list"]
+    known_ph = {"M", "X", "b", "e", "i"}
+    async_depth: dict = {}
+    fault_markers = 0
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errs.append(f"event[{i}] is not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in known_ph:
+            errs.append(f"event[{i}]: unknown ph {ph!r}")
+            continue
+        if not isinstance(ev.get("pid"), int):
+            errs.append(f"event[{i}]: pid must be an int")
+        if ph == "M":
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or not math.isfinite(ts) \
+                or ts < 0:
+            errs.append(f"event[{i}]: ts must be a finite number >= 0, "
+                        f"got {ts!r}")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) \
+                    or not math.isfinite(dur) or dur < 0:
+                errs.append(f"event[{i}]: X dur must be a finite "
+                            f"number >= 0, got {dur!r}")
+        elif ph in ("b", "e"):
+            key = (ev.get("cat"), ev.get("id"))
+            if key[1] is None:
+                errs.append(f"event[{i}]: async event without id")
+                continue
+            d = async_depth.get(key, 0) + (1 if ph == "b" else -1)
+            if d < 0:
+                errs.append(f"event[{i}]: async 'e' without matching "
+                            f"'b' for {key}")
+                d = 0
+            async_depth[key] = d
+        elif ph == "i":
+            if ev.get("cat") == "fault":
+                fault_markers += 1
+    open_pairs = {k: d for k, d in async_depth.items() if d}
+    if open_pairs:
+        errs.append(f"{len(open_pairs)} async (cat, id) tracks left "
+                    f"open (unbalanced b/e)")
+    if require_fault_markers and not fault_markers:
+        errs.append("no fault markers (cat='fault' instants) in trace")
+    return errs

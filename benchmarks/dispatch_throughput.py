@@ -24,6 +24,7 @@ from __future__ import annotations
 import argparse
 import logging
 import random
+import sys
 import time
 
 from benchmarks import common
@@ -34,6 +35,12 @@ SERVER_COUNTS = (1, 4, 8)
 ROUTINGS = ("subscription", "broadcast")
 BATCHED_SERVER_COUNTS = (1, 4)
 REGRESSION_TOLERANCE = 0.20
+# tracing OFF must be free (DESIGN.md §9): the traced_off row repeats
+# the 4srv subscription sweep with tracing force-disabled and is gated
+# at 2% against that row's baseline value — the disabled-hook slot
+# loads must cost nothing measurable on the dispatch hot path
+OVERHEAD_TOLERANCE = 0.02
+OVERHEAD_BASELINE_ROW = "dispatch_4srv_subscription"
 REGENERATE = ("python -m benchmarks.dispatch_throughput --smoke "
               "--write-baseline benchmarks/BENCH_dispatch.json")
 
@@ -57,12 +64,12 @@ def build_specs(n_cmds: int, n_srv: int, seed: int = 42, fanin: int = 3,
     return specs
 
 
-def _make_rt(n_srv: int, routing: str) -> ClientRuntime:
+def _make_rt(n_srv: int, routing: str, trace=None) -> ClientRuntime:
     return ClientRuntime(
         servers=[ServerSpec(f"s{i}", [DeviceSpec("gpu0")])
                  for i in range(n_srv)],
         client_link=LOOPBACK, peer_link=LOOPBACK,
-        completion_routing=routing)
+        completion_routing=routing, trace=trace)
 
 
 def _measure(n_cmds: int, n_srv: int, routing: str) -> Row:
@@ -92,6 +99,26 @@ def _measure_batched(n_cmds: int, n_srv: int) -> Row:
                f"events_live={st['events_live']}")
 
 
+def _measure_overhead(n_cmds: int) -> list:
+    """The 4srv subscription workload twice more: once with tracing
+    force-disabled (gated at 2% vs the untouched-code baseline row) and
+    once with a live tracer (informational — tracing ON is allowed to
+    cost wall-clock, it just must never move simulated time)."""
+    from repro.core import Tracer
+    rows = []
+    for tag, trace in (("traced_off", False), ("traced_on", Tracer())):
+        rt = _make_rt(4, "subscription", trace=trace)
+        t0 = time.perf_counter()
+        build_dag(rt, n_cmds, 4, seed=42)
+        rt.finish()
+        wall = time.perf_counter() - t0
+        traced = len(trace.cmds) if trace is not False else 0
+        rows.append(Row(f"dispatch_4srv_{tag}", wall / n_cmds * 1e6,
+                        f"cmds_per_sec={n_cmds / wall:.0f};"
+                        f"traced_cmds={traced}"))
+    return rows
+
+
 def run(n_cmds: int = 10000):
     # deep enqueue-ahead DAGs overflow the replay window by design; the
     # (expected) once-per-session warning would drown the CSV output —
@@ -107,6 +134,7 @@ def run(n_cmds: int = 10000):
                 rows.append(_measure(n_cmds, n_srv, routing))
         for n_srv in BATCHED_SERVER_COUNTS:
             rows.append(_measure_batched(n_cmds, n_srv))
+        rows.extend(_measure_overhead(n_cmds))
     finally:
         rt_log.setLevel(prev_level)
     return emit(rows)
@@ -119,13 +147,36 @@ def _cmds_per_sec(row: Row) -> float:
 def check_baseline(rows, baseline_path: str) -> bool:
     """Gate the subscription and batched rows — those are the shipped
     dispatch paths; the broadcast rows exist as a comparison baseline
-    and their absolute wall-clock speed is not a product property."""
-    return common.check_rows(
+    and their absolute wall-clock speed is not a product property.
+
+    The tracing-overhead gate rides along: the ``traced_off`` row must
+    land within ``OVERHEAD_TOLERANCE`` (2%) of the baseline value for
+    the same workload (``dispatch_4srv_subscription``) — the baseline
+    predates the tracing hooks, so this measures what the disabled
+    instrumentation costs the hot path against pre-hook code."""
+    ok = common.check_rows(
         rows, baseline_path, extract=_cmds_per_sec,
         tolerance=REGRESSION_TOLERANCE, direction="higher_is_better",
         unit=" cmds/s", benchmark="dispatch_throughput",
         gated=lambda row: row.name.endswith(("_subscription",
                                              "_batched")))
+    _, baseline = common.load_baseline(baseline_path)
+    want = baseline.get(OVERHEAD_BASELINE_ROW)
+    off = [r for r in rows if r.name == "dispatch_4srv_traced_off"]
+    if want is None or not off:
+        print(f"# tracing overhead: missing {OVERHEAD_BASELINE_ROW} "
+              "baseline or traced_off row — nothing gated",
+              file=sys.stderr)
+        return False
+    got = _cmds_per_sec(off[0])
+    floor = want * (1.0 - OVERHEAD_TOLERANCE)
+    bad = got < floor
+    print(f"# dispatch_4srv_traced_off: {got:.0f} cmds/s vs "
+          f"{OVERHEAD_BASELINE_ROW} baseline {want:.0f} "
+          f"(2% floor {floor:.0f}) "
+          f"{'TRACING OVERHEAD REGRESSION' if bad else 'ok'}",
+          file=sys.stderr)
+    return ok and not bad
 
 
 def main() -> None:

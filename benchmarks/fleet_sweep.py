@@ -122,8 +122,23 @@ def main() -> None:
                     help="write measured sim_ms to this JSON path")
     ap.add_argument("--json-out", default=None,
                     help="write the result rows to this JSON path")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="trace the whole sweep (one tracer shared by "
+                         "both fleet-size clusters) and write Perfetto "
+                         "trace_event JSON to FILE; the sim_ms gates "
+                         "then double as proof tracing never moves "
+                         "simulated time")
     args = ap.parse_args()
-    rows = run()
+    tracer = None
+    if args.trace:
+        from repro.core import trace as trace_mod
+        tracer = trace_mod.Tracer()
+        trace_mod.set_default(tracer)
+    try:
+        rows = run()
+    finally:
+        if tracer is not None:
+            trace_mod.set_default(None)
     if args.json_out:
         common.dump_rows(rows, args.json_out)
     if args.write_baseline:
@@ -134,6 +149,15 @@ def main() -> None:
             direction="lower_is_better", tolerance=REGRESSION_TOLERANCE,
             regenerate=REGENERATE)
     ok = True
+    if tracer is not None:
+        tracer.write_perfetto(args.trace)
+        errs = common.validate_perfetto(args.trace)
+        for e in errs:
+            print(f"# trace: {e}", file=sys.stderr)
+        print(f"# trace: {len(tracer.cmds)} commands across "
+              f"{len(tracer._clusters)} clusters -> {args.trace} "
+              f"({'INVALID' if errs else 'schema ok'})", file=sys.stderr)
+        ok = ok and not errs
     if args.baseline:
         ok = check_baseline(rows, args.baseline) and ok
     if args.max_wall_s is not None:

@@ -1,0 +1,147 @@
+"""Fig. 9-style command-latency decomposition (DESIGN.md §9).
+
+The paper's Fig. 9/10 break the end-to-end command latency into where
+every microsecond goes: client submit + wire, server-side dependency
+wait, device run-queue wait, execution, and completion routing back to
+the client. This benchmark runs two traced workloads — the dispatch
+DAG (``benchmarks.dispatch_throughput``'s seeded random graph) and the
+migration pipeline (bulk weights pulled across the peer mesh) — and
+prints the tracer's per-stage table for each.
+
+The load-bearing property, gated here and in scripts/ci.sh: computed in
+rational arithmetic (``Tracer.breakdown(exact=True)``), the per-stage
+sums equal the summed end-to-end command latency EXACTLY — the
+decomposition attributes every last tick of latency to exactly one
+stage, nothing double-counted, nothing dropped. Each ``*_total`` row
+carries ``exact_sum=1`` only if that held.
+
+  PYTHONPATH=src python -m benchmarks.latency_breakdown [--check]
+
+``--check`` exits non-zero unless every workload's exact-sum gate and
+Perfetto schema check pass (used by scripts/ci.sh).
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+import sys
+from fractions import Fraction
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import (ETH_1G, ETH_40G, GPU_2080TI, LOOPBACK, MiB,
+                               Row, build_dag, emit)
+from repro.core import ClientRuntime, DeviceSpec, ServerSpec, Tracer
+from repro.core.trace import STAGES
+
+N_CMDS = 2000
+N_SRV = 4
+BIG = 8 * MiB
+
+
+def _dispatch_workload() -> Tracer:
+    tr = Tracer()
+    rt = ClientRuntime(
+        servers=[ServerSpec(f"s{i}", [DeviceSpec("gpu0")])
+                 for i in range(N_SRV)],
+        client_link=LOOPBACK, peer_link=LOOPBACK, trace=tr)
+    build_dag(rt, N_CMDS, N_SRV, seed=42)
+    rt.finish()
+    return tr
+
+
+def _migration_workload() -> Tracer:
+    tr = Tracer()
+    rt = ClientRuntime(
+        servers=[ServerSpec(f"s{i}", [GPU_2080TI]) for i in range(N_SRV)],
+        client_link=ETH_1G, peer_link=ETH_40G, transport="tcp",
+        trace=tr)
+    weights = rt.create_buffer(BIG, name="weights")
+    rt.enqueue_write("s0", weights, np.zeros(BIG // 4, np.uint32))
+    rt.finish()
+    for s in (f"s{i}" for i in range(1, N_SRV)):
+        for j in range(2):
+            out = rt.create_buffer(4096)
+            rt.enqueue_kernel(s, fn=None, inputs=[weights], outputs=[out],
+                              duration=1e-5, name=f"{s}_k{j}")
+    rt.finish()
+    return tr
+
+
+def _rows_for(tag: str, tr: Tracer) -> tuple:
+    """Per-stage rows + the exact-sum verdict for one traced workload.
+    The stage means come from the float table (what a user reads); the
+    gate itself runs in Fraction arithmetic so float telescoping dust
+    can never mask — or fake — a decomposition error."""
+    exact = tr.breakdown(exact=True)
+    stage_sum = sum((sum(exact[s], Fraction(0)) for s in STAGES),
+                    Fraction(0))
+    total_sum = sum(exact["total"], Fraction(0))
+    ok = stage_sum == total_sum
+    bd = tr.breakdown()
+    n = len(bd["total"])
+    total_us = sum(bd["total"]) * 1e6
+    rows = []
+    for stage in STAGES:
+        s_us = sum(bd[stage]) * 1e6
+        share = s_us / total_us if total_us else 0.0
+        rows.append(Row(
+            f"breakdown_{tag}_{stage}", s_us / n if n else 0.0,
+            f"sum_us={s_us:.3f};share={share:.4f}"))
+    rows.append(Row(
+        f"breakdown_{tag}_total", total_us / n if n else 0.0,
+        f"sum_us={total_us:.3f};commands={n};exact_sum={1 if ok else 0}"))
+    print(tr.format_breakdown(f"latency breakdown: {tag} "
+                              f"({n} commands)"), file=sys.stderr)
+    return rows, ok
+
+
+def run():
+    # the deep dispatch DAG overflows the session replay window by
+    # design; silence the (expected) warning for this sweep only
+    rt_log = logging.getLogger("repro.core.runtime")
+    prev_level = rt_log.level
+    rt_log.setLevel(logging.ERROR)
+    try:
+        rows = []
+        for tag, workload in (("dispatch", _dispatch_workload),
+                              ("migration", _migration_workload)):
+            wrows, _ok = _rows_for(tag, workload())
+            rows.extend(wrows)
+    finally:
+        rt_log.setLevel(prev_level)
+    return emit(rows)
+
+
+def check(rows) -> bool:
+    """Every workload's exact-sum gate must hold and report commands."""
+    ok = True
+    for row in rows:
+        if not row.name.endswith("_total"):
+            continue
+        exact = common.derived(row, "exact_sum")
+        n = common.derived(row, "commands")
+        good = exact == 1 and n > 0
+        print(f"# {row.name}: commands={n:.0f} exact_sum={exact:.0f} "
+              f"{'ok' if good else 'FAILED'}", file=sys.stderr)
+        ok = ok and good
+    return ok
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless the exact-sum gates hold")
+    ap.add_argument("--json-out", default=None,
+                    help="write the result rows to this JSON path")
+    args = ap.parse_args()
+    rows = run()
+    if args.json_out:
+        common.dump_rows(rows, args.json_out)
+    if args.check and not check(rows):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,13 @@ stamp with schema version, owning benchmark, metric, direction,
 tolerance, regeneration command; positive finite row values) and exits
 non-zero on any drift — scripts/ci.sh runs it before the gated smokes so
 a mangled baseline fails fast instead of silently gating nothing.
+
+``--trace=FILE`` installs a process-wide default tracer (DESIGN.md §9)
+before any benchmark runs: every cluster built without an explicit
+``trace=`` argument attaches to it, and on exit the combined trace is
+written to FILE as Perfetto ``trace_event`` JSON (schema-validated,
+loadable at https://ui.perfetto.dev). Pair with ``--only`` — a full
+sweep's trace is huge.
 """
 from __future__ import annotations
 
@@ -33,6 +40,7 @@ MODULES = [
     ("cfdhalo", "benchmarks.cfd_halo"),
     ("chaos", "benchmarks.chaos"),
     ("fleet", "benchmarks.fleet_sweep"),
+    ("breakdown", "benchmarks.latency_breakdown"),
     ("fig11", "benchmarks.rdma_vs_tcp"),
     ("fig12", "benchmarks.matmul_scaling"),
     ("fig13", "benchmarks.rdma_matmul"),
@@ -77,34 +85,69 @@ def main() -> None:
                     help="cProfile each selected benchmark and print the "
                          "top 25 functions by cumulative time to stderr "
                          "(pair with --only to profile one)")
+    ap.add_argument("--profile-out", default=None, metavar="PATH",
+                    help="also append each profile's top-25 table to this "
+                         "file (implies --profile)")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="trace every benchmark cluster and write combined "
+                         "Perfetto trace_event JSON to FILE on exit")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "results.json"))
     args = ap.parse_args()
     if args.check_baselines:
         sys.exit(1 if check_baselines() else 0)
+    if args.profile_out:
+        args.profile = True
+
+    tracer = None
+    if args.trace:
+        from repro.core import trace as trace_mod
+        tracer = trace_mod.Tracer()
+        trace_mod.set_default(tracer)
 
     import importlib
     all_rows = []
-    print("name,us_per_call,derived")
-    for tag, modname in MODULES:
-        if args.only and args.only != tag:
-            continue
-        t0 = time.time()
-        mod = importlib.import_module(modname)
-        if args.profile:
-            import cProfile
-            import pstats
-            prof = cProfile.Profile()
-            rows = prof.runcall(mod.run)
-            stats = pstats.Stats(prof, stream=sys.stderr)
-            print(f"# profile: {tag} ({modname}) top 25 by cumulative",
+    prof_f = open(args.profile_out, "w") if args.profile_out else None
+    try:
+        print("name,us_per_call,derived")
+        for tag, modname in MODULES:
+            if args.only and args.only != tag:
+                continue
+            t0 = time.time()
+            mod = importlib.import_module(modname)
+            if args.profile:
+                import cProfile
+                import pstats
+                prof = cProfile.Profile()
+                rows = prof.runcall(mod.run)
+                header = (f"# profile: {tag} ({modname}) "
+                          "top 25 by cumulative")
+                for stream in (sys.stderr, prof_f):
+                    if stream is None:
+                        continue
+                    print(header, file=stream)
+                    pstats.Stats(prof, stream=stream) \
+                        .sort_stats("cumulative").print_stats(25)
+            else:
+                rows = mod.run()
+            all_rows.extend({"name": r.name, "us_per_call": r.us_per_call,
+                             "derived": r.derived} for r in rows)
+            print(f"# {tag} done in {time.time()-t0:.1f}s",
                   file=sys.stderr)
-            stats.sort_stats("cumulative").print_stats(25)
-        else:
-            rows = mod.run()
-        all_rows.extend({"name": r.name, "us_per_call": r.us_per_call,
-                         "derived": r.derived} for r in rows)
-        print(f"# {tag} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    finally:
+        if prof_f is not None:
+            prof_f.close()
+        if tracer is not None:
+            from benchmarks import common
+            from repro.core import trace as trace_mod
+            trace_mod.set_default(None)
+            tracer.write_perfetto(args.trace)
+            errs = common.validate_perfetto(args.trace)
+            for e in errs:
+                print(f"# trace: {e}", file=sys.stderr)
+            print(f"# trace: {len(tracer.cmds)} commands -> {args.trace}"
+                  f" ({'INVALID' if errs else 'schema ok'})",
+                  file=sys.stderr)
     with open(args.out, "w") as f:
         json.dump(all_rows, f, indent=1)
 

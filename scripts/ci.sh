@@ -18,6 +18,15 @@
 # Regenerate baselines with the "regenerate" command stamped inside
 # each BENCH_*.json.
 #
+# Observability (DESIGN.md §9) rides the existing gates: the chaos and
+# fleet smokes run TRACED, so their sim-time baselines double as proof
+# that tracing never perturbs simulated time; both Perfetto exports are
+# schema-validated (the chaos one must carry fault markers) and land in
+# benchmarks/ci-results for the workflow artifact upload; the
+# latency-breakdown step gates the exact per-stage decomposition; and
+# the non-smoke dispatch gate includes the <=2% tracing-off overhead
+# floor.
+#
 # The dispatch gate measures WALL-CLOCK commands/sec and is therefore
 # host-specific; on shared/virtualized runners it flakes through no
 # fault of the code. CI_SKIP_WALLCLOCK=1 (or --simtime-only) keeps the
@@ -72,21 +81,28 @@ python -m benchmarks.cfd_halo \
     --baseline benchmarks/BENCH_cfd.json \
     --json-out "$ARTIFACTS/cfd_halo.json"
 
-echo "== chaos membership smoke (20% gates + exactly-once ledger) =="
+echo "== chaos membership smoke (20% gates + exactly-once ledger; traced) =="
 python -m benchmarks.chaos \
     --baseline benchmarks/BENCH_chaos.json \
+    --trace "$ARTIFACTS/chaos_trace.json" \
     --json-out "$ARTIFACTS/chaos.json"
 
 if [[ "$SIMTIME_ONLY" == "1" ]]; then
-    echo "== 1000-UE fleet sweep (sim-time gate; wall ceiling SKIPPED) =="
+    echo "== 1000-UE fleet sweep (sim-time gate; wall ceiling SKIPPED; traced) =="
     python -m benchmarks.fleet_sweep \
         --baseline benchmarks/BENCH_fleet.json \
+        --trace "$ARTIFACTS/fleet_trace.json" \
         --json-out "$ARTIFACTS/fleet.json"
 else
-    echo "== 1000-UE fleet sweep (sim-time gate + 30s wall ceiling) =="
+    echo "== 1000-UE fleet sweep (sim-time gate + 30s wall ceiling; traced) =="
     python -m benchmarks.fleet_sweep \
         --baseline benchmarks/BENCH_fleet.json --max-wall-s 30 \
+        --trace "$ARTIFACTS/fleet_trace.json" \
         --json-out "$ARTIFACTS/fleet.json"
 fi
+
+echo "== latency breakdown (exact per-stage decomposition gate) =="
+python -m benchmarks.latency_breakdown --check \
+    --json-out "$ARTIFACTS/latency_breakdown.json"
 
 echo "ci.sh: all checks passed"

@@ -19,5 +19,7 @@ from repro.core.scheduler import (DeviceScheduler, DRRPolicy,  # noqa: F401
                                   FIFOPolicy, make_policy)
 from repro.core.store import (BufferStore, StoreEntry,  # noqa: F401
                               content_digest)
+from repro.core.trace import (Histogram, MetricsRegistry,  # noqa: F401
+                              Tracer)
 from repro.core.transport import (RDMATransport, TCPTransport,  # noqa: F401
                                   make_transport)

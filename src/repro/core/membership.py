@@ -111,12 +111,18 @@ class MembershipManager:
         self.states[name] = JOINING
         host.state = JOINING
         self.joins += 1
+        tr = self.cluster.trace
+        if tr is not None:
+            tr.fault(clock.now, "join", self.cluster.trace_prefix + name)
 
         def activate():
             if self.states.get(name) != JOINING:
                 return              # crashed/drained while joining
             self.states[name] = ACTIVE
             host.state = ACTIVE
+            if tr is not None:
+                tr.fault(clock.now, "join_active",
+                         self.cluster.trace_prefix + name)
             if on_active is not None:
                 on_active()
 
@@ -152,6 +158,9 @@ class MembershipManager:
         host.state = DRAINING
         self.drains += 1
         t0 = clock.now
+        tr = cluster.trace
+        if tr is not None:
+            tr.fault(t0, "drain", cluster.trace_prefix + name)
         obligations = {"n": 1}        # sentinel until the sweep finishes
 
         def done_one(_e=None):
@@ -269,6 +278,10 @@ class MembershipManager:
             self.replicas_dropped += \
                 cluster.store.server_retired(name)
         self.drain_ms.append((now - t0) * 1e3)
+        tr = cluster.trace
+        if tr is not None:
+            tr.fault(now, "drain_complete", cluster.trace_prefix + name,
+                     detail=f"drain_ms={(now - t0) * 1e3:.3f}")
         if on_complete is not None:
             on_complete()
 
@@ -292,6 +305,9 @@ class MembershipManager:
         self.states[name] = DEAD
         host.state = DEAD
         self.crashes += 1
+        tr = cluster.trace
+        if tr is not None:
+            tr.fault(clock.now, "crash", cluster.trace_prefix + name)
         # links first: closing kills mid-flight chunked transfers, whose
         # on_dropped callbacks fire at `now` (after this function) and
         # find their events already failed below — the guards make that

@@ -346,7 +346,7 @@ class NIC:
     """
 
     __slots__ = ("bandwidth", "name", "_busy_until", "bytes_sent",
-                 "busy_time")
+                 "busy_time", "trace", "trace_label")
 
     def __init__(self, bandwidth: float, name: str = ""):
         self.bandwidth = bandwidth
@@ -357,6 +357,12 @@ class NIC:
         # actually charges the host — the dedup benchmarks gate on its
         # reduction, not just wall clock (DESIGN.md §5)
         self.busy_time = 0.0
+        # observability (DESIGN.md §9): when the owning cluster traces,
+        # ``ServerHost`` points this at the Tracer so every busy_time
+        # increment below is mirrored as an occupancy span. None keeps
+        # the hot path a single slot load + branch.
+        self.trace = None
+        self.trace_label = name
 
     def queue_seconds(self, now: float) -> float:
         """Occupancy probe (DESIGN.md §6): how long a message handed to
@@ -487,6 +493,12 @@ class Link:
             egress._busy_until = nic_end
             egress.bytes_sent += nbytes
             egress.busy_time += nic_end - nic_start
+            tr = egress.trace
+            if tr is not None:
+                # the identical float added to busy_time, in the same
+                # order, so span sums reproduce the counter bit-exactly
+                tr.nic_span(egress.trace_label, nic_start,
+                            nic_end - nic_start)
             busy = self._busy_until
             if busy > start:
                 start = busy
@@ -513,6 +525,10 @@ class Link:
             ingress._busy_until = in_end
             ingress.bytes_sent += nbytes
             ingress.busy_time += in_end - in_start
+            tr = ingress.trace
+            if tr is not None:
+                tr.nic_span(ingress.trace_label, in_start,
+                            in_end - in_start)
             if in_end > arrive:
                 arrive = in_end
         self._schedule_at(arrive, on_delivered, *args)
@@ -522,7 +538,8 @@ class Link:
                      serialize_overhead: float = 0.0,
                      egress: Optional[NIC] = None,
                      ingress: Optional[NIC] = None,
-                     on_dropped: Optional[Callable] = None):
+                     on_dropped: Optional[Callable] = None,
+                     chunk_arrivals: Optional[list] = None):
         """Pipelined (cut-through) multi-chunk transfer.
 
         ``chunks`` is a sequence of ``(sender_cpu, wire_bytes,
@@ -547,6 +564,13 @@ class Link:
         If the link goes down before the final chunk's wire leg ends,
         the remaining chunks are lost: ``on_delivered`` never fires and
         ``on_dropped`` (if given) fires at the fault time instead.
+
+        ``chunk_arrivals``, when given a list, receives each chunk's
+        landfall time (wire arrival, post-ingress-NIC, before the
+        receiver-side copy) in chunk order — the tracer's per-chunk
+        landfall spans and the planned cut-through-into-compute overlap
+        (ROADMAP) both read this; it is pure observation, the computed
+        schedule is untouched.
         """
         if not self._up:
             return None  # dropped — sender times out via its own logic
@@ -562,6 +586,7 @@ class Link:
         total = 0.0
         nic_occupied = 0.0
         in_occupied = 0.0
+        nic_t0 = in_t0 = -1.0        # first port occupancy (trace spans)
         for snd_cpu, wire_bytes, rcv_cpu in chunks:
             snd_free += snd_cpu                  # chunk copied/staged
             if egress is None:
@@ -575,6 +600,8 @@ class Link:
                 nic_free = nic_start + (wire_bytes / nic_bw if nic_bw > 0
                                         else 0.0)
                 nic_occupied += nic_free - nic_start
+                if nic_t0 < 0.0:
+                    nic_t0 = nic_start
                 start = nic_start if nic_start > wire_free else wire_free
                 wire_free = start + (wire_bytes / bw if bw > 0 else 0.0)
                 if nic_free > wire_free:
@@ -592,8 +619,12 @@ class Link:
                 in_free = in_start + (wire_bytes / in_bw if in_bw > 0
                                       else 0.0)
                 in_occupied += in_free - in_start
+                if in_t0 < 0.0:
+                    in_t0 = in_start
                 if in_free > arrive:
                     arrive = in_free
+            if chunk_arrivals is not None:
+                chunk_arrivals.append(arrive)
             if arrive > rcv_free:
                 rcv_free = arrive
             rcv_free += rcv_cpu                  # receiver-side copy
@@ -602,10 +633,18 @@ class Link:
             egress._busy_until = nic_free
             egress.bytes_sent += total
             egress.busy_time += nic_occupied
+            tr = egress.trace
+            if tr is not None and nic_t0 >= 0.0:
+                # one span per transfer, carrying the identical float
+                # added to busy_time (aggregate order matches counter)
+                tr.nic_span(egress.trace_label, nic_t0, nic_occupied)
         if ingress is not None:
             ingress._busy_until = in_free
             ingress.bytes_sent += total
             ingress.busy_time += in_occupied
+            tr = ingress.trace
+            if tr is not None and in_t0 >= 0.0:
+                tr.nic_span(ingress.trace_label, in_t0, in_occupied)
         self.bytes_sent += total
         # register the transfer so a mid-flight down drops the remainder
         # (the pre-flap time-accounting above stands: the wire WAS held
@@ -663,6 +702,16 @@ class DeviceSim:
         return self.busy_time / horizon if horizon > 0 else 0.0
 
 
+def _flap_link(link: Link, up: bool, tracer, t: float) -> None:
+    """Scheduled flap callback. Always used — traced or not — so the
+    schedule_at count (and therefore every event seq number) is
+    identical with tracing on and off; the marker is pure observation
+    at the statically known fault time."""
+    link.up = up
+    if tracer is not None:
+        tracer.fault(t, "flap_up" if up else "flap_down", link.name)
+
+
 class FaultSchedule:
     """Deterministic scripted fault injection (DESIGN.md §7).
 
@@ -717,6 +766,8 @@ class FaultSchedule:
                     cluster.join_server(s, on_active=c))
             elif kind == "flap":
                 duration, link = args
-                clock.schedule_at(at, setattr, link, "up", False)
-                clock.schedule_at(at + duration, setattr, link, "up", True)
+                tr = getattr(cluster, "trace", None)
+                clock.schedule_at(at, _flap_link, link, False, tr, at)
+                clock.schedule_at(at + duration, _flap_link, link, True,
+                                  tr, at + duration)
         return self

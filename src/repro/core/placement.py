@@ -367,6 +367,14 @@ class PlacementEngine:
         chosen = policy.place(self, rt, requested, candidates, device,
                               inputs, flops, bytes_moved, duration)
         self.decisions += 1
+        tr = self.cluster.trace
+        if tr is not None:
+            # decision instant (DESIGN.md §9): pure observation of a
+            # choice already made — the pinned fast path above is left
+            # untouched (nothing to attribute: requested == chosen)
+            tr.placement(self.cluster.clock.now, rt._tlabel,
+                         self.cluster.trace_prefix + requested,
+                         self.cluster.trace_prefix + chosen, policy.name)
         if chosen == requested:
             self.placed_local += 1
         else:

@@ -97,6 +97,7 @@ from repro.core.placement import (PinnedPolicy, PlacementEngine,
                                   make_placement_policy)
 from repro.core.scheduler import DeviceScheduler, make_policy
 from repro.core.store import BufferStore, DIGEST_BYTES, content_digest
+from repro.core import trace as trace_mod
 from repro.core.transport import (make_transport, wire_scale, scale_chunks,
     CLIENT_SUBMIT, CLIENT_REAP, CMD_BYTES, DISPATCH, COMPLETE_WRITE)
 
@@ -170,6 +171,16 @@ class ServerHost:
         self.nic_in = (NIC(cluster.nic_ingress_bandwidth,
                            f"{self.name}.nic_in")
                        if cluster.nic_ingress_bandwidth else None)
+        # observability (DESIGN.md §9): point the shared ports at the
+        # cluster tracer (covers seed hosts and mid-run joins alike);
+        # an untraced cluster leaves NIC.trace None — the hooks inside
+        # Link.send/send_chunked stay a slot load + branch
+        tr = cluster.trace
+        if tr is not None:
+            for nic in (self.nic, self.nic_in):
+                if nic is not None:
+                    nic.trace = tr
+                    nic.trace_label = cluster.trace_prefix + nic.name
         self.sessions: dict = {}     # session id (bytes) -> ServerSim
         # membership lifecycle (DESIGN.md §7); the MembershipManager is
         # authoritative, this mirror makes hot-path checks a plain load
@@ -204,8 +215,29 @@ class Cluster:
                  nic_ingress_bandwidth: Optional[float] = None,
                  store: bool = False,
                  store_capacity: Optional[float] = None,
-                 placement: str = "pinned"):
+                 placement: str = "pinned",
+                 trace=None):
         self.clock = SimClock()
+        # observability plane (DESIGN.md §9): ``trace`` accepts a Tracer
+        # instance, True (build a private one), False (force off even if
+        # a module default is set), or None (fall back to the module
+        # default, which ``benchmarks/run.py --trace`` sets so every
+        # cluster a benchmark builds is traced without plumbing).
+        # ``self.trace`` is None whenever tracing is off — every hook in
+        # the runtime gates on that with a single load + branch, the
+        # same zero-overhead pattern as PlacementEngine.telemetry_active.
+        if trace is None:
+            trace = trace_mod.get_default()
+        elif trace is True:
+            trace = trace_mod.Tracer()
+        elif trace is False:
+            trace = None
+        self.trace = trace
+        self.trace_prefix = ""
+        if trace is not None:
+            idx = trace.register_cluster(self)
+            if idx:          # 2nd+ cluster on one tracer: namespace it
+                self.trace_prefix = f"c{idx}:"
         self.peer_transport = make_transport(peer_transport, svm)
         self.scheduler_policy = scheduler
         self.scheduler_quantum = scheduler_quantum
@@ -294,7 +326,9 @@ class Cluster:
                             for d, dev in host.devices.items()},
             "scheduler": {f"{h}/{d}": {"policy": sch.policy.name,
                                        "dispatched": sch.dispatched,
-                                       "queue_peak": sch.queue_peak}
+                                       "queue_peak": sch.queue_peak,
+                                       "queued_seconds":
+                                           sch.queued_seconds()}
                           for h, host in self.hosts.items()
                           for d, sch in host.schedulers.items()},
             "nic_bytes": {h: (host.nic.bytes_sent if host.nic else 0)
@@ -330,6 +364,9 @@ class ServerSim:
         # (tenant name, server name) strings
         host.cluster._skey_seq += 1
         self.skey = host.cluster._skey_seq
+        # observability (DESIGN.md §9): prefixed server label, built
+        # once so the ready-hook never concatenates on the hot path
+        self._tlabel = rt._tp + host.name
         self.session_id: Optional[bytes] = None
         self.processed: set = set()           # command ids (replay dedup)
         self.resolved_remote: set = set()     # remote event ids seen complete
@@ -505,6 +542,11 @@ class ServerSim:
                                    getattr(cmd, "bytes_moved", 0.0),
                                    getattr(cmd, "duration", None))
         dname = host.device_names[dev_idx]
+        tr = self.rt._trace
+        if tr is not None:
+            # deps resolved, entering the device run queue: the one
+            # lifecycle stamp the Event itself does not carry
+            tr.cmd_ready(ev, self.rt.clock.now, self._tlabel, dname, cost)
 
         def run(release):
             if ev.status == ERROR:
@@ -624,7 +666,8 @@ class ClientRuntime:
                  nic_ingress_bandwidth: Optional[float] = None,
                  store: Optional[bool] = None,
                  store_capacity: Optional[float] = None,
-                 placement: Optional[str] = None):
+                 placement: Optional[str] = None,
+                 trace=None):
         if completion_routing not in ("subscription", "broadcast"):
             raise ValueError(f"unknown completion_routing "
                              f"{completion_routing!r}")
@@ -644,7 +687,8 @@ class ClientRuntime:
                               nic_ingress_bandwidth=nic_ingress_bandwidth,
                               store=bool(store),
                               store_capacity=store_capacity,
-                              placement=placement or "pinned")
+                              placement=placement or "pinned",
+                              trace=trace)
             self._placement_policy = None   # cluster default covers it
         else:
             if servers is not None:
@@ -656,7 +700,8 @@ class ClientRuntime:
                        "nic_bandwidth": nic_bandwidth,
                        "nic_ingress_bandwidth": nic_ingress_bandwidth,
                        "store": store,
-                       "store_capacity": store_capacity}
+                       "store_capacity": store_capacity,
+                       "trace": trace}
             bad = [k for k, v in ignored.items() if v is not None]
             if bad:
                 # these configure the shared substrate — accepting them
@@ -683,6 +728,12 @@ class ClientRuntime:
         # would alias a departed tenant in stats and error messages
         self.name = name if name is not None else f"ue{cluster._tenant_seq}"
         cluster._tenant_seq += 1
+        # observability (DESIGN.md §9): the hot-path gate is one slot
+        # load + None check; labels are precomputed (cluster-namespace
+        # prefix + tenant name) so hooks never build strings
+        self._trace = cluster.trace
+        self._tp = cluster.trace_prefix
+        self._tlabel = self._tp + self.name
         self.weight = weight                  # fair-scheduler share
         self.transport = make_transport(transport, svm)
         self.peer_transport = cluster.peer_transport
@@ -939,6 +990,9 @@ class ClientRuntime:
         if ev.id in self._requeued:
             return                    # already re-placed: this copy is
         self._requeued.add(ev.id)     # the §4.3 duplicate — drop it
+        tr = self._trace
+        if tr is not None:
+            tr.requeue(ev, self.clock.now, self._tp + old_server, "drain")
         cmd = ev.command
         if isinstance(cmd, C.MigrateBuffer):
             self._requeue_migration(ev, cmd)
@@ -1006,6 +1060,9 @@ class ClientRuntime:
         ev.retain()                 # client hold until completion observed
         ev.on_retire = self._retire
         self.events[ev.id] = ev
+        tr = self._trace
+        if tr is not None:
+            tr.cmd_queued(ev, self._tlabel)
         return ev
 
     def _new_event(self, cmd, server: str) -> Event:
@@ -1015,6 +1072,9 @@ class ClientRuntime:
         ev._refs += 1               # client hold until completion observed
         ev.on_retire = self._retire
         self.events[ev.id] = ev
+        tr = self._trace
+        if tr is not None:
+            tr.cmd_queued(ev, self._tlabel)
         return ev
 
     def _retire(self, ev: Event):
@@ -1200,11 +1260,17 @@ class ClientRuntime:
         store.record_dedup(entry, nbytes)
         self.dedup_hits += 1
         self.dedup_bytes_saved += nbytes
+        tr = self._trace
+        if tr is not None:
+            tr.dedup(self.clock.now, self._tlabel, nbytes)
 
     def _unrecord_dedup(self, store: BufferStore, nbytes: float):
         store.unrecord_dedup(nbytes)
         self.dedup_hits -= 1
         self.dedup_bytes_saved -= nbytes
+        tr = self._trace
+        if tr is not None:
+            tr.dedup(self.clock.now, self._tlabel, -nbytes)
 
     def _send_write_via_store(self, ev: Event, server: str, buf: Buffer,
                               cmd, dep_ids: list,
@@ -1618,15 +1684,26 @@ class ClientRuntime:
             if on_dropped is not None:
                 on_dropped()
 
-        if link.send_chunked(chunks, delivered,
-                             serialize_overhead=extra_overhead + fixed,
-                             egress=egress, ingress=ingress,
-                             on_dropped=dropped) is None:
+        trc = self._trace
+        arrivals = [] if trc is not None else None
+        t0 = self.clock.now
+        rcv = link.send_chunked(chunks, delivered,
+                                serialize_overhead=extra_overhead + fixed,
+                                egress=egress, ingress=ingress,
+                                on_dropped=dropped,
+                                chunk_arrivals=arrivals)
+        if rcv is None:
             return False
         self.chunks_in_flight += n_chunks
         if self.chunks_in_flight > self.peak_chunks_in_flight:
             self.peak_chunks_in_flight = self.chunks_in_flight
-        self.bytes_on_wire += sum(c[1] for c in chunks)
+        # computed once, shared by the scoreboard and the trace span, so
+        # a span-derived sum reproduces the counter bit-exactly
+        wire_total = sum(c[1] for c in chunks)
+        self.bytes_on_wire += wire_total
+        if trc is not None:
+            trc.transfer("migration", self._tp + link.name, self._tlabel,
+                         t0, rcv, wire_total, chunk_arrivals=arrivals)
         return True
 
     def _deliver_naive_write(self, ev, dst, nbytes, version):
@@ -1711,13 +1788,21 @@ class ClientRuntime:
                     DISPATCH,
                     self.servers[server].receive_command, ev, device, deps)
 
-            if link.send_chunked(chunks, deliver_chunked,
-                                 serialize_overhead=CLIENT_SUBMIT + fixed,
-                                 ingress=self._nic_in(server)) \
-                    is not None:
+            trc = self._trace
+            arrivals = [] if trc is not None else None
+            t0 = self.clock.now
+            rcv = link.send_chunked(chunks, deliver_chunked,
+                                    serialize_overhead=CLIENT_SUBMIT + fixed,
+                                    ingress=self._nic_in(server),
+                                    chunk_arrivals=arrivals)
+            if rcv is not None:
                 # count only bytes that actually went out (a down link
                 # drops the send) — mirrors bytes_on_wire's accounting
                 self.upload_bytes_on_wire += payload * scale
+                if trc is not None:
+                    trc.transfer("upload", self._tp + link.name,
+                                 self._tlabel, t0, rcv, payload * scale,
+                                 ev_id=ev.id, chunk_arrivals=arrivals)
             return
         # zero-payload: the cost triple is the transport's cached
         # constant (`_cmd_cost0`) and the derived overhead/delay floats
@@ -1812,11 +1897,21 @@ class ClientRuntime:
             self._route_completion_via_client(ev)
             ev.release()            # client observed completion directly
 
-        if link.send(cost.wire_bytes * wire_scale(self.transport,
-                                                  link.bandwidth),
-                     arrived,
-                     serialize_overhead=COMPLETE_WRITE + cost.sender_cpu,
-                     egress=srv.host.nic) is None:
+        trc = self._trace
+        t0 = self.clock.now
+        ret = link.send(cost.wire_bytes * wire_scale(self.transport,
+                                                     link.bandwidth),
+                        arrived,
+                        serialize_overhead=COMPLETE_WRITE + cost.sender_cpu,
+                        egress=srv.host.nic)
+        if ret is not None:
+            if trc is not None:
+                trc.transfer("read_return", self._tp + link.name,
+                             self._tlabel, t0, ret,
+                             cost.wire_bytes * wire_scale(self.transport,
+                                                          link.bandwidth),
+                             ev_id=ev.id)
+        else:
             # link died after the command was delivered: the daemon has
             # already marked it processed, so a replay will be deduped
             # and the data can never be re-sent — surface the error

@@ -1,0 +1,301 @@
+"""Tracing & metrics plane (DESIGN.md §9): the tracer's spans must be
+*ground truth* — cross-checked bit-for-bit against the runtime's own
+scoreboards — and tracing must be invisible to the simulation: zero
+cost when off, zero simulated-time perturbation when on."""
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import validate_perfetto  # noqa: E402
+from repro.core import (ClientRuntime, Cluster, DeviceSpec,  # noqa: E402
+                        LinkSpec, ServerSpec, Tracer)
+from repro.core import trace as trace_mod  # noqa: E402
+from repro.core.netsim import FaultSchedule  # noqa: E402
+from repro.core.trace import STAGES, Histogram  # noqa: E402
+
+MiB = 1 << 20
+CLIENT = LinkSpec(latency=61e-6, bandwidth=1e9 / 8)
+PEER = LinkSpec(latency=20e-6, bandwidth=40e9 / 8)
+
+
+def mk_cluster(n=2, trace=None, store=None, nic=None, nic_in=None,
+               scheduler="fifo"):
+    return Cluster([ServerSpec(f"s{i}", [DeviceSpec("gpu0")])
+                    for i in range(n)],
+                   peer_link=PEER, peer_transport="tcp",
+                   scheduler=scheduler, store=store,
+                   nic_bandwidth=nic, nic_ingress_bandwidth=nic_in,
+                   trace=trace)
+
+
+def attach(cluster, **kw):
+    kw.setdefault("client_link", CLIENT)
+    return ClientRuntime(cluster=cluster, **kw)
+
+
+def multi_tenant_workload(cluster):
+    """Two tenants, uploads + kernels + read-backs + a cross-server
+    migration — touches every span kind except faults."""
+    a, b = attach(cluster, name="a"), attach(cluster, name="b")
+    cluster.run()
+    results = []
+    for rt, fill in ((a, 1), (b, 2)):
+        buf = rt.create_buffer(MiB)
+        rt.enqueue_write("s0", buf, np.full(MiB // 4, fill, np.uint32))
+        out = rt.create_buffer(4096)
+        rt.enqueue_kernel("s0", fn=None, inputs=[buf], outputs=[out],
+                          duration=2 ** -12, name=f"{rt.name}_k0")
+        # forces a migration of buf onto s1's replica set
+        rt.enqueue_kernel("s1", fn=None, inputs=[buf], outputs=[out],
+                          duration=2 ** -12, name=f"{rt.name}_k1")
+        rt.enqueue_read("s1", out)
+        results.append(rt)
+    cluster.run()
+    return results
+
+
+# ---- invariant: tracing never perturbs simulated time ----
+
+def test_traced_run_is_sim_time_identical_to_untraced():
+    plain = mk_cluster(nic=10e9 / 8, store=True)
+    multi_tenant_workload(plain)
+    traced = mk_cluster(nic=10e9 / 8, store=True, trace=Tracer())
+    multi_tenant_workload(traced)
+    assert traced.clock.now == plain.clock.now
+    ps, ts = plain.stats(), traced.stats()
+    assert ts["device_busy"] == ps["device_busy"]
+    assert ts["nic_busy"] == ps["nic_busy"]
+    assert ts["scheduler"] == ps["scheduler"]
+    assert ts["peer_link_bytes"] == ps["peer_link_bytes"]
+
+
+def test_flap_fault_is_sim_time_identical_traced_or_not():
+    def run(trace):
+        cluster = mk_cluster(trace=trace)
+        rt = attach(cluster, name="ue")
+        cluster.run()
+        link = cluster.peer_link("s0", "s1")
+        FaultSchedule().flap(cluster.clock.now + 1e-4, 5e-4,
+                             link).apply(cluster)
+        buf = rt.create_buffer(MiB)
+        rt.enqueue_write("s0", buf, np.full(MiB // 4, 7, np.uint32))
+        out = rt.create_buffer(64)
+        rt.enqueue_kernel("s1", fn=None, inputs=[buf], outputs=[out],
+                          duration=2 ** -12)
+        cluster.run()
+        return cluster
+
+    traced = run(Tracer())
+    plain = run(None)
+    assert traced.clock.now == plain.clock.now
+    assert traced.trace.faults and plain.trace is None
+    kinds = {k for _t, k, _tgt, _d in traced.trace.faults}
+    assert kinds == {"flap_down", "flap_up"}
+
+
+# ---- invariant: tracing off is off ----
+
+def test_untraced_cluster_carries_none_and_false_forces_off():
+    assert mk_cluster().trace is None
+    trace_mod.set_default(Tracer())
+    try:
+        assert mk_cluster().trace is trace_mod.get_default()
+        assert mk_cluster(trace=False).trace is None
+    finally:
+        trace_mod.set_default(None)
+    assert mk_cluster().trace is None
+
+
+def test_attach_path_rejects_trace_kwarg():
+    cluster = mk_cluster()
+    with pytest.raises(ValueError, match="cluster-level"):
+        attach(cluster, name="x", trace=Tracer())
+
+
+# ---- cross-checks: spans vs the runtime's own scoreboards ----
+
+def test_wire_byte_counters_equal_transfer_span_sums():
+    tr = Tracer()
+    cluster = mk_cluster(nic=10e9 / 8, trace=tr)
+    tenants = multi_tenant_workload(cluster)
+    for rt in tenants:
+        by_kind = {}
+        for kind, _l, tenant, _t0, _t1, nbytes, _e, _c in tr.transfers:
+            if tenant == rt.name:
+                by_kind.setdefault(kind, []).append(nbytes)
+        st = rt.stats()
+        # identical floats, summed in the order the counters added them
+        assert sum(by_kind.get("upload", [])) == \
+            st["upload_bytes_on_wire"]
+        assert sum(by_kind.get("migration", [])) == st["bytes_on_wire"]
+        assert by_kind.get("read_return"), "read-backs must be spanned"
+
+
+def test_nic_busy_counters_equal_nic_span_sums():
+    tr = Tracer()
+    cluster = mk_cluster(nic=10e9 / 8, nic_in=10e9 / 8, trace=tr)
+    multi_tenant_workload(cluster)
+    by_label = {}
+    for label, _t0, busy in tr.nic_spans:
+        by_label.setdefault(label, []).append(busy)
+    st = cluster.stats()
+    for host in ("s0", "s1"):
+        assert sum(by_label.get(f"{host}.nic", [])) == \
+            st["nic_busy"][host]
+        assert sum(by_label.get(f"{host}.nic_in", [])) == \
+            st["nic_in_busy"][host]
+    assert any(by_label.get(f"{h}.nic") for h in ("s0", "s1"))
+
+
+def test_dedup_bytes_saved_equals_dedup_span_sum():
+    tr = Tracer()
+    cluster = mk_cluster(store=True, trace=tr)
+    a, b = attach(cluster, name="a"), attach(cluster, name="b")
+    cluster.run()
+    same = np.full(MiB // 4, 9, np.uint32)
+    ba, bb = a.create_buffer(MiB), b.create_buffer(MiB)
+    a.enqueue_write("s0", ba, same)
+    cluster.run()
+    b.enqueue_write("s0", bb, same)          # dedup'd: command only
+    cluster.run()
+    assert b.dedup_bytes_saved == MiB
+    for rt in (a, b):
+        saved = sum(n for _t, tenant, n in tr.dedups
+                    if tenant == rt.name)
+        assert saved == rt.stats()["dedup_bytes_saved"]
+
+
+def test_device_busy_equals_traced_cost_sums():
+    tr = Tracer()
+    cluster = mk_cluster(trace=tr)
+    rt = attach(cluster, name="ue")
+    cluster.run()
+    # power-of-two durations: float-exact under any summation order
+    for i in range(6):
+        rt.enqueue_kernel(f"s{i % 2}", fn=None, duration=2.0 ** -(10 + i),
+                          name=f"k{i}")
+    cluster.run()
+    per_dev = {}
+    for rec in tr.finished():
+        if rec.server is not None and rec.cost:
+            key = f"{rec.server}/{rec.device}"
+            per_dev[key] = per_dev.get(key, 0.0) + rec.cost
+    assert per_dev == {k: v for k, v in
+                       cluster.stats()["device_busy"].items() if v}
+
+
+def test_queued_seconds_probe_matches_unstarted_traced_commands():
+    tr = Tracer()
+    cluster = mk_cluster(n=1, trace=tr)
+    rt = attach(cluster, name="ue")
+    cluster.run()
+    for i in range(4):                       # 1 runs, 3 queue behind it
+        rt.enqueue_kernel("s0", fn=None, duration=2 ** -7, name=f"k{i}")
+    probes = []
+
+    def probe():
+        want = cluster.hosts["s0"].schedulers["gpu0"].queued_seconds()
+        got = sum(r.cost for r in tr.cmds.values()
+                  if r.t_ready is not None and r.ev.t_start == 0.0)
+        probes.append((want, got))
+
+    cluster.clock.schedule(2 ** -8, probe)   # mid-first-kernel
+    cluster.run()
+    (want, got), = probes
+    assert want == got == 3 * 2 ** -7
+
+
+# ---- latency decomposition ----
+
+def test_breakdown_stage_sums_equal_total_exactly():
+    tr = Tracer()
+    cluster = mk_cluster(trace=tr)
+    multi_tenant_workload(cluster)
+    bd = tr.breakdown(exact=True)
+    n = len(bd["total"])
+    assert n == len(tr.finished()) > 0
+    for i in range(n):
+        assert sum(bd[s][i] for s in STAGES) == bd["total"][i]
+    table = tr.format_breakdown("t")
+    assert all(stage in table for stage in STAGES)
+
+
+def test_breakdown_forward_fill_gives_unreached_stages_zero():
+    tr = Tracer()
+    cluster = mk_cluster(trace=tr)
+    rt = attach(cluster, name="ue")
+    cluster.run()
+    buf = rt.create_buffer(4096)
+    rt.enqueue_write("s0", buf, np.zeros(1024, np.uint32))
+    cluster.run()
+    bd = tr.breakdown(exact=True)
+    # a bare write never enters a device run queue or executes
+    assert sum(bd["queue_wait"]) == 0 and sum(bd["execute"]) == 0
+    assert sum(bd["total"]) > 0
+
+
+# ---- metrics registry ----
+
+def test_metrics_unify_spans_and_cluster_stats():
+    tr = Tracer()
+    cluster = mk_cluster(nic=10e9 / 8, store=True, trace=tr)
+    multi_tenant_workload(cluster)
+    reg = tr.metrics()
+    summ = reg.summary()
+    assert summ["cmd_latency[a]"]["count"] > 0
+    assert summ["cmd_latency[b]"]["count"] > 0
+    assert summ["execute[s0/gpu0]"]["count"] > 0
+    assert any(k.startswith("wire_bytes[") for k in summ)
+    # stats() counters flattened into the same namespace
+    assert reg.counters["device_busy.s0/gpu0"] == \
+        cluster.stats()["device_busy"]["s0/gpu0"]
+    assert "placement.decisions" in reg.counters
+
+
+def test_histogram_windowed_percentiles():
+    h = Histogram()
+    for i in range(1, 101):
+        h.add(float(i), float(i))
+    assert h.percentile(50) == 50.0
+    assert h.percentile(99) == 99.0
+    assert h.percentile(50, t0=91.0) == 95.0      # window [91, 100]
+    assert h.summary(t0=1000.0)["count"] == 0
+
+
+# ---- exporters ----
+
+def test_perfetto_export_is_schema_valid_with_fault_markers(tmp_path):
+    tr = Tracer()
+    cluster = mk_cluster(n=2, trace=tr)
+    rt = attach(cluster, name="ue")
+    cluster.run()
+    FaultSchedule().drain(cluster.clock.now + 1e-3, "s1").apply(cluster)
+    for i in range(8):
+        rt.enqueue_kernel(f"s{i % 2}", fn=None, duration=5e-4,
+                          name=f"k{i}")
+    cluster.run()
+    path = tmp_path / "trace.json"
+    tr.write_perfetto(str(path))
+    data = json.loads(path.read_text())
+    assert validate_perfetto(data, require_fault_markers=True) == []
+    kinds = {k for _t, k, _tgt, _d in tr.faults}
+    assert "drain" in kinds and "drain_complete" in kinds
+
+
+def test_shared_tracer_namespaces_second_cluster():
+    tr = Tracer()
+    for _round in range(2):
+        cluster = mk_cluster(n=1, trace=tr)
+        rt = attach(cluster, name="ue")
+        cluster.run()
+        rt.enqueue_kernel("s0", fn=None, duration=2 ** -12)
+        cluster.run()
+    tenants = {rec.tenant for rec in tr.cmds.values()}
+    assert tenants == {"ue", "c1:ue"}
+    assert validate_perfetto(
+        {"traceEvents": tr.perfetto_events()}) == []
