@@ -88,13 +88,14 @@ def _ingest(rt, n_srv: int, part_bytes: int, halo_bytes: int):
     parts, lo, hi = [], [], []
     for i in range(n_srv):
         p = rt.create_buffer(part_bytes, name=f"part{i}")
-        l = rt.create_buffer(halo_bytes, name=f"halo_lo{i}")
+        blo = rt.create_buffer(halo_bytes, name=f"halo_lo{i}")
         h = rt.create_buffer(halo_bytes, name=f"halo_hi{i}")
         rt.enqueue_write(f"s{i}", p, np.zeros(part_bytes // 4, np.uint32))
-        rt.enqueue_write(f"s{i}", l, np.zeros(halo_bytes // 4, np.uint32))
+        rt.enqueue_write(f"s{i}", blo,
+                         np.zeros(halo_bytes // 4, np.uint32))
         rt.enqueue_write(f"s{i}", h, np.zeros(halo_bytes // 4, np.uint32))
         parts.append(p)
-        lo.append(l)
+        lo.append(blo)
         hi.append(h)
     return parts, lo, hi
 

@@ -14,6 +14,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import math
+import os
 import random
 import sys
 import time
@@ -100,7 +101,12 @@ def write_baseline(path: str, values: dict, *, benchmark: str,
                 "direction": direction,
                 "tolerance": tolerance,
                 "regenerate": regenerate,
-                "generated_at": time.strftime("%Y-%m-%d"),
+                # full UTC timestamp: the --check-baselines drift guard
+                # compares this stamp across git revisions, and a
+                # date-only stamp would false-positive on same-day
+                # regenerations
+                "generated_at": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                              time.gmtime()),
             },
             "rows": values,
         }, f, indent=1)
@@ -149,6 +155,8 @@ def check_rows(rows, baseline_path: str, *, extract, tolerance: float,
                   else "REGRESSION" if is_gated else "slow (ungated)")
         print(f"# {row.name}: {got:.3f}{unit} vs baseline {want:.3f} "
               f"({kind} {bound:.3f}) {status}", file=sys.stderr)
+        _emit_margin(benchmark or meta.get("benchmark"), row.name, got,
+                     want, bound, direction, unit, status)
         if bad and is_gated:
             ok = False
     if not matched:
@@ -157,6 +165,32 @@ def check_rows(rows, baseline_path: str, *, extract, tolerance: float,
               file=sys.stderr)
         ok = False
     return ok
+
+
+def _emit_margin(benchmark, row: str, got: float, want: float,
+                 bound: float, direction: str, unit: str,
+                 status: str) -> None:
+    """Append one gate comparison to ``$CI_GATE_MARGINS`` (JSONL) for
+    the scripts/ci_summary.py step summary — how much headroom each
+    gate had left, not just pass/fail. No-op unless scripts/ci.sh set
+    the env var. ``margin`` is the remaining fraction of the bound
+    (negative = breached)."""
+    path = os.environ.get("CI_GATE_MARGINS")
+    if not path or not bound:
+        return
+    if direction == "lower_is_better":
+        margin = (bound - got) / bound
+    else:
+        margin = (got - bound) / bound
+    try:
+        with open(path, "a") as f:
+            f.write(json.dumps({
+                "benchmark": benchmark or "?", "row": row,
+                "got": got, "baseline": want, "bound": bound,
+                "unit": unit.strip(), "direction": direction,
+                "margin": margin, "status": status}) + "\n")
+    except OSError:
+        pass
 
 
 def validate_baseline(path: str) -> list:

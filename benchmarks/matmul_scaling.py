@@ -8,8 +8,6 @@ fp32) on the simulated 56 Gb LAN.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import ETH_56G, GPU_P100, GPU_V100, Row, emit
 from repro.core import ClientRuntime, ServerSpec
 

@@ -5,8 +5,6 @@ rkey exchange makes many-server small-work cases a net negative.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import ETH_56G, GPU_P100, Row, emit
 from repro.core import ClientRuntime, ServerSpec
 

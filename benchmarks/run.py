@@ -10,7 +10,11 @@ regression baseline against the shared schema (``common.py``: ``_meta``
 stamp with schema version, owning benchmark, metric, direction,
 tolerance, regeneration command; positive finite row values) and exits
 non-zero on any drift — scripts/ci.sh runs it before the gated smokes so
-a mangled baseline fails fast instead of silently gating nothing.
+a mangled baseline fails fast instead of silently gating nothing. With
+``--drift-ref`` (or ``$CI_BASE_REF``) it additionally compares each
+baseline against that git revision: row values that changed without a
+fresh ``_meta.generated_at``/``regenerate`` stamp mean someone nudged a
+gate by hand instead of regenerating through ``--write-baseline``.
 
 ``--trace=FILE`` installs a process-wide default tracer (DESIGN.md §9)
 before any benchmark runs: every cluster built without an explicit
@@ -37,6 +41,7 @@ MODULES = [
     ("fig10", "benchmarks.migration_latency"),
     ("migpipe", "benchmarks.migration_pipeline"),
     ("mt", "benchmarks.multi_tenant"),
+    ("slo", "benchmarks.slo_burst"),
     ("cfdhalo", "benchmarks.cfd_halo"),
     ("chaos", "benchmarks.chaos"),
     ("fleet", "benchmarks.fleet_sweep"),
@@ -49,9 +54,56 @@ MODULES = [
 ]
 
 
-def check_baselines() -> int:
-    """Validate every BENCH_*.json against the shared baseline schema;
-    returns the number of invalid files (0 = all good)."""
+def _baseline_rows(data: dict) -> dict:
+    if "_meta" in data:
+        return data.get("rows", {})
+    return {k: v for k, v in data.items() if k != "_meta"}
+
+
+def _drift_errors(path: str, ref: str) -> list:
+    """Baseline-drift guard: against ``ref``'s copy of the file, changed
+    row values must arrive with a fresh ``_meta.generated_at`` (or
+    ``regenerate``) stamp — i.e. through the owning module's
+    ``--write-baseline``, not a hand edit that quietly moves the CI
+    gate. Silently passes when git, the ref, or the old copy is
+    unavailable (fresh baselines are always fine)."""
+    import subprocess
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(path)))
+    rel = os.path.relpath(os.path.abspath(path), root)
+    try:
+        old = subprocess.run(
+            ["git", "show", f"{ref}:{rel}"], cwd=root, timeout=30,
+            capture_output=True, text=True)
+    except (OSError, subprocess.TimeoutExpired):
+        return []
+    if old.returncode != 0:
+        return []                   # new file, or ref not fetched
+    try:
+        with open(path) as f:
+            new_data = json.load(f)
+        old_data = json.loads(old.stdout)
+    except ValueError:
+        return []                   # schema validation reports this
+    if not isinstance(new_data, dict) or not isinstance(old_data, dict):
+        return []
+    if _baseline_rows(new_data) == _baseline_rows(old_data):
+        return []
+    new_meta = new_data.get("_meta") or {}
+    old_meta = old_data.get("_meta") or {}
+    if (new_meta.get("generated_at") == old_meta.get("generated_at")
+            and new_meta.get("regenerate") == old_meta.get("regenerate")):
+        return [f"row values differ from {ref} but the "
+                f"_meta.generated_at/regenerate stamp does not — "
+                f"hand-edited baseline? regenerate with: "
+                f"{new_meta.get('regenerate', '--write-baseline')}"]
+    return []
+
+
+def check_baselines(drift_ref=None) -> int:
+    """Validate every BENCH_*.json against the shared baseline schema
+    (plus, given a git ref, the stamp-drift guard); returns the number
+    of invalid files (0 = all good)."""
     import glob
 
     from benchmarks import common
@@ -64,6 +116,8 @@ def check_baselines() -> int:
     bad = 0
     for path in paths:
         errs = common.validate_baseline(path)
+        if drift_ref:
+            errs = errs + _drift_errors(path, drift_ref)
         rel = os.path.relpath(path)
         if errs:
             bad += 1
@@ -81,6 +135,12 @@ def main() -> None:
     ap.add_argument("--check-baselines", action="store_true",
                     help="validate benchmarks/BENCH_*.json against the "
                          "shared schema and exit")
+    ap.add_argument("--drift-ref", default=os.environ.get("CI_BASE_REF"),
+                    metavar="GITREF",
+                    help="with --check-baselines: also fail baselines "
+                         "whose row values changed vs this git ref "
+                         "without a fresh _meta.generated_at stamp "
+                         "(default: $CI_BASE_REF)")
     ap.add_argument("--profile", action="store_true",
                     help="cProfile each selected benchmark and print the "
                          "top 25 functions by cumulative time to stderr "
@@ -95,7 +155,7 @@ def main() -> None:
         os.path.dirname(__file__), "results.json"))
     args = ap.parse_args()
     if args.check_baselines:
-        sys.exit(1 if check_baselines() else 0)
+        sys.exit(1 if check_baselines(args.drift_ref) else 0)
     if args.profile_out:
         args.profile = True
 

@@ -1,0 +1,385 @@
+"""SLO-aware scheduling + admission control under a Poisson burst
+(DESIGN.md §10; paper §6 server-side scalability under load).
+
+A 2-server MEC cluster carries three steady closed-loop UE populations:
+
+* **tight** — AR-style sessions with a hard 4 ms frame target
+  (``ClientRuntime(slo_ms=4)``), short kernels, long think time;
+* **loose** — analytics-style sessions at a relaxed 30 ms target;
+* **best-effort** — no SLO at all: saturators that soak every idle
+  device-second and keep the run queues warm.
+
+At ``BURST_AT`` a Poisson burst of ``N_BURST`` extra tight-class UEs
+slams the cluster (mean inter-arrival ``BURST_GAP``), each constructed
+*mid-run* through the reentrant sim clock — exactly how a real MEC site
+sees a flash crowd. Five scenarios share the identical workload:
+
+* ``slo_drr`` — the PR 5 fair scheduler, deadline-blind: every tight
+  frame waits out the best-effort ring rotation, so the tight class
+  blows its SLO almost every frame. The control row.
+* ``slo_edf`` / ``slo_llf`` — earliest-deadline-first and
+  least-laxity-first (chunk-granularity preemption): steady state holds
+  the SLO, but the unscreened burst overloads the class anyway.
+* ``slo_edf_admit`` / ``slo_llf_admit`` — the same schedulers behind
+  the probe-driven admission controller: burst arrivals that fit are
+  admitted, marginal ones are degraded to a 2x target, the rest are
+  rejected — the classes the cluster *did* promise stay within SLO.
+
+Violation accounting is the runtime's own (client-ack latency vs the
+tenant's *effective* target), cross-checked here against the per-event
+ledger: every issued frame must complete exactly once (``lost=0``,
+``dup=0``) even under llf preemption churn.
+
+  PYTHONPATH=src python -m benchmarks.slo_burst \
+      [--baseline benchmarks/BENCH_slo.json] [--write-baseline P]
+
+With ``--baseline``, exits non-zero if any row's simulated drain time
+regresses more than 20% above the checked-in baseline, or if the
+acceptance floors fail: the DRR control row must violate ≥ 25% of tight
+frames (else the comparison is vacuous); under EDF/LLF + admission the
+tight class's violation rate must be ≤ 20% of DRR's and every admitted
+class (tight, degraded, loose) must hold its contract — p95 within its
+effective SLO and ≤ 5% of frames over it; llf rows must actually
+preempt; every row's completion ledger must balance. Simulated time
+is deterministic, so the baseline is portable (used by
+scripts/ci.sh).
+"""
+from __future__ import annotations
+
+import argparse
+import random
+import sys
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import ETH_40G, GPU_2080TI, Row, emit
+from repro.core import (AdmissionRejected, COMPLETE, ClientRuntime,
+                        Cluster, LinkSpec, ServerSpec)
+
+N_SERVERS = 2
+RADIO_5G = LinkSpec(latency=150e-6, bandwidth=1e9 / 8)  # uRLLC access
+
+N_TIGHT = 40
+SLO_TIGHT_MS = 4.0
+T_TIGHT = 0.8e-3                # tight-class kernel
+THINK_TIGHT = 40e-3
+FRAMES_TIGHT = 40
+
+N_LOOSE = 16
+SLO_LOOSE_MS = 30.0
+T_LOOSE = 2e-3
+THINK_LOOSE = 60e-3
+FRAMES_LOOSE = 25
+
+N_BE = 14                       # best-effort saturators (no SLO)
+T_BE = 1.2e-3
+THINK_BE = 1.5e-3
+FRAMES_BE = 30
+
+N_BURST = 120                   # flash crowd, all tight-class
+BURST_AT = 0.4                  # sim-seconds after steady state starts
+BURST_GAP = 0.8e-3             # Poisson mean inter-arrival
+FRAMES_BURST = 10
+
+QUANTUM = 2e-3                  # drr
+CHUNK = 0.5e-3                  # llf preemption grain
+STAGGER = 0.9e-3                # steady-UE start offsets
+GRACE = 0.5e-3                  # handshake-to-first-frame gap
+SEED = 7
+
+ADMISSION_OPTS = {"window_s": 0.04, "headroom": 0.25, "degrade_factor": 2.0}
+
+REGRESSION_TOLERANCE = 0.20
+DRR_VIOL_FLOOR = 0.25           # control row must actually hurt
+RATIO_CEILING = 0.20            # admit rows vs the DRR control row
+ADMITTED_VIOL_CEILING = 0.05    # per admitted class, in admit rows
+REGENERATE = ("python -m benchmarks.slo_burst "
+              "--write-baseline benchmarks/BENCH_slo.json")
+
+SCENARIOS = [
+    ("slo_drr", "drr", False),
+    ("slo_edf", "edf", False),
+    ("slo_llf", "llf", False),
+    ("slo_edf_admit", "edf", True),
+    ("slo_llf_admit", "llf", True),
+]
+
+
+def _mk_cluster(scheduler: str, admit: bool) -> Cluster:
+    opts = None
+    if scheduler == "drr":
+        opts = {"quantum": QUANTUM}
+    elif scheduler == "llf":
+        opts = {"chunk": CHUNK}
+    return Cluster([ServerSpec(f"s{i}", [GPU_2080TI])
+                    for i in range(N_SERVERS)],
+                   peer_link=ETH_40G, scheduler=scheduler,
+                   scheduler_opts=opts,
+                   admission=dict(ADMISSION_OPTS) if admit else None)
+
+
+class SloUE:
+    """One closed-loop session: issue a frame kernel, think, repeat.
+    Latency/violation scoring uses the runtime's own client-ack
+    accounting (``ev.t_client_ack``), read back after the run."""
+
+    def __init__(self, cluster: Cluster, name: str, server: str,
+                 slo_ms, t_kernel: float, think: float, frames: int,
+                 rng: random.Random):
+        self.rt = ClientRuntime(
+            cluster=cluster, client_link=RADIO_5G, transport="tcp",
+            name=name, slo_ms=slo_ms,
+            slo_probe={"cost_s": t_kernel} if slo_ms is not None
+            else None)
+        self.server = server
+        self.t_kernel = t_kernel
+        self.frames = frames
+        # pre-drawn think jitter: consumed at construction so frame
+        # pacing never depends on cross-scenario event interleaving
+        self._thinks = [think * (0.7 + 0.6 * rng.random())
+                        for _ in range(frames)]
+        self.events: list = []
+        self.completions = 0
+        self._frame_no = 0
+
+    def start(self, delay: float):
+        self.rt.clock.schedule(delay, self._next_frame)
+
+    def _next_frame(self):
+        i = self._frame_no
+        if i >= self.frames:
+            return
+        self._frame_no += 1
+        ev = self.rt.enqueue_kernel(self.server, fn=None,
+                                    duration=self.t_kernel,
+                                    name=f"f{i}")
+        self.events.append(ev)
+
+        def done(_ev, i=i):
+            self.completions += 1
+            self.rt.clock.schedule(self._thinks[i], self._next_frame)
+
+        ev.on_complete(done)
+
+
+def _class_rollup(ues) -> dict:
+    """Aggregate per *effective* SLO class (degraded tenants land in the
+    relaxed class they actually got): runtime violation counters plus
+    pooled client-ack latencies."""
+    by: dict = {}
+    for ue in ues:
+        rt = ue.rt
+        if rt._slo_s is None:
+            continue
+        d = by.setdefault(rt._slo_class,
+                          {"cmds": 0, "viol": 0, "lat": []})
+        d["cmds"] += rt.slo_commands
+        d["viol"] += rt.slo_violations
+        d["lat"].extend(ev.t_client_ack - ev.t_queued
+                        for ev in ue.events)
+    return by
+
+
+def _ledger(ues) -> tuple:
+    """Exactly-once check: every issued frame completed once — no frame
+    lost (missing/errored completion, short issue count) and none
+    double-fired, even under llf preempt/requeue churn."""
+    lost = dup = 0
+    for ue in ues:
+        issued = len(ue.events)
+        bad = sum(1 for ev in ue.events if ev.status != COMPLETE)
+        lost += bad + (ue.frames - issued)
+        if ue.completions > issued:
+            dup += ue.completions - issued
+        elif ue.completions < issued - bad:
+            lost += (issued - bad) - ue.completions
+        if ue.rt.slo_ms is not None and ue.rt.slo_commands != issued:
+            lost += abs(ue.rt.slo_commands - issued)
+    return lost, dup
+
+
+def _cls(by: dict, key: str) -> tuple:
+    d = by.get(key)
+    if d is None or not d["cmds"]:
+        return 0, 0.0, 0.0, 0.0
+    lat = np.asarray(d["lat"]) * 1e3
+    return (d["cmds"], d["viol"] / d["cmds"],
+            float(np.percentile(lat, 95)), float(np.percentile(lat, 99)))
+
+
+def _run_scenario(scheduler: str, admit: bool) -> dict:
+    cluster = _mk_cluster(scheduler, admit)
+    rng = random.Random(SEED)
+    ues = []
+    for i in range(N_TIGHT):
+        ues.append(SloUE(cluster, f"t{i}", f"s{i % N_SERVERS}",
+                         SLO_TIGHT_MS, T_TIGHT, THINK_TIGHT,
+                         FRAMES_TIGHT, rng))
+    for i in range(N_LOOSE):
+        ues.append(SloUE(cluster, f"l{i}", f"s{i % N_SERVERS}",
+                         SLO_LOOSE_MS, T_LOOSE, THINK_LOOSE,
+                         FRAMES_LOOSE, rng))
+    for i in range(N_BE):
+        ues.append(SloUE(cluster, f"e{i}", f"s{i % N_SERVERS}",
+                         None, T_BE, THINK_BE, FRAMES_BE, rng))
+    cluster.run()                           # handshakes drained
+    t0 = cluster.clock.now
+    for i, ue in enumerate(ues):
+        ue.start(delay=GRACE + i * STAGGER)
+
+    # the flash crowd: tight-class arrivals constructed mid-run (the
+    # sim clock is reentrant), screened by admission where enabled
+    rejected = [0]
+    arrival = t0 + BURST_AT
+    for k in range(N_BURST):
+        arrival += rng.expovariate(1.0 / BURST_GAP)
+
+        def spawn(k=k):
+            try:
+                ue = SloUE(cluster, f"b{k}", f"s{k % N_SERVERS}",
+                           SLO_TIGHT_MS, T_TIGHT, THINK_TIGHT,
+                           FRAMES_BURST, rng)
+            except AdmissionRejected:
+                rejected[0] += 1
+                return
+            ues.append(ue)
+            ue.start(delay=GRACE)
+
+        cluster.clock.schedule_at(arrival, spawn)
+    cluster.run()
+    elapsed = cluster.clock.now - t0
+
+    by = _class_rollup(ues)
+    tcmds, tviol, tp95, tp99 = _cls(by, f"{SLO_TIGHT_MS:g}ms")
+    _, lviol, lp95, lp99 = _cls(by, f"{SLO_LOOSE_MS:g}ms")
+    deg_ms = SLO_TIGHT_MS * ADMISSION_OPTS["degrade_factor"]
+    dcmds, dviol, dp95, dp99 = _cls(by, f"{deg_ms:g}ms")
+    lost, dup = _ledger(ues)
+    adm = cluster.admission
+    preempted = sum(s.preempted for h in cluster.hosts.values()
+                    for s in h.schedulers.values())
+    return {
+        "sim_ms": elapsed * 1e3,
+        "tviol": tviol, "tp95": tp95, "tp99": tp99, "tcmds": tcmds,
+        "lviol": lviol, "lp95": lp95, "lp99": lp99,
+        "dviol": dviol, "dp95": dp95, "dp99": dp99, "dcmds": dcmds,
+        "admitted": adm.counts["admit"] if adm else 0,
+        "degraded": adm.counts["degrade"] if adm else 0,
+        "rejected": rejected[0],
+        "preempted": preempted,
+        "lost": lost, "dup": dup,
+    }
+
+
+def run():
+    rows = []
+    for name, scheduler, admit in SCENARIOS:
+        r = _run_scenario(scheduler, admit)
+        rows.append(Row(
+            name, r["sim_ms"],
+            f"sim_ms={r['sim_ms']:.3f};"
+            f"tviol={r['tviol']:.4f};tp95={r['tp95']:.3f};"
+            f"tp99={r['tp99']:.3f};tcmds={r['tcmds']};"
+            f"lviol={r['lviol']:.4f};lp95={r['lp95']:.3f};"
+            f"lp99={r['lp99']:.3f};"
+            f"dviol={r['dviol']:.4f};dp95={r['dp95']:.3f};"
+            f"dp99={r['dp99']:.3f};dcmds={r['dcmds']};"
+            f"admitted={r['admitted']};degraded={r['degraded']};"
+            f"rejected={r['rejected']};preempted={r['preempted']};"
+            f"lost={r['lost']};dup={r['dup']}"))
+    return emit(rows)
+
+
+def check_baseline(rows, baseline_path: str) -> bool:
+    by_name = {r.name: r for r in rows}
+    ok = common.check_rows(rows, baseline_path,
+                           extract=lambda r: common.derived(r, "sim_ms"),
+                           tolerance=REGRESSION_TOLERANCE,
+                           direction="lower_is_better", unit=" sim_ms",
+                           benchmark="slo_burst")
+    d = common.derived
+    drr_viol = d(by_name["slo_drr"], "tviol")
+    if drr_viol < DRR_VIOL_FLOOR:
+        print(f"# slo_drr: tight violation rate {drr_viol:.4f} < "
+              f"{DRR_VIOL_FLOOR} FLOOR (control row is vacuous)",
+              file=sys.stderr)
+        ok = False
+    deg_ms = SLO_TIGHT_MS * ADMISSION_OPTS["degrade_factor"]
+    for name in ("slo_edf_admit", "slo_llf_admit"):
+        row = by_name[name]
+        viol = d(row, "tviol")
+        ceiling = RATIO_CEILING * drr_viol
+        if viol > ceiling:
+            print(f"# {name}: tight violation rate {viol:.4f} > "
+                  f"{RATIO_CEILING} x drr ({ceiling:.4f}) CEILING",
+                  file=sys.stderr)
+            ok = False
+        else:
+            print(f"# {name}: tight violation rate {viol:.4f} <= "
+                  f"{RATIO_CEILING} x drr ({ceiling:.4f}) ok",
+                  file=sys.stderr)
+        # every class the controller admitted must hold its contract:
+        # p95 within the effective SLO and ≤ 5% of frames over it (the
+        # sim is deterministic — these margins absorb legitimate timing
+        # shifts, not noise)
+        for label, key, slo in (
+                ("tight", "t", SLO_TIGHT_MS),
+                ("loose", "l", SLO_LOOSE_MS),
+                ("degraded", "d", deg_ms)):
+            if label == "degraded" and d(row, "dcmds") == 0:
+                continue
+            p95 = d(row, key + "p95")
+            vr = d(row, key + "viol")
+            if p95 > slo:
+                print(f"# {name}: {label} p95 {p95:.3f} ms > "
+                      f"{slo:g} ms SLO", file=sys.stderr)
+                ok = False
+            if vr > ADMITTED_VIOL_CEILING:
+                print(f"# {name}: {label} violation rate {vr:.4f} > "
+                      f"{ADMITTED_VIOL_CEILING} CEILING",
+                      file=sys.stderr)
+                ok = False
+        if d(row, "rejected") == 0:
+            print(f"# {name}: admission rejected nothing under a "
+                  f"{N_BURST}-UE burst", file=sys.stderr)
+            ok = False
+    for name in ("slo_llf", "slo_llf_admit"):
+        if d(by_name[name], "preempted") == 0:
+            print(f"# {name}: llf never preempted", file=sys.stderr)
+            ok = False
+    for r in rows:
+        lost, dup = d(r, "lost"), d(r, "dup")
+        if lost or dup:
+            print(f"# {r.name}: completion ledger broken "
+                  f"(lost={lost:.0f} dup={dup:.0f})", file=sys.stderr)
+            ok = False
+    return ok
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=None,
+                    help="BENCH_slo.json; fail on >20%% sim-time "
+                         "regression or acceptance-floor violation")
+    ap.add_argument("--write-baseline", default=None,
+                    help="write measured sim_ms to this JSON path")
+    ap.add_argument("--json-out", default=None,
+                    help="write the result rows to this JSON path")
+    args = ap.parse_args()
+    rows = run()
+    if args.json_out:
+        common.dump_rows(rows, args.json_out)
+    if args.write_baseline:
+        common.write_baseline(
+            args.write_baseline,
+            {r.name: common.derived(r, "sim_ms") for r in rows},
+            benchmark="slo_burst", metric="sim_ms",
+            direction="lower_is_better", tolerance=REGRESSION_TOLERANCE,
+            regenerate=REGENERATE)
+    if args.baseline and not check_baseline(rows, args.baseline):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

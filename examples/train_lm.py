@@ -5,7 +5,6 @@ AdamW, remat, checkpointing, fault-tolerant loop — on the local device.
   PYTHONPATH=src python examples/train_lm.py [--steps 300]
 """
 import argparse
-import dataclasses
 import os
 import sys
 import time

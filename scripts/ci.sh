@@ -3,18 +3,24 @@
 #
 #   scripts/ci.sh [--simtime-only]
 #
-# Fails if any baseline file fails the shared schema check, any test
-# fails, any benchmark errors, dispatch throughput regresses >20% below
-# benchmarks/BENCH_dispatch.json, or any simulated-time gate regresses
-# >20% against its baseline (migration data plane, multi-tenant
-# scaling/fairness, shared-weights dedup — the dedup gate also enforces
-# the >=40% payload-reduction floor — and the CFD halo-exchange
-# placement gate, which also enforces the >=0.75 8-server scaling-
-# efficiency floor and hetmec beating locality-off placement by >=20%,
-# and the chaos membership gate: exactly-once command ledger under
-# drain/crash, drain-storm recovery <=1.5x steady, post-crash p95
-# <=3x the steady p95, and the 1000-UE fleet-sweep sim-time gate,
-# whose wall-clock ceiling is skipped under CI_SKIP_WALLCLOCK=1).
+# Fails if any baseline file fails the shared schema check (or, with
+# CI_BASE_REF set, the stamp-drift guard: row values changed vs that
+# git ref without regenerating), any test fails, any benchmark errors,
+# dispatch throughput regresses >20% below benchmarks/BENCH_dispatch.json,
+# or any simulated-time gate regresses >20% against its baseline
+# (migration data plane, multi-tenant scaling/fairness, shared-weights
+# dedup — the dedup gate also enforces the >=40% payload-reduction
+# floor — the SLO burst gate: tight-class violations under
+# EDF/LLF+admission <=20% of the DRR control row, every admitted class
+# inside its effective SLO, admission actually rejecting under the
+# burst, llf actually preempting, and an exactly-once completion ledger
+# under preemption churn — and the CFD halo-exchange placement gate,
+# which also enforces the >=0.75 8-server scaling-efficiency floor and
+# hetmec beating locality-off placement by >=20%, and the chaos
+# membership gate: exactly-once command ledger under drain/crash,
+# drain-storm recovery <=1.5x steady, post-crash p95 <=3x the steady
+# p95, and the 1000-UE fleet-sweep sim-time gate, whose wall-clock
+# ceiling is skipped under CI_SKIP_WALLCLOCK=1).
 # Regenerate baselines with the "regenerate" command stamped inside
 # each BENCH_*.json.
 #
@@ -26,6 +32,11 @@
 # latency-breakdown step gates the exact per-stage decomposition; and
 # the non-smoke dispatch gate includes the <=2% tracing-off overhead
 # floor.
+#
+# Every step is timed, and every check_rows gate comparison records its
+# remaining margin; on exit (pass or fail) scripts/ci_summary.py
+# renders both as markdown — to stdout, and into the Actions
+# job-summary panel when $GITHUB_STEP_SUMMARY is set.
 #
 # The dispatch gate measures WALL-CLOCK commands/sec and is therefore
 # host-specific; on shared/virtualized runners it flakes through no
@@ -45,64 +56,88 @@ fi
 ARTIFACTS=benchmarks/ci-results
 mkdir -p "$ARTIFACTS"
 
-echo "== baseline schema check =="
-python -m benchmarks.run --check-baselines
+STEP_TIMES="$ARTIFACTS/step_times.tsv"
+export CI_GATE_MARGINS="$ARTIFACTS/gate_margins.jsonl"
+: > "$STEP_TIMES"
+: > "$CI_GATE_MARGINS"
 
-echo "== tier-1 tests =="
-python -m pytest -x -q
+summarize() {
+    python scripts/ci_summary.py --steps "$STEP_TIMES" \
+        --margins "$CI_GATE_MARGINS" || true
+}
+trap summarize EXIT
 
-echo "== fig8 command-overhead smoke =="
-python -m benchmarks.cmd_overhead
+run_step() {
+    local title="$1"; shift
+    echo "== $title =="
+    local t0=$SECONDS rc=0
+    "$@" || rc=$?
+    printf '%s\t%d\t%d\n' "$title" "$((SECONDS - t0))" "$rc" \
+        >> "$STEP_TIMES"
+    return $rc
+}
 
-if [[ "$SIMTIME_ONLY" == "1" ]]; then
-    echo "== dispatch throughput smoke (wall-clock gate SKIPPED) =="
-    python -m benchmarks.dispatch_throughput --smoke \
-        --json-out "$ARTIFACTS/dispatch.json"
-else
-    echo "== dispatch throughput smoke (20% regression gate) =="
-    python -m benchmarks.dispatch_throughput --smoke --trials 3 \
-        --baseline benchmarks/BENCH_dispatch.json \
-        --json-out "$ARTIFACTS/dispatch.json"
-fi
+run_step "baseline schema + drift check" \
+    python -m benchmarks.run --check-baselines
 
-echo "== migration data-plane smoke (20% regression gate) =="
-python -m benchmarks.migration_pipeline \
-    --baseline benchmarks/BENCH_migration.json \
-    --json-out "$ARTIFACTS/migration.json"
+run_step "tier-1 tests" python -m pytest -x -q
 
-echo "== multi-tenant + dedup smoke (20% gates + acceptance floors) =="
-python -m benchmarks.multi_tenant \
-    --baseline benchmarks/BENCH_multitenant.json \
-    --dedup-baseline benchmarks/BENCH_dedup.json \
-    --json-out "$ARTIFACTS/multi_tenant.json"
-
-echo "== CFD halo-exchange placement smoke (20% gates + floors) =="
-python -m benchmarks.cfd_halo \
-    --baseline benchmarks/BENCH_cfd.json \
-    --json-out "$ARTIFACTS/cfd_halo.json"
-
-echo "== chaos membership smoke (20% gates + exactly-once ledger; traced) =="
-python -m benchmarks.chaos \
-    --baseline benchmarks/BENCH_chaos.json \
-    --trace "$ARTIFACTS/chaos_trace.json" \
-    --json-out "$ARTIFACTS/chaos.json"
+run_step "fig8 command-overhead smoke" python -m benchmarks.cmd_overhead
 
 if [[ "$SIMTIME_ONLY" == "1" ]]; then
-    echo "== 1000-UE fleet sweep (sim-time gate; wall ceiling SKIPPED; traced) =="
-    python -m benchmarks.fleet_sweep \
-        --baseline benchmarks/BENCH_fleet.json \
-        --trace "$ARTIFACTS/fleet_trace.json" \
-        --json-out "$ARTIFACTS/fleet.json"
+    run_step "dispatch throughput smoke (wall-clock gate SKIPPED)" \
+        python -m benchmarks.dispatch_throughput --smoke \
+            --json-out "$ARTIFACTS/dispatch.json"
 else
-    echo "== 1000-UE fleet sweep (sim-time gate + 30s wall ceiling; traced) =="
-    python -m benchmarks.fleet_sweep \
-        --baseline benchmarks/BENCH_fleet.json --max-wall-s 30 \
-        --trace "$ARTIFACTS/fleet_trace.json" \
-        --json-out "$ARTIFACTS/fleet.json"
+    run_step "dispatch throughput smoke (20% regression gate)" \
+        python -m benchmarks.dispatch_throughput --smoke --trials 3 \
+            --baseline benchmarks/BENCH_dispatch.json \
+            --json-out "$ARTIFACTS/dispatch.json"
 fi
 
-echo "== latency breakdown (exact per-stage decomposition gate) =="
-python -m benchmarks.latency_breakdown --check \
-    --json-out "$ARTIFACTS/latency_breakdown.json"
+run_step "migration data-plane smoke (20% regression gate)" \
+    python -m benchmarks.migration_pipeline \
+        --baseline benchmarks/BENCH_migration.json \
+        --json-out "$ARTIFACTS/migration.json"
+
+run_step "multi-tenant + dedup smoke (20% gates + acceptance floors)" \
+    python -m benchmarks.multi_tenant \
+        --baseline benchmarks/BENCH_multitenant.json \
+        --dedup-baseline benchmarks/BENCH_dedup.json \
+        --json-out "$ARTIFACTS/multi_tenant.json"
+
+run_step "SLO burst smoke (20% gates + admission/preemption floors)" \
+    python -m benchmarks.slo_burst \
+        --baseline benchmarks/BENCH_slo.json \
+        --json-out "$ARTIFACTS/slo_burst.json"
+
+run_step "CFD halo-exchange placement smoke (20% gates + floors)" \
+    python -m benchmarks.cfd_halo \
+        --baseline benchmarks/BENCH_cfd.json \
+        --json-out "$ARTIFACTS/cfd_halo.json"
+
+run_step "chaos membership smoke (20% gates + exactly-once ledger; traced)" \
+    python -m benchmarks.chaos \
+        --baseline benchmarks/BENCH_chaos.json \
+        --trace "$ARTIFACTS/chaos_trace.json" \
+        --json-out "$ARTIFACTS/chaos.json"
+
+if [[ "$SIMTIME_ONLY" == "1" ]]; then
+    run_step "1000-UE fleet sweep (sim-time gate; wall ceiling SKIPPED; traced)" \
+        python -m benchmarks.fleet_sweep \
+            --baseline benchmarks/BENCH_fleet.json \
+            --trace "$ARTIFACTS/fleet_trace.json" \
+            --json-out "$ARTIFACTS/fleet.json"
+else
+    run_step "1000-UE fleet sweep (sim-time gate + 30s wall ceiling; traced)" \
+        python -m benchmarks.fleet_sweep \
+            --baseline benchmarks/BENCH_fleet.json --max-wall-s 30 \
+            --trace "$ARTIFACTS/fleet_trace.json" \
+            --json-out "$ARTIFACTS/fleet.json"
+fi
+
+run_step "latency breakdown (exact per-stage decomposition gate)" \
+    python -m benchmarks.latency_breakdown --check \
+        --json-out "$ARTIFACTS/latency_breakdown.json"
 
 echo "ci.sh: all checks passed"

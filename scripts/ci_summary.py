@@ -1,0 +1,98 @@
+"""Render the ci.sh run as a markdown summary: per-step wall-clock
+timings plus every regression gate's remaining margin.
+
+scripts/ci.sh invokes this from its EXIT trap with the step-times TSV
+it accumulated (``title<TAB>seconds<TAB>exit-code`` per step) and the
+``$CI_GATE_MARGINS`` JSONL that ``benchmarks.common.check_rows``
+appended one record per gate comparison to. Output is appended to
+``$GITHUB_STEP_SUMMARY`` when set (the Actions job-summary panel) and
+always printed to stdout, so local runs get the same table. Stdlib
+only; never fails the build (ci.sh invokes it with ``|| true``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _read_steps(path: str) -> list:
+    steps = []
+    try:
+        with open(path) as f:
+            for line in f:
+                parts = line.rstrip("\n").split("\t")
+                if len(parts) != 3:
+                    continue
+                title, secs, rc = parts
+                steps.append((title, float(secs), int(rc)))
+    except (OSError, ValueError):
+        pass
+    return steps
+
+
+def _read_margins(path: str) -> list:
+    margins = []
+    try:
+        with open(path) as f:
+            for line in f:
+                try:
+                    margins.append(json.loads(line))
+                except ValueError:
+                    continue
+    except OSError:
+        pass
+    return margins
+
+
+def render(steps: list, margins: list) -> str:
+    out = ["## ci.sh summary", ""]
+    if steps:
+        total = sum(s[1] for s in steps)
+        out += ["### Step timings", "",
+                "| step | wall | result |", "| --- | ---: | --- |"]
+        for title, secs, rc in steps:
+            mark = "✅ ok" if rc == 0 else f"❌ exit {rc}"
+            out.append(f"| {title} | {secs:.0f}s | {mark} |")
+        out += [f"| **total** | **{total:.0f}s** | |", ""]
+    if margins:
+        out += ["### Gate margins (headroom left before the bound)", "",
+                "| benchmark | row | value | bound | margin | status |",
+                "| --- | --- | ---: | ---: | ---: | --- |"]
+        for m in sorted(margins, key=lambda m: m.get("margin", 0.0)):
+            unit = m.get("unit", "")
+            mark = "✅" if m.get("status") == "ok" else "⚠️"
+            out.append(
+                f"| {m.get('benchmark', '?')} | {m.get('row', '?')} "
+                f"| {m.get('got', 0):.3f}{unit} "
+                f"| {m.get('bound', 0):.3f}{unit} "
+                f"| {m.get('margin', 0) * 100:+.1f}% "
+                f"| {mark} {m.get('status', '?')} |")
+        out.append("")
+    if not steps and not margins:
+        out += ["(no step timings or gate margins recorded)", ""]
+    return "\n".join(out) + "\n"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", required=True,
+                    help="TSV accumulated by ci.sh run_step")
+    ap.add_argument("--margins", required=True,
+                    help="JSONL appended by benchmarks.common.check_rows")
+    args = ap.parse_args()
+    md = render(_read_steps(args.steps), _read_margins(args.margins))
+    sys.stdout.write(md)
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        try:
+            with open(summary_path, "a") as f:
+                f.write(md)
+        except OSError as e:
+            print(f"# ci_summary: cannot append to "
+                  f"GITHUB_STEP_SUMMARY: {e}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,8 @@
 """PoCL-R offloading runtime (the paper's core contribution, adapted to a
 deterministic event-loop + JAX execution model — see DESIGN.md §2)."""
+from repro.core.admission import (ADMIT, DEGRADE, REJECT,  # noqa: F401
+                                  AdmissionController, AdmissionDecision,
+                                  AdmissionRejected)
 from repro.core.buffers import Buffer  # noqa: F401
 from repro.core.commands import (BuiltinKernel, Marker, MigrateBuffer,  # noqa: F401
                                  NDRangeKernel, ReadBuffer, WriteBuffer)
@@ -16,7 +19,8 @@ from repro.core.runtime import (ClientRuntime, Cluster,  # noqa: F401
                                 DeviceSpec, DeviceUnavailable, LinkSpec,
                                 ServerHost, ServerSpec)
 from repro.core.scheduler import (DeviceScheduler, DRRPolicy,  # noqa: F401
-                                  FIFOPolicy, make_policy)
+                                  EDFPolicy, FIFOPolicy, LLFPolicy,
+                                  make_policy, validate_scheduler_opts)
 from repro.core.store import (BufferStore, StoreEntry,  # noqa: F401
                               content_digest)
 from repro.core.trace import (Histogram, MetricsRegistry,  # noqa: F401

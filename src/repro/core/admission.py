@@ -1,0 +1,276 @@
+"""Probe-driven SLO admission control (DESIGN.md §10).
+
+A tenant that declares a latency target (``ClientRuntime(slo_ms=)``)
+on a cluster with admission enabled is screened at attach time. The
+controller spends no simulated time and mutates nothing: it reads the
+same live telemetry the placement engine trusts —
+
+* ``PlacementEngine.queue_depth``: run-queue backlog plus the
+  in-service remainder per server, in device-seconds;
+* ``PlacementEngine.transfer_eta``: access-link wire time (incl. NIC
+  ingress queueing) for the tenant's declared per-frame working set;
+* egress-NIC occupancy (``NIC.queue_seconds``) for the result's return
+  leg;
+* the PR 8 windowed per-class p99 latency histograms, fed back by the
+  runtime's client-ack path.
+
+and predicts the best-case end-to-end latency a new frame would see:
+``min over ACTIVE servers of (queue_depth + transfer_eta + cost_s +
+nic_egress)``. Against the requested SLO this yields an
+``AdmissionDecision``:
+
+* **admit** — predicted latency fits inside ``headroom * slo``;
+* **degrade** — it fits inside ``headroom * slo * degrade_factor``:
+  the tenant is admitted at the relaxed target ``slo *
+  degrade_factor`` (its deadlines, class accounting, and violation
+  gates all use the degraded target — that is the contract it got);
+* **reject** — the cluster cannot hold even the degraded target, or
+  an already-admitted class is currently blowing its windowed p99
+  (taking more load while in breach only deepens the breach).
+
+Tail-probability constraints per "Latency and Reliability-Aware Task
+Offloading and Resource Allocation for MEC" (arXiv:1710.00590): the
+p99-vs-SLO guard is their reliability constraint in windowed form.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.buffers import Buffer
+from repro.core.membership import ACTIVE
+from repro.core.trace import MetricsRegistry
+
+ADMIT = "admit"
+DEGRADE = "degrade"
+REJECT = "reject"
+
+_INF = float("inf")
+
+# knob -> (default, validator description)
+_KNOB_DEFAULTS = {
+    "window_s": 0.25,       # sliding window for the p99 breach guard
+    "headroom": 0.5,        # fraction of the SLO prediction may consume
+    "degrade_factor": 2.0,  # SLO multiplier for degraded admission
+}
+
+
+class AdmissionDecision:
+    """Outcome of one admission screening. ``slo_s`` is the *effective*
+    target the tenant runs under (degraded when status == degrade);
+    ``predicted_s`` the controller's best-case latency estimate."""
+
+    __slots__ = ("status", "tenant", "t", "requested_slo_s", "slo_s",
+                 "predicted_s", "reason")
+
+    def __init__(self, status: str, tenant: str, t: float,
+                 requested_slo_s: float, slo_s: Optional[float],
+                 predicted_s: float, reason: str):
+        self.status = status
+        self.tenant = tenant
+        self.t = t
+        self.requested_slo_s = requested_slo_s
+        self.slo_s = slo_s
+        self.predicted_s = predicted_s
+        self.reason = reason
+
+    def __repr__(self):
+        return (f"AdmissionDecision({self.status}, tenant={self.tenant!r},"
+                f" predicted={self.predicted_s * 1e3:.3f}ms,"
+                f" reason={self.reason!r})")
+
+
+class AdmissionRejected(RuntimeError):
+    """Raised by ClientRuntime() when admission control rejects the
+    tenant. Carries the ``AdmissionDecision`` for inspection."""
+
+    def __init__(self, tenant: str, decision: AdmissionDecision):
+        super().__init__(
+            f"tenant {tenant!r} rejected by admission control: "
+            f"{decision.reason}")
+        self.decision = decision
+
+
+def _validate_opts(opts: Optional[dict]) -> dict:
+    out = dict(_KNOB_DEFAULTS)
+    if opts is None:
+        return out
+    if not isinstance(opts, dict):
+        raise ValueError(
+            f"admission opts must be a dict, got {type(opts).__name__}")
+    unknown = sorted(set(opts) - set(_KNOB_DEFAULTS))
+    if unknown:
+        raise ValueError(
+            f"unknown admission opts: {unknown} "
+            f"(allowed: {sorted(_KNOB_DEFAULTS)})")
+    for k, v in opts.items():
+        if isinstance(v, bool) or not isinstance(v, (int, float)) \
+                or not v > 0.0:
+            raise ValueError(
+                f"admission opts[{k!r}] must be a positive number, "
+                f"got {v!r}")
+    out.update(opts)
+    if out["headroom"] > 1.0:
+        raise ValueError(
+            f"admission headroom must be <= 1.0, got {out['headroom']!r}")
+    if out["degrade_factor"] < 1.0:
+        raise ValueError(
+            f"admission degrade_factor must be >= 1.0, "
+            f"got {out['degrade_factor']!r}")
+    return out
+
+
+class AdmissionController:
+    """One per cluster (``Cluster(admission=...)``). Screens SLO tenants
+    at attach time (``request``) and accumulates per-class latency /
+    violation telemetry at client-ack time (``observe``)."""
+
+    def __init__(self, cluster, opts: Optional[dict] = None):
+        opts = _validate_opts(opts)
+        self.cluster = cluster
+        self.window_s = opts["window_s"]
+        self.headroom = opts["headroom"]
+        self.degrade_factor = opts["degrade_factor"]
+        self.metrics = MetricsRegistry()
+        self.class_slo: dict = {}     # class key -> effective slo_s
+        self.decisions: list = []     # every AdmissionDecision, in order
+        self.counts = {ADMIT: 0, DEGRADE: 0, REJECT: 0}
+
+    # -- probe math ----------------------------------------------------
+
+    def predict_latency(self, rt, cost_s: float, nbytes: int) -> float:
+        """Best-case end-to-end seconds for one frame of ``cost_s``
+        device work over an ``nbytes`` input, across the tenant's ACTIVE
+        servers: device backlog + access-link transfer ETA (incl.
+        ingress NIC) + kernel cost + egress-NIC occupancy for the
+        return leg. +inf when the tenant can reach no ACTIVE server.
+
+        The backlog term is scheduler-aware: under a deadline-ordered
+        policy (edf/llf) a new SLO command overtakes every deadline-less
+        command, so only the deadline-carrying queue
+        (``queued_slo_seconds``) plus the in-service remainders count —
+        a cluster saturated with best-effort work still admits SLO
+        tenants it can serve. Deadline-blind policies (fifo/drr) make
+        the command wait behind everything: full ``queue_depth``."""
+        cluster = self.cluster
+        engine = cluster.placement
+        now = cluster.clock.now
+        deadline_aware = cluster.scheduler_policy in ("edf", "llf")
+        probe = None
+        if nbytes > 0:
+            # a client-held probe buffer routes transfer_eta down the
+            # access-link branch — the same arithmetic a real first
+            # frame's input write would pay
+            probe = Buffer(nbytes=int(nbytes))
+            probe.valid_on = {"client"}
+        best = _INF
+        for s in sorted(rt.servers):
+            host = cluster.hosts.get(s)
+            if host is None or host.state != ACTIVE:
+                continue
+            if deadline_aware:
+                eta = engine.queued_slo_seconds(s)
+                for dev in host.devices.values():
+                    rem = dev._busy_until - now
+                    if rem > 0.0:
+                        eta += rem
+            else:
+                eta = engine.queue_depth(s)
+            eta += cost_s
+            if probe is not None:
+                eta += engine.transfer_eta(rt, probe, s)
+            nic = host.nic
+            if nic is not None:
+                eta += nic.queue_seconds(now)
+            if eta < best:
+                best = eta
+        return best
+
+    def breached_class(self, now: float) -> Optional[str]:
+        """Class key of an admitted SLO class whose windowed p99 latency
+        currently exceeds its effective SLO, or None. Deterministic:
+        classes are scanned in sorted order."""
+        t0 = now - self.window_s
+        for key in sorted(self.class_slo):
+            slo = self.class_slo[key]
+            h = self.metrics.hist("slo_latency", key)
+            if h.samples and h.percentile(99, t0, now) > slo:
+                return key
+        return None
+
+    # -- decision ------------------------------------------------------
+
+    def request(self, rt) -> AdmissionDecision:
+        """Screen ``rt`` (which has ``_slo_s`` set). Pure telemetry
+        reads; records and returns the decision."""
+        now = self.cluster.clock.now
+        slo = rt._slo_s
+        probe = rt._slo_probe or {}
+        predicted = self.predict_latency(
+            rt, probe.get("cost_s", 0.0), probe.get("nbytes", 0))
+
+        breached = self.breached_class(now)
+        if breached is not None:
+            decision = AdmissionDecision(
+                REJECT, rt.name, now, slo, None, predicted,
+                f"admitted class {breached} over its windowed p99 SLO")
+        elif predicted <= self.headroom * slo:
+            decision = AdmissionDecision(
+                ADMIT, rt.name, now, slo, slo, predicted,
+                f"predicted {predicted * 1e3:.3f} ms within "
+                f"{self.headroom:g}x of {slo * 1e3:g} ms SLO")
+        elif predicted <= self.headroom * slo * self.degrade_factor:
+            decision = AdmissionDecision(
+                DEGRADE, rt.name, now, slo, slo * self.degrade_factor,
+                predicted,
+                f"predicted {predicted * 1e3:.3f} ms holds only the "
+                f"{self.degrade_factor:g}x-degraded target")
+        else:
+            decision = AdmissionDecision(
+                REJECT, rt.name, now, slo, None, predicted,
+                f"predicted {predicted * 1e3:.3f} ms cannot hold even "
+                f"the {self.degrade_factor:g}x-degraded target")
+        self.decisions.append(decision)
+        self.counts[decision.status] += 1
+        if decision.slo_s is not None:
+            key = _class_key(decision.slo_s)
+            self.class_slo.setdefault(key, decision.slo_s)
+        return decision
+
+    # -- feedback ------------------------------------------------------
+
+    def observe(self, class_key: str, t: float, latency: float,
+                violated: bool) -> None:
+        """Client-ack feedback from the runtime: one completed command's
+        end-to-end latency, keyed by the tenant's SLO class."""
+        m = self.metrics
+        m.observe("slo_latency", class_key, t, latency)
+        m.observe("slo_violation", class_key, t, 1.0 if violated else 0.0)
+
+    def violation_rate(self, class_key: str,
+                       t0: Optional[float] = None,
+                       t1: Optional[float] = None) -> float:
+        return self.metrics.rate("slo_violation", class_key, t0, t1)
+
+    def stats(self) -> dict:
+        out = {
+            "admitted": self.counts[ADMIT],
+            "degraded": self.counts[DEGRADE],
+            "rejected": self.counts[REJECT],
+            "classes": {},
+        }
+        for key in sorted(self.class_slo):
+            h = self.metrics.hist("slo_latency", key)
+            out["classes"][key] = {
+                "slo_ms": self.class_slo[key] * 1e3,
+                "commands": len(h.samples),
+                "p99_ms": h.percentile(99) * 1e3,
+                "violation_rate": self.violation_rate(key),
+            }
+        return out
+
+
+def _class_key(slo_s: float) -> str:
+    """SLO class label: tenants sharing an effective target form one
+    class (degraded tenants land in the relaxed class they actually
+    got)."""
+    return f"{slo_s * 1e3:g}ms"

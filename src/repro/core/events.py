@@ -27,8 +27,8 @@ class Event:
 
     __slots__ = ("command", "server", "status", "user", "id",
                  "t_queued", "t_submitted", "t_start", "t_end",
-                 "t_client_ack", "error", "data_version", "_callbacks",
-                 "_refs", "retired", "on_retire")
+                 "t_client_ack", "deadline", "error", "data_version",
+                 "_callbacks", "_refs", "retired", "on_retire")
 
     def __init__(self, command=None, server: Optional[str] = None,
                  status: str = QUEUED, user: bool = False):
@@ -45,6 +45,9 @@ class Event:
         self.t_start = 0.0
         self.t_end = 0.0
         self.t_client_ack = 0.0   # when the client observed completion
+        # absolute SLO deadline (t_queued + tenant SLO) stamped by the
+        # runtime for tenants with a latency target; None otherwise
+        self.deadline: Optional[float] = None
         self.error: Optional[str] = None
         # for ReadBuffer events: the buffer's content generation at the
         # moment the bytes left the server (consumers of the read — e.g.

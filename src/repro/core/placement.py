@@ -115,12 +115,21 @@ class LocalityPolicy:
 class HetMECPolicy:
     """Estimated completion time per candidate: missing-input transfer
     cost over current link/NIC state + queued device-seconds + kernel
-    device cost. Minimum wins; sorted-name tie-break."""
+    device cost. Minimum wins; sorted-name tie-break — except for SLO
+    tenants, where equal ECT resolves toward the server carrying the
+    least deadline-bound backlog (``queued_slo_seconds``), so a tight
+    command lands where it competes with the least SLO work
+    (DESIGN.md §10). Non-SLO tenants keep the early-break/keep-first
+    scan byte-for-byte."""
 
     name = "hetmec"
 
     def place(self, engine, rt, requested, candidates, device, inputs,
               flops, bytes_moved, duration):
+        # the early break leaves a partial ECT that is only usable for
+        # the "already worse" verdict, never for an equality tie-break;
+        # SLO tenants need exact ECTs to compare ties, so they skip it
+        exact = getattr(rt, "_slo_s", None) is not None
         best = None
         best_ect = None
         for s in candidates:                    # sorted by the engine
@@ -129,10 +138,15 @@ class HetMECPolicy:
                                      duration)
             for b in inputs:
                 ect += engine.transfer_eta(rt, b, s)
-                if best_ect is not None and ect >= best_ect:
+                if not exact and best_ect is not None \
+                        and ect >= best_ect:
                     break                       # already worse
             if best_ect is None or ect < best_ect:
                 best, best_ect = s, ect
+            elif exact and ect == best_ect \
+                    and engine.queued_slo_seconds(s) \
+                    < engine.queued_slo_seconds(best):
+                best = s
         return best
 
 
@@ -183,6 +197,16 @@ class PlacementEngine:
             rem = dev._busy_until - now
             if rem > 0.0:
                 total += rem
+        return total
+
+    def queued_slo_seconds(self, server: str) -> float:
+        """Deadline-carrying device-seconds queued on ``server`` (0.0
+        under deadline-blind scheduler policies): the laxity-aware
+        placement tie-break signal (DESIGN.md §10)."""
+        host = self.cluster.hosts[server]
+        total = 0.0
+        for sch in host.schedulers.values():
+            total += sch.queued_slo_seconds()
         return total
 
     def queue_depth(self, server: str) -> float:

@@ -88,20 +88,27 @@ import numpy as np
 
 from repro.core import commands as C
 from repro.core.buffers import Buffer
-from repro.core.events import (COMPLETE, ERROR, QUEUED, RUNNING, SUBMITTED,
+from repro.core.events import (COMPLETE, ERROR, RUNNING, SUBMITTED,
                                Event)
-from repro.core.membership import (ACTIVE, DEAD, DRAINING, JOINING,
+from repro.core.membership import (ACTIVE, DEAD, JOINING,
                                    MembershipManager)
 from repro.core.netsim import NIC, DeviceSim, Link, SimClock
 from repro.core.placement import (PinnedPolicy, PlacementEngine,
                                   make_placement_policy)
-from repro.core.scheduler import DeviceScheduler, make_policy
+from repro.core.admission import (AdmissionController, AdmissionRejected,
+                                  DEGRADE, REJECT)
+from repro.core.scheduler import (DeviceScheduler, make_policy,
+                                  validate_scheduler_opts)
 from repro.core.store import BufferStore, DIGEST_BYTES, content_digest
 from repro.core import trace as trace_mod
 from repro.core.transport import (make_transport, wire_scale, scale_chunks,
     CLIENT_SUBMIT, CLIENT_REAP, CMD_BYTES, DISPATCH, COMPLETE_WRITE)
 
 log = logging.getLogger(__name__)
+
+# residual-laxity base for deadline-less commands under a preemptive
+# scheduler: never tighter than anything, so they always yield
+_INF = float("inf")
 
 
 @dataclasses.dataclass
@@ -156,7 +163,8 @@ class ServerHost:
                         for d in spec.devices}
         self.schedulers = {
             name: DeviceScheduler(make_policy(cluster.scheduler_policy,
-                                              cluster.scheduler_quantum))
+                                              cluster.scheduler_quantum,
+                                              cluster.scheduler_opts))
             for name in self.devices}
         # interned device tables: index-aligned lists + name -> index,
         # so the dispatch hot path replaces two string-dict lookups per
@@ -195,7 +203,13 @@ class Cluster:
     links, and NICs are contended across all of them.
 
     ``scheduler`` picks the cross-session device policy (``'fifo'`` |
-    ``'drr'``); ``nic_bandwidth`` (B/s) enables the shared-NIC egress
+    ``'drr'`` | ``'edf'`` | ``'llf'``, DESIGN.md §4/§10) and
+    ``scheduler_opts`` its validated per-policy knobs ({'quantum'} for
+    drr, {'chunk'} for llf; ``scheduler_quantum`` is the legacy spelling
+    of the drr knob); ``admission`` enables SLO admission control
+    (True for defaults, a dict of ``AdmissionController`` knobs, or a
+    prebuilt controller — None/False keeps every tenant unscreened);
+    ``nic_bandwidth`` (B/s) enables the shared-NIC egress
     model for every host and ``nic_ingress_bandwidth`` its receive-side
     mirror (None keeps the pre-NIC independent-link behavior on that
     side); ``placement`` picks the cluster-wide kernel placement policy
@@ -211,11 +225,13 @@ class Cluster:
                  svm: bool = False,
                  scheduler: str = "fifo",
                  scheduler_quantum: Optional[float] = None,
+                 scheduler_opts: Optional[dict] = None,
                  nic_bandwidth: Optional[float] = None,
                  nic_ingress_bandwidth: Optional[float] = None,
                  store: bool = False,
                  store_capacity: Optional[float] = None,
                  placement: str = "pinned",
+                 admission=None,
                  trace=None):
         self.clock = SimClock()
         # observability plane (DESIGN.md §9): ``trace`` accepts a Tracer
@@ -241,6 +257,16 @@ class Cluster:
         self.peer_transport = make_transport(peer_transport, svm)
         self.scheduler_policy = scheduler
         self.scheduler_quantum = scheduler_quantum
+        # satellite fix (ISSUE 9): per-policy knobs are constructor
+        # arguments, validated eagerly — no more monkeypatching module
+        # constants. The legacy scheduler_quantum spelling stays valid
+        # but may not conflict with the explicit knob.
+        opts = validate_scheduler_opts(scheduler, scheduler_opts)
+        if scheduler_quantum is not None and "quantum" in opts:
+            raise ValueError(
+                "pass either scheduler_quantum or "
+                "scheduler_opts['quantum'], not both")
+        self.scheduler_opts = opts
         self.nic_bandwidth = nic_bandwidth
         self.nic_ingress_bandwidth = nic_ingress_bandwidth
         # content-addressed cross-tenant buffer store (DESIGN.md §5):
@@ -273,6 +299,17 @@ class Cluster:
         self.membership = MembershipManager(self)
         for name in self.hosts:
             self.membership.register(name)
+        # SLO admission control (DESIGN.md §10): screens tenants that
+        # declare slo_ms at attach time. Off (None) by default — an
+        # admission-less cluster admits everything, bit-exactly as
+        # before.
+        if admission is None or admission is False:
+            self.admission = None
+        elif isinstance(admission, AdmissionController):
+            self.admission = admission
+        else:
+            self.admission = AdmissionController(
+                self, None if admission is True else admission)
 
     # ---- membership verbs (delegates to the MembershipManager) ----
     def join_server(self, spec: ServerSpec, at: Optional[float] = None,
@@ -326,6 +363,7 @@ class Cluster:
                             for d, dev in host.devices.items()},
             "scheduler": {f"{h}/{d}": {"policy": sch.policy.name,
                                        "dispatched": sch.dispatched,
+                                       "preempted": sch.preempted,
                                        "queue_peak": sch.queue_peak,
                                        "queued_seconds":
                                            sch.queued_seconds()}
@@ -341,11 +379,13 @@ class Cluster:
             "nic_in_busy": {h: (host.nic_in.busy_time
                                 if host.nic_in else 0.0)
                             for h, host in self.hosts.items()},
-            "peer_link_bytes": {f"{a}-{b}": l.bytes_sent
-                                for (a, b), l in self.p_links.items()},
+            "peer_link_bytes": {f"{a}-{b}": lk.bytes_sent
+                                for (a, b), lk in self.p_links.items()},
             "store": self.store.stats() if self.store is not None else None,
             "placement": self.placement.stats(),
             "membership": self.membership.stats(),
+            "admission": (self.admission.stats()
+                          if self.admission is not None else None),
         }
 
 
@@ -547,6 +587,12 @@ class ServerSim:
             # deps resolved, entering the device run queue: the one
             # lifecycle stamp the Event itself does not carry
             tr.cmd_ready(ev, self.rt.clock.now, self._tlabel, dname, cost)
+        sch = host.scheduler_list[dev_idx]
+        if sch.preempt_chunk is not None:
+            # preemptive policy (llf, DESIGN.md §10): dispatch in
+            # chunk-sized slices with preemption checks at the seams
+            self._execute_preemptible(ev, dev, dname, sch, cost)
+            return
 
         def run(release):
             if ev.status == ERROR:
@@ -587,8 +633,92 @@ class ServerSim:
 
         # the (event, device) tag lets a drain requeue scheduled-but-
         # unstarted commands without ever firing their run closures
-        host.scheduler_list[dev_idx].submit(self, self.rt.weight, cost, run,
-                                            (ev, dname))
+        sch.submit(self, self.rt.weight, cost, run, (ev, dname),
+                   ev.deadline)
+
+    def _execute_preemptible(self, ev: Event, dev, dname: str, sch,
+                             cost: float):
+        """Chunked dispatch for preemptive policies (DESIGN.md §10).
+
+        The kernel runs in ``preempt_chunk``-sized device slices; after
+        each slice the scheduler is asked whether a queued command's
+        laxity beats the running command's residual laxity
+        (``deadline − remaining``). On preemption the remainder is
+        requeued at its residual cost *before* the device is released,
+        so the dispatcher's next pop compares remainder and preemptor
+        head-to-head. The ``run`` closure may therefore be dispatched
+        several times — once per resumption — but the outputs are
+        written and the event completed exactly once, on the final
+        slice; a drain that sweeps a preempted remainder requeues the
+        whole command elsewhere via its (event, device) tag, same as
+        any queued entry."""
+        cmd = ev.command
+        deadline = ev.deadline
+        # residual-laxity base: a deadline-less command preempts never
+        # and yields always (key inf), matching its queue priority
+        key_base = deadline if deadline is not None else _INF
+        chunk = sch.preempt_chunk
+        weight = self.rt.weight
+        state = [cost]                # remaining device-seconds
+
+        def run(release):
+            if ev.status == ERROR:
+                release()
+                return
+            ev.status = RUNNING
+            slice_next(release)
+
+        def slice_next(release):
+            remaining = state[0]
+            this = remaining if remaining <= chunk else chunk
+
+            def slice_done():
+                if ev.status == ERROR:
+                    # crashed/detached mid-kernel: outputs unwritten,
+                    # completion void, device freed
+                    release()
+                    return
+                left = state[0] - this
+                state[0] = left
+                if left <= 0.0:
+                    self._finish_exec(ev)
+                    release()
+                    return
+                if sch.should_preempt(key_base - left):
+                    sch.requeue_preempted(self, weight, left, run,
+                                          (ev, dname), deadline)
+                    release()
+                    return
+                slice_next(release)
+
+            t0, _ = dev.execute(this, slice_done)
+            if ev.t_start == 0.0:
+                ev.t_start = t0   # first slice only; resumes keep it
+
+        sch.submit(self, weight, cost, run, (ev, dname), deadline)
+
+    def _finish_exec(self, ev: Event):
+        """Final-slice completion for the preemptible path: write the
+        outputs and complete the event (the non-preemptive path keeps
+        this logic inline in its ``done`` closure)."""
+        cmd = ev.command
+        if isinstance(cmd, C.NDRangeKernel):
+            if cmd.fn is not None:
+                ins = [b.data for b in cmd.inputs]
+                outs = cmd.fn(*ins)
+                if not isinstance(outs, (tuple, list)):
+                    outs = (outs,)
+                for b, arr in zip(cmd.outputs, outs):
+                    b.set_data(np.asarray(arr), self.name)
+            else:
+                for b in cmd.outputs:
+                    b.invalidate_except(self.name)
+                    b.valid_on = {self.name}
+        else:
+            for b in getattr(cmd, "outputs", ()):
+                b.invalidate_except(self.name)
+                b.valid_on = {self.name}
+        self._complete(ev)
 
     def _complete(self, ev: Event):
         if ev.status == ERROR:
@@ -657,22 +787,47 @@ class ClientRuntime:
                  cluster: Optional[Cluster] = None,
                  name: Optional[str] = None,
                  weight: float = 1.0,
+                 slo_ms: Optional[float] = None,
+                 slo_probe: Optional[dict] = None,
                  replay_window: int = 64,
                  reconnect_retries: int = 4,
                  reconnect_backoff: float = 2e-3,
                  scheduler: Optional[str] = None,
                  scheduler_quantum: Optional[float] = None,
+                 scheduler_opts: Optional[dict] = None,
                  nic_bandwidth: Optional[float] = None,
                  nic_ingress_bandwidth: Optional[float] = None,
                  store: Optional[bool] = None,
                  store_capacity: Optional[float] = None,
                  placement: Optional[str] = None,
+                 admission=None,
                  trace=None):
         if completion_routing not in ("subscription", "broadcast"):
             raise ValueError(f"unknown completion_routing "
                              f"{completion_routing!r}")
         if not weight > 0.0:
             raise ValueError(f"weight must be positive, got {weight!r}")
+        # per-tenant latency target (DESIGN.md §10): every command this
+        # tenant enqueues carries the absolute deadline
+        # ``t_queued + slo_ms``; deadline-aware schedulers order by it,
+        # admission control screens against it, and the client-ack path
+        # scores violations against it. None = no target (bit-exact
+        # pre-SLO behavior).
+        if slo_ms is not None and not slo_ms > 0.0:
+            raise ValueError(f"slo_ms must be positive, got {slo_ms!r}")
+        if slo_probe is not None:
+            if slo_ms is None:
+                raise ValueError("slo_probe requires slo_ms")
+            unknown = sorted(set(slo_probe) - {"cost_s", "nbytes"})
+            if unknown:
+                raise ValueError(f"unknown slo_probe keys: {unknown} "
+                                 f"(allowed: ['cost_s', 'nbytes'])")
+            for k, v in slo_probe.items():
+                if isinstance(v, bool) or not isinstance(v, (int, float)) \
+                        or v < 0:
+                    raise ValueError(
+                        f"slo_probe[{k!r}] must be a non-negative "
+                        f"number, got {v!r}")
         if cluster is None:
             if servers is None:
                 raise ValueError("pass server specs or an existing cluster")
@@ -683,11 +838,13 @@ class ClientRuntime:
                               peer_transport=peer_transport or transport,
                               svm=svm, scheduler=scheduler or "fifo",
                               scheduler_quantum=scheduler_quantum,
+                              scheduler_opts=scheduler_opts,
                               nic_bandwidth=nic_bandwidth,
                               nic_ingress_bandwidth=nic_ingress_bandwidth,
                               store=bool(store),
                               store_capacity=store_capacity,
                               placement=placement or "pinned",
+                              admission=admission,
                               trace=trace)
             self._placement_policy = None   # cluster default covers it
         else:
@@ -697,10 +854,12 @@ class ClientRuntime:
                        "peer_transport": peer_transport,
                        "scheduler": scheduler,
                        "scheduler_quantum": scheduler_quantum,
+                       "scheduler_opts": scheduler_opts,
                        "nic_bandwidth": nic_bandwidth,
                        "nic_ingress_bandwidth": nic_ingress_bandwidth,
                        "store": store,
                        "store_capacity": store_capacity,
+                       "admission": admission,
                        "trace": trace}
             bad = [k for k, v in ignored.items() if v is not None]
             if bad:
@@ -821,6 +980,35 @@ class ClientRuntime:
         self.dedup_hits = 0                   # transfers served by a replica
         self.dedup_bytes_saved = 0.0          # payload bytes never sent
         self.detached = False                 # tenant lifecycle (detach())
+        # SLO plumbing (DESIGN.md §10). ``_slo_s`` is the effective
+        # per-command budget in seconds (None = no target: the deadline
+        # stamp, the reap-time scoring, and the admission feedback are
+        # all skipped behind one load + branch). Admission screening
+        # happens here — after the links/sessions exist (the probe math
+        # reads them) but before the handshake spends simulated time —
+        # and may degrade the budget or reject the tenant outright.
+        self.slo_ms = slo_ms                  # requested target (ms)
+        self._slo_s = slo_ms * 1e-3 if slo_ms is not None else None
+        self._slo_probe = dict(slo_probe) if slo_probe else None
+        self._slo_class = (f"{slo_ms:g}ms" if slo_ms is not None
+                           else None)
+        self.admission = None                 # AdmissionDecision or None
+        self.slo_commands = 0                 # completions scored
+        self.slo_violations = 0               # ... that missed deadline
+        ctrl = cluster.admission
+        if ctrl is not None and self._slo_s is not None:
+            decision = ctrl.request(self)
+            self.admission = decision
+            if decision.status == REJECT:
+                # leave no residue on the shared cluster: the sessions
+                # and links built above were never handshaken and spend
+                # no simulated time; only the client list saw us
+                cluster.clients.remove(self)
+                self.detached = True
+                raise AdmissionRejected(self.name, decision)
+            if decision.status == DEGRADE:
+                self._slo_s = decision.slo_s
+                self._slo_class = f"{decision.slo_s * 1e3:g}ms"
         # connect (handshake: rtt + session id assignment) — run the
         # clock just far enough that all of THIS client's sessions are
         # established, as clCreateContext would block. A full drain here
@@ -1057,6 +1245,9 @@ class ClientRuntime:
     # ---- event lifecycle ----
     def _register_event(self, ev: Event) -> Event:
         ev.t_queued = self.clock.now
+        slo = self._slo_s
+        if slo is not None:         # deadline stamp (DESIGN.md §10)
+            ev.deadline = ev.t_queued + slo
         ev.retain()                 # client hold until completion observed
         ev.on_retire = self._retire
         self.events[ev.id] = ev
@@ -1069,6 +1260,9 @@ class ClientRuntime:
         # _register_event, inlined (one enqueue-path call per command)
         ev = Event(command=cmd, server=server)
         ev.t_queued = self.clock.now
+        slo = self._slo_s
+        if slo is not None:         # deadline stamp (DESIGN.md §10)
+            ev.deadline = ev.t_queued + slo
         ev._refs += 1               # client hold until completion observed
         ev.on_retire = self._retire
         self.events[ev.id] = ev
@@ -1968,6 +2162,26 @@ class ClientRuntime:
 
     def _client_reap2(self, ev: Event):
         ev.t_client_ack = self.clock.now
+        slo = self._slo_s
+        if slo is not None:
+            # SLO scoring (DESIGN.md §10): client-observed end-to-end
+            # latency vs the tenant's effective budget. Feeds the
+            # admission controller's windowed per-class histograms and,
+            # when traced, the violation instants.
+            latency = ev.t_client_ack - ev.t_queued
+            violated = latency > slo
+            self.slo_commands += 1
+            if violated:
+                self.slo_violations += 1
+            ctrl = self.cluster.admission
+            if ctrl is not None:
+                ctrl.observe(self._slo_class, ev.t_client_ack, latency,
+                             violated)
+            if violated:
+                tr = self._trace
+                if tr is not None:
+                    tr.slo_violation(ev.t_client_ack, self._tlabel,
+                                     ev.id, latency, slo)
         if self.scheduling == "client":
             # SnuCL-like: client forwards resolution to the other servers
             if self.completion_routing == "subscription":
@@ -2225,10 +2439,10 @@ class ClientRuntime:
         # same numbers); the remaining keys are per-client
         return {
             "time": self.clock.now,
-            "client_link_bytes": {s: l.bytes_sent
-                                  for s, l in self.c_links.items()},
-            "peer_link_bytes": {f"{a}-{b}": l.bytes_sent
-                                for (a, b), l in self.p_links.items()},
+            "client_link_bytes": {s: lk.bytes_sent
+                                  for s, lk in self.c_links.items()},
+            "peer_link_bytes": {f"{a}-{b}": lk.bytes_sent
+                                for (a, b), lk in self.p_links.items()},
             "device_busy": {f"{s}/{d}": dev.busy_time
                             for s, srv in self.servers.items()
                             for d, dev in srv.devices.items()},
@@ -2255,6 +2469,17 @@ class ClientRuntime:
             "dedup_hits": self.dedup_hits,
             "dedup_bytes_saved": self.dedup_bytes_saved,
             "detached": self.detached,
+            # SLO scoreboard (DESIGN.md §10)
+            "slo_ms": self.slo_ms,
+            "slo_effective_ms": (self._slo_s * 1e3
+                                 if self._slo_s is not None else None),
+            "slo_commands": self.slo_commands,
+            "slo_violations": self.slo_violations,
+            "slo_violation_rate": (self.slo_violations
+                                   / self.slo_commands
+                                   if self.slo_commands else 0.0),
+            "admission": (self.admission.status
+                          if self.admission is not None else None),
             # placement scoreboard (DESIGN.md §6) — cluster-wide, like
             # peer_link_bytes: decisions across every attached tenant
             "placement": self.cluster.placement.stats(),

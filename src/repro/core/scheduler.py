@@ -22,25 +22,56 @@ one command at a time; *which* command is a policy decision:
   tenant is bounded by one rotation plus the in-service command's
   remainder instead of the straggler's whole backlog.
 
-The scheduler is non-preemptive — a dispatched kernel always runs to
-completion (matching OpenCL command semantics); fairness is decided at
-dispatch boundaries.
+Two deadline-aware policies ride the same interface (DESIGN.md §10).
+Commands enqueued by a tenant with a latency target
+(``ClientRuntime(slo_ms=)``) carry an absolute deadline; commands
+without one sort after every deadline-carrying command, FIFO among
+themselves:
+
+* ``edf`` — earliest deadline first. Non-preemptive like fifo/drr:
+  fairness-free, purely deadline-ordered dispatch.
+* ``llf`` — least laxity first, *with chunk-granularity preemption*.
+  The queue orders by laxity (deadline − now − remaining cost); since
+  ``now`` is common to every comparison the key is the static
+  ``deadline − cost``. A dispatched kernel runs in ``chunk``-sized
+  slices, and at each chunk boundary the runtime asks
+  ``should_preempt``: if a queued command's laxity is strictly tighter
+  than the running command's residual laxity, the remainder is requeued
+  at its residual cost and the tighter command takes the device.
+
+fifo/drr are and stay non-preemptive — a dispatched kernel always runs
+to completion (matching OpenCL command semantics); fairness is decided
+at dispatch boundaries, and their timestamp streams are bit-identical
+to the pre-SLO runtime when no tenant declares an SLO.
 
 HetMEC (arXiv:1901.09307) frames the cross-tenant assignment problem
 this policy layer plugs into; DRR is the classic O(1)-per-decision
-answer for latency-bounded fair sharing of one serial resource.
+answer for latency-bounded fair sharing of one serial resource, and
+"Latency and Reliability-Aware Task Offloading" (arXiv:1710.00590)
+motivates the deadline/tail-constraint framing EDF/LLF serve.
 """
 from __future__ import annotations
 
 import math
 from collections import deque
+from heapq import heapify, heappop, heappush
 from typing import Callable, Optional
 
 # Default DRR quantum (device-seconds per visit). Roughly one "frame
 # slice" of GPU time: large enough that millisecond kernels run on their
 # first visit, small enough that a tenant queueing tens-of-millisecond
 # kernels cannot hold the device for more than ~one of them per round.
+# Overridable per cluster via Cluster(scheduler_opts={"quantum": ...}).
 DEFAULT_QUANTUM = 2e-3
+
+# Default LLF preemption chunk (device-seconds between preemption
+# checks). A quarter of the quantum: fine enough that a millisecond-SLO
+# command waits at most ~0.5 ms behind a bulk kernel, coarse enough
+# that a 10 ms kernel costs only ~20 slice callbacks. Overridable via
+# Cluster(scheduler_opts={"chunk": ...}).
+DEFAULT_PREEMPT_CHUNK = 5e-4
+
+_INF = float("inf")
 
 
 def _intern(tenant):
@@ -57,6 +88,7 @@ class FIFOPolicy:
     """Single arrival-order queue across every session (baseline)."""
 
     name = "fifo"
+    preempt_chunk = None             # deadline-blind: never preempts
     __slots__ = ("_q", "_cost")
 
     def __init__(self):
@@ -68,7 +100,7 @@ class FIFOPolicy:
         self._cost = 0.0              # queued device-seconds
 
     def push(self, tenant, weight: float, cost: float, run: Callable,
-             tag=None):
+             tag=None, deadline=None):
         self._q.append((_intern(tenant), tenant, cost, run, tag))
         self._cost += cost
 
@@ -81,6 +113,9 @@ class FIFOPolicy:
 
     def queued_seconds(self) -> float:
         return self._cost
+
+    def queued_slo_seconds(self) -> float:
+        return 0.0                   # deadline-blind: nothing tracked
 
     def remove(self, tenant) -> int:
         """Drop every queued command of ``tenant`` (detach); returns the
@@ -119,6 +154,7 @@ class DRRPolicy:
     """
 
     name = "drr"
+    preempt_chunk = None             # deadline-blind: never preempts
     __slots__ = ("quantum", "_queues", "_weights", "_deficit", "_ring",
                  "_granted", "_cost", "_tenants")
 
@@ -140,7 +176,7 @@ class DRRPolicy:
         self._tenants: dict = {}      # skey -> tenant object
 
     def push(self, tenant, weight: float, cost: float, run: Callable,
-             tag=None):
+             tag=None, deadline=None):
         key = _intern(tenant)
         self._tenants[key] = tenant
         self._weights[key] = weight
@@ -159,6 +195,9 @@ class DRRPolicy:
 
     def queued_seconds(self) -> float:
         return self._cost
+
+    def queued_slo_seconds(self) -> float:
+        return 0.0                   # deadline-blind: nothing tracked
 
     def pop(self) -> Optional[Callable]:
         ring = self._ring
@@ -247,12 +286,185 @@ class DRRPolicy:
         return sum(len(q) for q in self._queues.values())
 
 
-def make_policy(kind: str, quantum: Optional[float] = None):
+class _DeadlineHeapPolicy:
+    """Shared machinery for the deadline-ordered policies (EDF/LLF): a
+    binary heap keyed by a per-command priority derived from the
+    absolute deadline, with commands lacking a deadline keyed at +inf —
+    strictly after every SLO command, FIFO among themselves via the
+    monotone sequence number. ``_slo_cost`` tracks the queued
+    device-seconds belonging to deadline-carrying commands, the
+    laxity-aware placement tie-break probe (DESIGN.md §10)."""
+
+    __slots__ = ("_heap", "_cost", "_slo_cost", "_seq")
+
+    def __init__(self):
+        # (key, seq, skey, tenant, cost, run, tag, deadline); seq is
+        # unique so tuple comparison never reaches the tenant object
+        self._heap: list = []
+        self._cost = 0.0             # queued device-seconds, all
+        self._slo_cost = 0.0         # queued device-seconds, SLO only
+        self._seq = 0
+
+    @staticmethod
+    def _key(cost: float, deadline: Optional[float]) -> float:
+        raise NotImplementedError
+
+    def push(self, tenant, weight: float, cost: float, run: Callable,
+             tag=None, deadline=None):
+        self._seq += 1
+        heappush(self._heap, (self._key(cost, deadline), self._seq,
+                              _intern(tenant), tenant, cost, run, tag,
+                              deadline))
+        self._cost += cost
+        if deadline is not None:
+            self._slo_cost += cost
+
+    def pop(self) -> Optional[Callable]:
+        if not self._heap:
+            return None
+        entry = heappop(self._heap)
+        cost, run = entry[4], entry[5]
+        self._cost -= cost
+        if entry[7] is not None:
+            self._slo_cost -= cost
+        return run
+
+    def min_key(self) -> float:
+        """Tightest queued priority key, +inf when empty — the
+        preemption comparison point (``DeviceScheduler.should_preempt``).
+        """
+        heap = self._heap
+        return heap[0][0] if heap else _INF
+
+    def queued_seconds(self) -> float:
+        return self._cost
+
+    def queued_slo_seconds(self) -> float:
+        return self._slo_cost
+
+    def remove(self, tenant) -> int:
+        """Drop every queued command of ``tenant`` (detach); returns the
+        number removed. O(n) rebuild — detach is cold."""
+        key = _intern(tenant)
+        kept = [e for e in self._heap if e[2] != key]
+        removed = len(self._heap) - len(kept)
+        if removed:
+            heapify(kept)
+            self._heap = kept
+            self._cost = sum(e[4] for e in kept)
+            self._slo_cost = sum(e[4] for e in kept
+                                 if e[7] is not None)
+        return removed
+
+    def drain_queued(self) -> list:
+        """Empty the heap, returning ``(tenant, tag)`` per entry in
+        priority order (server drain: requeued elsewhere, so the ``run``
+        closures must never fire here). A preempted remainder that was
+        requeued drains like any queued entry — its tag still names the
+        original event, so the survivor restarts it from scratch and
+        completes it exactly once."""
+        out = [(e[3], e[6]) for e in sorted(self._heap)]
+        self._heap.clear()
+        self._cost = 0.0
+        self._slo_cost = 0.0
+        return out
+
+    def __len__(self):
+        return len(self._heap)
+
+
+class EDFPolicy(_DeadlineHeapPolicy):
+    """Earliest deadline first, non-preemptive: ready commands dispatch
+    in absolute-deadline order; a dispatched kernel runs to completion.
+    """
+
+    name = "edf"
+    preempt_chunk = None
+    __slots__ = ()
+
+    @staticmethod
+    def _key(cost: float, deadline: Optional[float]) -> float:
+        return _INF if deadline is None else deadline
+
+
+class LLFPolicy(_DeadlineHeapPolicy):
+    """Least laxity first with chunk-granularity preemption.
+
+    Laxity of a queued command at time t is ``deadline − t − cost``;
+    t is common to every pairwise comparison, so the queue orders by
+    the static key ``deadline − cost``. A preempted remainder re-enters
+    with its residual cost — i.e. a fresh, *looser* key than the
+    preemptor's, exactly the laxity it has left."""
+
+    name = "llf"
+    __slots__ = ("preempt_chunk",)
+
+    def __init__(self, chunk: float = DEFAULT_PREEMPT_CHUNK):
+        if not chunk > 0.0:
+            # zero would slice forever without advancing sim time
+            raise ValueError(
+                f"preemption chunk must be positive, got {chunk!r}")
+        super().__init__()
+        self.preempt_chunk = chunk
+
+    @staticmethod
+    def _key(cost: float, deadline: Optional[float]) -> float:
+        # inf − finite cost is still inf: no-deadline commands sort
+        # last, FIFO among themselves (never inf − inf, so never NaN)
+        return _INF if deadline is None else deadline - cost
+
+
+# Per-policy tuning knobs accepted by Cluster(scheduler_opts=); every
+# value must be a positive number. make_policy validates eagerly so a
+# typo'd knob fails at cluster construction, not first dispatch.
+_POLICY_KNOBS = {
+    "fifo": frozenset(),
+    "drr": frozenset(("quantum",)),
+    "edf": frozenset(),
+    "llf": frozenset(("chunk",)),
+}
+
+
+def validate_scheduler_opts(kind: str, opts: Optional[dict]) -> dict:
+    """Validate ``scheduler_opts`` for policy ``kind`` and return a
+    normalized copy. Raises ValueError on an unknown policy, an unknown
+    knob, or a non-positive/non-numeric value."""
+    if kind not in _POLICY_KNOBS:
+        raise ValueError(f"unknown scheduler policy {kind!r}")
+    if opts is None:
+        return {}
+    if not isinstance(opts, dict):
+        raise ValueError(
+            f"scheduler_opts must be a dict, got {type(opts).__name__}")
+    unknown = sorted(set(opts) - _POLICY_KNOBS[kind])
+    if unknown:
+        raise ValueError(
+            f"unknown scheduler_opts for {kind!r}: {unknown} "
+            f"(allowed: {sorted(_POLICY_KNOBS[kind])})")
+    for k, v in opts.items():
+        if isinstance(v, bool) or not isinstance(v, (int, float)) \
+                or not v > 0.0:
+            raise ValueError(
+                f"scheduler_opts[{k!r}] must be a positive number, "
+                f"got {v!r}")
+    return dict(opts)
+
+
+def make_policy(kind: str, quantum: Optional[float] = None,
+                opts: Optional[dict] = None):
+    """Build a policy instance. ``quantum`` is the legacy spelling of
+    ``opts['quantum']`` (kept for Cluster(scheduler_quantum=) callers;
+    ignored by quantum-less policies, as before)."""
+    opts = validate_scheduler_opts(kind, opts)
     if kind == "fifo":
         return FIFOPolicy()
     if kind == "drr":
-        return DRRPolicy(quantum if quantum is not None
-                         else DEFAULT_QUANTUM)
+        q = opts.get("quantum", quantum)
+        return DRRPolicy(q if q is not None else DEFAULT_QUANTUM)
+    if kind == "edf":
+        return EDFPolicy()
+    if kind == "llf":
+        return LLFPolicy(opts.get("chunk", DEFAULT_PREEMPT_CHUNK))
     raise ValueError(f"unknown scheduler policy {kind!r}")
 
 
@@ -265,18 +477,29 @@ class DeviceScheduler:
     once, when the device finishes the command — that hands the device
     to the next queued command. Dispatch is work-conserving: the device
     only idles when no session has queued work.
+
+    ``preempt_chunk`` (copied from the policy; None for non-preemptive
+    policies) tells the runtime to dispatch kernels in chunk-sized
+    slices and poll ``should_preempt`` at each boundary; a preempted
+    remainder comes back through ``requeue_preempted`` *before* the
+    dispatcher's ``release`` fires, so ``_dispatch`` pops whichever of
+    {remainder, preemptor} is tighter — the remainder never skips the
+    queue (DESIGN.md §10).
     """
 
-    __slots__ = ("policy", "_busy", "dispatched", "queue_peak")
+    __slots__ = ("policy", "_busy", "dispatched", "queue_peak",
+                 "preempt_chunk", "preempted")
 
     def __init__(self, policy):
         self.policy = policy
         self._busy = False
         self.dispatched = 0          # commands run through this queue
         self.queue_peak = 0          # max commands ever waiting
+        self.preempt_chunk = policy.preempt_chunk
+        self.preempted = 0           # chunk-boundary preemptions
 
     def submit(self, tenant, weight: float, cost: float, run: Callable,
-               tag=None):
+               tag=None, deadline=None):
         policy = self.policy
         if not self._busy and type(policy) is FIFOPolicy and \
                 not policy._q and policy._cost == 0.0:
@@ -294,12 +517,32 @@ class DeviceScheduler:
             self.dispatched += 1
             run(self._release)
             return
-        policy.push(tenant, weight, cost, run, tag)
+        policy.push(tenant, weight, cost, run, tag, deadline)
         backlog = len(policy)
         if backlog > self.queue_peak:
             self.queue_peak = backlog
         if not self._busy:
             self._dispatch()
+
+    def should_preempt(self, running_key: float) -> bool:
+        """Chunk-boundary poll: does some queued command hold a strictly
+        tighter priority key than the running command's residual key
+        (``deadline − remaining``, i.e. its laxity now)? Strict: equal
+        laxity never preempts, so a lone command is never preempted by
+        its own arrival pattern and ties keep the device (no thrash)."""
+        return self.policy.min_key() < running_key
+
+    def requeue_preempted(self, tenant, weight: float, remaining: float,
+                          run: Callable, tag=None, deadline=None):
+        """Put a preempted remainder back in the queue at its residual
+        cost. The caller invokes the dispatcher's ``release`` *after*
+        this returns, so the very next pop compares the remainder
+        against the preemptor on equal footing."""
+        self.preempted += 1
+        self.policy.push(tenant, weight, remaining, run, tag, deadline)
+        backlog = len(self.policy)
+        if backlog > self.queue_peak:
+            self.queue_peak = backlog
 
     def discard(self, tenant) -> int:
         """Tenant lifecycle (detach): drop every command ``tenant`` still
@@ -323,6 +566,12 @@ class DeviceScheduler:
         own busy-until timeline, which the placement engine reads
         alongside this probe."""
         return self.policy.queued_seconds()
+
+    def queued_slo_seconds(self) -> float:
+        """Deadline-carrying slice of ``queued_seconds`` (0.0 under
+        deadline-blind policies) — the laxity-aware placement tie-break
+        signal (DESIGN.md §10)."""
+        return self.policy.queued_slo_seconds()
 
     def _dispatch(self):
         run = self.policy.pop()

@@ -155,6 +155,21 @@ class MetricsRegistry:
             elif isinstance(v, (int, float)) and not isinstance(v, bool):
                 self.counters[name] = self.counters.get(name, 0) + v
 
+    def rate(self, metric: str, key: str = "",
+             t0: Optional[float] = None,
+             t1: Optional[float] = None) -> float:
+        """Windowed rate of a 0/1 sample stream: the fraction of samples
+        in ``[t0, t1)`` that are nonzero; 0.0 when no samples landed in
+        the window. Feeds the per-class SLO violation-rate gates
+        (DESIGN.md §10)."""
+        h = self._hists.get((metric, key))
+        if h is None:
+            return 0.0
+        vals = h._window(t0, t1)
+        if not vals:
+            return 0.0
+        return sum(1 for v in vals if v > 0.0) / len(vals)
+
     def summary(self, t0: Optional[float] = None,
                 t1: Optional[float] = None) -> dict:
         return {f"{m}[{k}]" if k else m: h.summary(t0, t1)
@@ -175,6 +190,7 @@ class Tracer:
         self.placements: list = []    # (t, tenant, name, chosen, policy)
         self.dedups: list = []        # (t, tenant, signed nbytes)
         self.faults: list = []        # (t, kind, target, detail)
+        self.slo: list = []           # (t, tenant, ev_id, latency, slo)
         self._clusters: list = []
 
     # ---- wiring ----
@@ -226,6 +242,13 @@ class Tracer:
     def fault(self, t: float, kind: str, target: str,
               detail: str = "") -> None:
         self.faults.append((t, kind, target, detail))
+
+    def slo_violation(self, t: float, tenant: str, ev_id: int,
+                      latency: float, slo: float) -> None:
+        """Client-ack hook (gated: only violations of a declared SLO
+        reach here): command ``ev_id`` finished ``latency`` seconds
+        after enqueue against an SLO of ``slo`` seconds."""
+        self.slo.append((t, tenant, ev_id, latency, slo))
 
     # ---- derived views ----
     @staticmethod
@@ -317,6 +340,11 @@ class Tracer:
         for kind, link, _tenant, t0, t1, nbytes, _e, _c in self.transfers:
             reg.observe("wire_time", link, t0, t1 - t0)
             reg.observe("wire_bytes", link, t0, nbytes)
+        for t, tenant, _eid, latency, slo in self.slo:
+            # lateness past the deadline, per tenant: the per-class
+            # violation *rates* live on the admission controller; this
+            # is the per-violation magnitude view
+            reg.observe("slo_lateness", tenant, t, latency - slo)
         for i, cluster in enumerate(self._clusters):
             pfx = f"c{i}" if len(self._clusters) > 1 else ""
             reg.ingest_stats(pfx, cluster.stats())
@@ -444,6 +472,17 @@ class Tracer:
                             "pid": p, "tid": tid(p, "store"),
                             "ts": t * us, "s": "t",
                             "args": {"bytes": nbytes}})
+        # SLO violations: instants on the tenant's own process so the
+        # breach lines up with the offending command track
+        for t, tenant, eid, latency, slo in self.slo:
+            p = pid("tenant", tenant)
+            ev_list.append({"ph": "i", "cat": "slo",
+                            "name": "slo_violation", "pid": p,
+                            "tid": tid(p, "slo"), "ts": t * us,
+                            "s": "t",
+                            "args": {"event": eid,
+                                     "latency_ms": latency * 1e3,
+                                     "slo_ms": slo * 1e3}})
         # fault markers: global instants so they cut across every track
         for t, kind, target, detail in self.faults:
             p = pid("cluster", "faults")

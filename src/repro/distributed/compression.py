@@ -13,7 +13,6 @@ the §Roofline collective term).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

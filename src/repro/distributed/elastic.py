@@ -15,7 +15,6 @@ recovery path implemented here:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 
@@ -57,7 +56,7 @@ def surviving_mesh(devices, pods_total: int, lost_pods: set,
 
 def remesh_state(state, new_ctx: MeshContext, param_specs_tree):
     """Re-shard a state pytree onto a new mesh context."""
-    from repro.models.specs import ParamSpec, is_spec
+    from repro.models.specs import is_spec
 
     def f(leaf, spec):
         sh = new_ctx.sharding(spec.axes, spec.shape)

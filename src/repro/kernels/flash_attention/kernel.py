@@ -84,8 +84,8 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     @pl.when(ki == n_kv_blocks - 1)
     def _finalize():
-        l = jnp.maximum(l_ref[:, :1], 1e-20)
-        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+        denom = jnp.maximum(l_ref[:, :1], 1e-20)
+        o_ref[...] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
 
 def flash_attention_fwd(

@@ -8,7 +8,7 @@ from typing import Optional
 import jax
 
 from repro.kernels.flash_attention.kernel import flash_attention_fwd
-from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.ref import attention_ref  # noqa: F401 (re-export)
 
 
 def _on_tpu() -> bool:

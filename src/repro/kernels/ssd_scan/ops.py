@@ -6,7 +6,7 @@ import functools
 import jax
 
 from repro.kernels.ssd_scan.kernel import ssd_scan
-from repro.kernels.ssd_scan.ref import ssd_ref
+from repro.kernels.ssd_scan.ref import ssd_ref  # noqa: F401 (re-export)
 
 
 def _on_tpu() -> bool:

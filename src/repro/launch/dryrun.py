@@ -180,7 +180,8 @@ def main():
                   f"t_coll={r['t_collective_s']:.4f}s bound={r['bottleneck']} "
                   f"useful={r['useful_ratio']:.3f} "
                   f"roofline={r['roofline_frac']:.3f} "
-                  f"mem/dev={(r['per_dev_bytes']['args']+r['per_dev_bytes']['temps'])/2**30:.2f}GiB",
+                  f"mem/dev="
+                  f"{(r['per_dev_bytes']['args'] + r['per_dev_bytes']['temps']) / 2 ** 30:.2f}GiB",
                   flush=True)
         except Exception as e:
             failures.append((arch, shape, repr(e)))

@@ -10,7 +10,6 @@ validates those lowerings). Example:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 
 import jax

@@ -27,7 +27,6 @@ Design notes
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Optional
 
@@ -112,7 +111,7 @@ def _flash_fwd(q, k, v, kv_len, *, causal, window, q_offset, softcap,
         a0 = vma_like(jnp.zeros((B, H, q_chunk, hd), jnp.float32), qb)
 
         def kv_step(carry, j):
-            m, l, acc = carry
+            m, lsum, acc = carry
             ki = lo + j
             start = jnp.clip(ki * kv_chunk, 0, Skp - kv_chunk)
             kb = jax.lax.dynamic_slice_in_dim(k, start, kv_chunk, axis=1)
@@ -129,15 +128,16 @@ def _flash_fwd(q, k, v, kv_len, *, causal, window, q_offset, softcap,
             p = jnp.exp(s - m_new[..., None])
             p = jnp.where(mask[:, None], p, 0.0)
             corr = jnp.exp(m - m_new)
-            l_new = l * corr + p.sum(axis=-1)
+            l_new = lsum * corr + p.sum(axis=-1)
             acc_new = acc * corr[..., None] + jnp.einsum(
                 "bhqc,bchd->bhqd", p, vb.astype(jnp.float32))
             return (m_new, l_new, acc_new), None
 
-        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+        (m, lsum, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
                                       jnp.arange(n_inner, dtype=jnp.int32))
-        out = (acc / jnp.maximum(l, 1e-20)[..., None]).astype(q.dtype)
-        lse = m + jnp.log(jnp.maximum(l, 1e-20))        # [B,H,qc]
+        out = (acc / jnp.maximum(lsum, 1e-20)[..., None]) \
+            .astype(q.dtype)
+        lse = m + jnp.log(jnp.maximum(lsum, 1e-20))     # [B,H,qc]
         return jnp.transpose(out, (0, 2, 1, 3)), lse
 
     outs, lses = jax.lax.map(lambda a: q_block(*a),

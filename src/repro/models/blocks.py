@@ -13,7 +13,7 @@ from repro.models import attention as attn_lib
 from repro.models.config import LayerKind, ModelConfig
 from repro.models.moe import moe_mlp
 from repro.models.nn import apply_rope, relu2, rms_norm, swiglu
-from repro.models.ssm import SSMCache, init_ssm_cache, mamba_mixer
+from repro.models.ssm import init_ssm_cache, mamba_mixer
 
 CACHE_AXES = ("batch", "kv_seq", "kv_heads", None)
 

@@ -20,7 +20,7 @@ Logical axis names (mapped to mesh axes by ``repro.distributed.sharding``):
 from __future__ import annotations
 
 import math
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -22,7 +22,6 @@ Cost conventions (documented in EXPERIMENTS.md §Roofline):
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from collections import defaultdict
 from typing import Optional

@@ -9,7 +9,7 @@ retires when all slots are done or the wave budget expires.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -4,7 +4,6 @@ straggler-aware step timing."""
 from __future__ import annotations
 
 import dataclasses
-import os
 import time
 from typing import Callable, Optional
 

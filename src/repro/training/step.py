@@ -8,8 +8,7 @@ difference between ~100 MB and ~4 GB of live activations per device.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

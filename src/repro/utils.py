@@ -1,9 +1,8 @@
 """Small shared utilities: pytree arithmetic, dtype policy, shape math."""
 from __future__ import annotations
 
-import math
 import os
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

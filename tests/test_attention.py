@@ -1,7 +1,5 @@
 """Blockwise flash attention (XLA path): fwd + custom-VJP bwd vs naive
 oracle, including a hypothesis property sweep."""
-import math
-
 import jax
 import jax.numpy as jnp
 import numpy as np

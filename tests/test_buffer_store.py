@@ -121,7 +121,7 @@ def _seed_two_tenants(cluster, nbytes=MiB):
 
 
 def peer_bytes(cluster):
-    return sum(l.bytes_sent for l in cluster.p_links.values())
+    return sum(lk.bytes_sent for lk in cluster.p_links.values())
 
 
 def test_migration_dedups_against_other_tenants_replica():

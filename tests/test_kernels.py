@@ -15,7 +15,7 @@ from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.ssd_scan.ops import ssd
 from repro.kernels.ssd_scan.ref import ssd_ref
 from repro.kernels.topk_compress.ops import compress, decompress
-from repro.kernels.topk_compress.ref import topk_pack_ref, unpack_ref
+from repro.kernels.topk_compress.ref import topk_pack_ref
 
 
 # ---------------- flash attention ----------------

@@ -6,10 +6,10 @@ import numpy as np
 import pytest
 
 from repro.core import (ClientRuntime, Cluster, DeviceSpec, LinkSpec,
-                        NIC, PlacementEngine, ServerSpec, SimClock,
+                        NIC, ServerSpec, SimClock,
                         make_placement_policy)
 from repro.core.netsim import Link
-from repro.core.scheduler import DRRPolicy, DeviceScheduler, FIFOPolicy
+from repro.core.scheduler import DRRPolicy, FIFOPolicy
 
 
 def mk_cluster(n=3, placement="pinned", nic=None, nic_in=None,

@@ -1,7 +1,6 @@
 """HLO cost-model unit tests on hand-built programs with known costs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.roofline import analyze_hlo
 from repro.roofline.hlo_cost import (parse_module, shape_bytes, shape_dims,

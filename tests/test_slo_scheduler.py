@@ -1,0 +1,379 @@
+"""SLO-aware scheduling and admission control (DESIGN.md §10): the EDF
+and LLF device-queue policies, chunk-granularity preemption, the
+no-SLO bit-identity guarantee for fifo/drr, and knob validation for
+``Cluster(scheduler_opts=)`` / ``Cluster(admission=)`` /
+``ClientRuntime(slo_ms=)``.
+
+Property tests run under hypothesis when installed and fall back to the
+deterministic sampler in tests/_hypothesis_stub.py otherwise."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # deterministic fallback, see _hypothesis_stub
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import ClientRuntime, Cluster, DeviceSpec, LinkSpec, \
+    ServerSpec
+from repro.core.admission import AdmissionController
+from repro.core.scheduler import (EDFPolicy, LLFPolicy,
+                                  validate_scheduler_opts)
+
+_INF = float("inf")
+
+
+# ---------------------------------------------------------------------------
+# policy-level properties
+
+
+def _random_stream(data, n_max=40):
+    """Draw a random push stream: (tenant, cost, deadline-or-None)."""
+    n = data.draw(st.integers(2, n_max), label="n")
+    out = []
+    for i in range(n):
+        tenant = f"t{data.draw(st.integers(0, 3), label='tenant')}"
+        cost = data.draw(st.integers(1, 50), label="cost") * 1e-4
+        if data.draw(st.booleans(), label="has_deadline"):
+            deadline = data.draw(st.integers(0, 1000),
+                                 label="deadline") * 1e-3
+        else:
+            deadline = None
+        out.append((tenant, cost, deadline))
+    return out
+
+
+def _drain_pops(policy):
+    """Pop everything, returning the labels in dispatch order."""
+    order = []
+    while True:
+        run = policy.pop()
+        if run is None:
+            return order
+        run(order)
+
+
+def _push_all(policy, stream):
+    for i, (tenant, cost, deadline) in enumerate(stream):
+        label = (i, tenant, cost, deadline)
+        policy.push(tenant, 1.0, cost,
+                    (lambda out, lb=label: out.append(lb)),
+                    tag=label, deadline=deadline)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_edf_pops_in_deadline_order_with_no_deadline_fifo_tail(data):
+    stream = _random_stream(data)
+    pol = EDFPolicy()
+    _push_all(pol, stream)
+    # cost accounting: total vs SLO-only slices
+    assert pol.queued_seconds() == pytest.approx(
+        sum(c for _, c, _ in stream))
+    assert pol.queued_slo_seconds() == pytest.approx(
+        sum(c for _, c, d in stream if d is not None))
+    order = _drain_pops(pol)
+    assert len(order) == len(stream)
+    deadlines = [d for _, _, _, d in order if d is not None]
+    tail = [i for i, _, _, d in order if d is None]
+    # every deadline-carrying command dispatches before any without one
+    first_tail = order.index(
+        next(e for e in order if e[3] is None)) if tail else len(order)
+    assert all(e[3] is not None for e in order[:first_tail])
+    assert all(e[3] is None for e in order[first_tail:])
+    # EDF: nondecreasing absolute deadline; ties broken by push order
+    assert deadlines == sorted(deadlines)
+    # deadline-less tail stays FIFO in push order
+    assert tail == sorted(tail)
+    assert pol.queued_seconds() == pytest.approx(0.0, abs=1e-12)
+    assert pol.queued_slo_seconds() == pytest.approx(0.0, abs=1e-12)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_llf_pops_in_laxity_order_and_remove_keeps_accounts(data):
+    stream = _random_stream(data)
+    pol = LLFPolicy(chunk=5e-4)
+    _push_all(pol, stream)
+    victim = f"t{data.draw(st.integers(0, 3), label='victim')}"
+    removed = pol.remove(victim)
+    kept = [(i, t, c, d) for i, (t, c, d) in enumerate(stream)
+            if t != victim]
+    assert removed == len(stream) - len(kept)
+    assert pol.queued_seconds() == pytest.approx(
+        sum(c for _, _, c, _ in kept))
+    assert pol.queued_slo_seconds() == pytest.approx(
+        sum(c for _, _, c, d in kept if d is not None))
+    order = _drain_pops(pol)
+    assert sorted(order) == sorted(kept)
+    # LLF: nondecreasing static laxity key (deadline − cost), with the
+    # deadline-less commands last FIFO among themselves
+    keys = [(_INF if d is None else d - c) for _, _, c, d in order]
+    assert keys == sorted(keys)
+    tail = [i for i, _, _, d in order if d is None]
+    assert tail == sorted(tail)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_deadline_heap_drain_returns_priority_order_and_resets(data):
+    stream = _random_stream(data, n_max=20)
+    pol = EDFPolicy()
+    _push_all(pol, stream)
+    drained = pol.drain_queued()
+    assert len(drained) == len(stream)
+    keys = [(_INF if tag[3] is None else tag[3]) for _, tag in drained]
+    assert keys == sorted(keys)
+    assert len(pol) == 0
+    assert pol.queued_seconds() == 0.0
+    assert pol.queued_slo_seconds() == 0.0
+    assert pol.pop() is None
+
+
+# ---------------------------------------------------------------------------
+# runtime integration
+
+FAST = LinkSpec(latency=20e-6, bandwidth=40e9 / 8)
+RADIO = LinkSpec(latency=61e-6, bandwidth=1e9 / 8)
+
+
+def mk_cluster(n=1, scheduler="fifo", scheduler_opts=None, admission=None):
+    return Cluster([ServerSpec(f"s{i}", [DeviceSpec("gpu0")])
+                    for i in range(n)],
+                   peer_link=FAST, peer_transport="tcp",
+                   scheduler=scheduler, scheduler_opts=scheduler_opts,
+                   admission=admission)
+
+
+def attach(cluster, **kw):
+    kw.setdefault("client_link", RADIO)
+    return ClientRuntime(cluster=cluster, **kw)
+
+
+def _preempted(cluster):
+    return sum(s.preempted for h in cluster.hosts.values()
+               for s in h.schedulers.values())
+
+
+def _enqueue_backlog(rt, n, duration):
+    buf = rt.create_buffer(64)
+    evs = [rt.enqueue_write("s0", buf, np.ones(16, np.float32))]
+    for _ in range(n):
+        evs.append(rt.enqueue_kernel("s0", fn=lambda x: x + 1.0,
+                                     inputs=[buf], outputs=[buf],
+                                     duration=duration,
+                                     wait_for=[evs[-1]]))
+    return buf, evs
+
+
+def test_edf_overtakes_best_effort_backlog():
+    """A deadline-carrying command jumps a deep best-effort queue under
+    edf but waits behind it under fifo."""
+    lat = {}
+    for policy in ("fifo", "edf"):
+        cluster = mk_cluster(scheduler=policy)
+        # six best-effort tenants (own sessions, so per-session command
+        # windows cannot pace the backlog away) stack up ~12 ms of
+        # device work before the SLO command lands mid-backlog
+        bes = [attach(cluster, name=f"be{i}") for i in range(6)]
+        slo = attach(cluster, name="slo", slo_ms=5.0)
+        be_evs = [rt.enqueue_kernel("s0", fn=None, duration=2e-3)
+                  for rt in bes]
+        slo_ev = []
+        cluster.clock.schedule_at(
+            1e-3, lambda: slo_ev.append(
+                slo.enqueue_kernel("s0", fn=None, duration=0.5e-3)))
+        cluster.run()
+        assert all(e.status == "complete" for e in be_evs + slo_ev)
+        lat[policy] = slo_ev[0].t_client_ack - slo_ev[0].t_queued
+    # fifo: behind the remaining ~11 ms of backlog; edf: behind at most
+    # the in-service kernel (non-preemptive) + its own cost
+    assert lat["fifo"] > 8e-3
+    assert lat["edf"] < 4e-3
+    assert lat["edf"] < lat["fifo"] / 3
+
+
+def test_llf_preempts_bulk_kernel_and_both_complete_exactly_once():
+    """A tight command preempts a running 20 ms bulk kernel at a chunk
+    boundary; the remainder requeues at residual cost and both events
+    complete exactly once with correct data."""
+    cluster = mk_cluster(scheduler="llf",
+                         scheduler_opts={"chunk": 0.5e-3})
+    be = attach(cluster, name="be")
+    slo = attach(cluster, name="slo", slo_ms=4.0)
+    bulk_buf, bulk_evs = _enqueue_backlog(be, 1, duration=20e-3)
+    sbuf = slo.create_buffer(64)
+    w = slo.enqueue_write("s0", sbuf, np.full(16, 3.0, np.float32))
+    ev = slo.enqueue_kernel("s0", fn=lambda x: x * 2.0, inputs=[sbuf],
+                            outputs=[sbuf], duration=1e-3,
+                            wait_for=[w])
+    cluster.run()
+    assert _preempted(cluster) >= 1
+    assert all(e.status == "complete" for e in bulk_evs + [w, ev])
+    # the SLO command did not wait for the 20 ms bulk remainder
+    assert ev.t_client_ack - ev.t_queued < 10e-3
+    np.testing.assert_array_equal(bulk_buf.data,
+                                  np.full(16, 2.0, np.float32))
+    np.testing.assert_array_equal(sbuf.data,
+                                  np.full(16, 6.0, np.float32))
+    # the write and the kernel are both scored against the 4 ms target
+    assert slo.slo_commands == 2 and slo.slo_violations == 0
+    # exactly-once: one completion per issued command, no duplicates
+    assert be.stats()["events_live"] == 0
+    assert slo.stats()["events_live"] == 0
+
+
+def test_llf_best_effort_only_traffic_never_preempts():
+    """Deadline-less commands all carry the +inf key; min_key() < inf
+    is never true, so best-effort-only traffic under llf runs sliced
+    but is never actually preempted (no thrash without SLO tenants)."""
+    cluster = mk_cluster(scheduler="llf",
+                         scheduler_opts={"chunk": 0.5e-3})
+    a = attach(cluster, name="a")
+    b = attach(cluster, name="b")
+    evs = [rt.enqueue_kernel("s0", fn=None, duration=2e-3)
+           for rt in (a, b, a, b, a)]
+    cluster.run()
+    assert all(e.status == "complete" for e in evs)
+    assert _preempted(cluster) == 0
+
+
+def _timestamp_log(evs):
+    return [(e.t_queued, e.t_submitted, e.t_start, e.t_end,
+             e.t_client_ack) for e in evs]
+
+
+@pytest.mark.parametrize("policy", ["fifo", "drr"])
+def test_no_slo_tenant_leaves_fifo_drr_timestamps_bit_identical(policy):
+    """fifo/drr clusters must produce bit-identical timestamp streams
+    whether a third idle tenant declares an SLO or not — declaring
+    ``slo_ms`` on a deadline-blind policy must be observationally free,
+    which is what keeps the pre-SLO baselines byte-for-byte valid."""
+    logs = []
+    for with_slo in (False, True):
+        cluster = mk_cluster(n=2, scheduler=policy)
+        a = attach(cluster, name="a")
+        b = attach(cluster, name="b")
+        attach(cluster, name="idle",
+               slo_ms=2.0 if with_slo else None)
+        evs = []
+        for rt, dur in ((a, 1.5e-3), (b, 0.7e-3)):
+            buf = rt.create_buffer(256)
+            w = rt.enqueue_write("s0", buf, np.ones(64, np.float32))
+            evs.append(w)
+            for _ in range(4):
+                evs.append(rt.enqueue_kernel(
+                    "s0", fn=None, duration=dur, wait_for=[evs[-1]]))
+        cluster.run()
+        assert all(e.status == "complete" for e in evs)
+        logs.append(_timestamp_log(evs))
+    assert logs[0] == logs[1]
+
+
+def test_edf_without_deadlines_matches_fifo_order():
+    """All-best-effort traffic under edf dispatches in arrival order —
+    the +inf key tail is FIFO, so switching the policy with no SLO
+    tenants attached changes nothing observable."""
+    logs = []
+    for policy in ("fifo", "edf"):
+        cluster = mk_cluster(scheduler=policy)
+        a = attach(cluster, name="a")
+        evs = [a.enqueue_kernel("s0", fn=None, duration=1e-3)
+               for _ in range(5)]
+        cluster.run()
+        logs.append(_timestamp_log(evs))
+    assert logs[0] == logs[1]
+
+
+# ---------------------------------------------------------------------------
+# knob validation
+
+
+def test_validate_scheduler_opts():
+    assert validate_scheduler_opts("drr", {"quantum": 1e-3}) \
+        == {"quantum": 1e-3}
+    assert validate_scheduler_opts("llf", None) == {}
+    with pytest.raises(ValueError, match="unknown scheduler policy"):
+        validate_scheduler_opts("lifo", None)
+    with pytest.raises(ValueError, match="unknown scheduler_opts"):
+        validate_scheduler_opts("edf", {"quantum": 1e-3})
+    with pytest.raises(ValueError, match="unknown scheduler_opts"):
+        validate_scheduler_opts("llf", {"chunks": 1e-3})
+    with pytest.raises(ValueError, match="positive number"):
+        validate_scheduler_opts("llf", {"chunk": 0.0})
+    with pytest.raises(ValueError, match="positive number"):
+        validate_scheduler_opts("drr", {"quantum": True})
+    with pytest.raises(ValueError, match="must be a dict"):
+        validate_scheduler_opts("drr", [("quantum", 1e-3)])
+
+
+def test_cluster_scheduler_opts_validation():
+    mk_cluster(scheduler="llf", scheduler_opts={"chunk": 1e-3})
+    with pytest.raises(ValueError):
+        mk_cluster(scheduler="edf", scheduler_opts={"quantum": 1e-3})
+    with pytest.raises(ValueError):
+        mk_cluster(scheduler="llf", scheduler_opts={"chunk": -1.0})
+    with pytest.raises(ValueError):
+        Cluster([ServerSpec("s0", [DeviceSpec("gpu0")])],
+                scheduler="drr", scheduler_quantum=1e-3,
+                scheduler_opts={"quantum": 2e-3})
+
+
+def test_client_slo_arg_validation():
+    cluster = mk_cluster()
+    with pytest.raises(ValueError, match="slo_ms"):
+        attach(cluster, slo_ms=0.0)
+    with pytest.raises(ValueError, match="slo_ms"):
+        attach(cluster, slo_ms=-4.0)
+    with pytest.raises(ValueError, match="slo_probe requires"):
+        attach(cluster, slo_probe={"cost_s": 1e-3})
+    with pytest.raises(ValueError, match="unknown slo_probe"):
+        attach(cluster, slo_ms=4.0, slo_probe={"cost": 1e-3})
+    with pytest.raises(ValueError, match="non-negative"):
+        attach(cluster, slo_ms=4.0, slo_probe={"cost_s": -1e-3})
+
+
+def test_admission_opts_validation():
+    with pytest.raises(ValueError):
+        mk_cluster(admission={"bogus": 1.0})
+    with pytest.raises(ValueError):
+        mk_cluster(admission={"window_s": -0.1})
+    with pytest.raises(ValueError):
+        mk_cluster(admission={"headroom": 0.0})
+    cluster = mk_cluster(scheduler="edf",
+                         admission={"window_s": 0.1, "headroom": 0.3,
+                                    "degrade_factor": 2.0})
+    assert isinstance(cluster.admission, AdmissionController)
+    assert mk_cluster().admission is None
+
+
+# ---------------------------------------------------------------------------
+# exactly-once under preemption + drain churn
+
+
+def test_exactly_once_ledger_under_preemption_and_drain():
+    """Preempted remainders and drain-requeued waiters must each
+    complete exactly once: drain s0 while llf preemption churn is live,
+    then check every chain finished with correct data."""
+    cluster = mk_cluster(n=2, scheduler="llf",
+                         scheduler_opts={"chunk": 0.4e-3})
+    be = attach(cluster, name="be")
+    slo = attach(cluster, name="slo", slo_ms=6.0)
+    chains = []
+    for rt, n, dur, start in ((be, 6, 4e-3, 1.0), (slo, 8, 1e-3, 3.0)):
+        buf = rt.create_buffer(64)
+        prev = rt.enqueue_write("s0", buf, np.full(16, start, np.float32))
+        evs = [prev]
+        for _ in range(n):
+            prev = rt.enqueue_kernel("s0", fn=lambda x: x * 2.0,
+                                     inputs=[buf], outputs=[buf],
+                                     duration=dur, wait_for=[prev])
+            evs.append(prev)
+        chains.append((buf, evs, np.full(16, start, np.float32) * 2 ** n))
+    cluster.drain_server("s0", at=cluster.clock.now + 3e-3)
+    cluster.run()
+    for buf, evs, want in chains:
+        assert all(e.status == "complete" for e in evs)
+        np.testing.assert_array_equal(buf.data, want)
+    assert be.stats()["events_live"] == 0
+    assert slo.stats()["events_live"] == 0

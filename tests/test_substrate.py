@@ -13,7 +13,6 @@ from repro.data.pipeline import DataLoader
 from repro.distributed.compression import (compressed_psum_tree,
                                            init_error_state)
 from repro.optim import AdamW, constant_schedule, cosine_schedule
-from repro.optim.adamw import TrainState
 
 
 def test_adamw_quadratic_convergence():
