@@ -41,6 +41,18 @@ regresses more than 20%, the 8-server hetmec efficiency drops below
 0.75, hetmec fails to beat the locality-off (naive) placement by at
 least 20% on drain sim-ms, or contended hetmec fails to beat contended
 locality by at least 20% (used by scripts/ci.sh).
+
+A SEPARATE traced 8-server hetmec run (so the five baseline rows above
+stay byte-identical — tracing attaches at cluster construction) feeds
+the causal critical-path analyzer (core/critpath.py): how much of the
+drain sits in halo communication (transfer + dependency/notify wait on
+the critical path), and what the scaling efficiency would be if the
+halo wire were hidden behind compute (``whatif(overlap_halo=True,
+nic_bandwidth=...)``) — the quantified case for the ROADMAP's
+"hide the wire" follow-up. ``--critpath-baseline`` gates those rows
+against ``BENCH_critpath.json``; ``--trace FILE[.gz]`` additionally
+exports the traced run as Perfetto JSON (CI artifact + trace-diff
+forensics input).
 """
 from __future__ import annotations
 
@@ -51,7 +63,7 @@ import numpy as np
 
 from benchmarks import common
 from benchmarks.common import ETH_1G, ETH_40G, GPU_A6000, MiB, Row, emit
-from repro.core import ClientRuntime, Cluster, ServerSpec
+from repro.core import ClientRuntime, Cluster, ServerSpec, Tracer
 
 STEPS = 30
 TOTAL_STEP_S = 80e-3          # whole-domain step on one GPU
@@ -69,12 +81,12 @@ REGENERATE = ("python -m benchmarks.cfd_halo "
               "--write-baseline benchmarks/BENCH_cfd.json")
 
 
-def _mk(n_srv: int, policy: str, peer_transport: str):
+def _mk(n_srv: int, policy: str, peer_transport: str, trace=None):
     cluster = Cluster([ServerSpec(f"s{i}", [GPU_A6000])
                        for i in range(n_srv)],
                       peer_link=ETH_40G, peer_transport=peer_transport,
                       nic_bandwidth=NIC_BW, nic_ingress_bandwidth=NIC_BW,
-                      placement=policy)
+                      placement=policy, trace=trace)
     rt = ClientRuntime(cluster=cluster, client_link=ETH_1G,
                        transport="tcp", name="cfd",
                        replay_window=4096)  # whole schedule is in flight
@@ -126,8 +138,8 @@ def _run_steps(rt, n_srv: int, parts, lo, hi) -> list:
 
 
 def _measure(n_srv: int, policy: str, peer_transport: str = "tcp",
-             contended: bool = False) -> dict:
-    cluster, rt = _mk(n_srv, policy, peer_transport)
+             contended: bool = False, trace=None) -> dict:
+    cluster, rt = _mk(n_srv, policy, peer_transport, trace=trace)
     bg = None
     if contended:
         # the background tenant hard-pins its flood to s0 regardless of
@@ -236,7 +248,62 @@ def functional_check(n_srv: int = 4, rows: int = 32, cols: int = 64,
     return float(np.max(np.abs(got - ref)))
 
 
-def run():
+HALO_STAGES = ("transfer", "dep_wait", "notify")
+
+
+def _critpath_rows(base_ms: float, trace_path=None) -> list:
+    """Separate traced 8-server hetmec run -> critical-path halo-wait
+    attribution and the hidden-halo efficiency projection. ``base_ms``
+    is the 1-server tcp drain the efficiency is computed against."""
+    tr = Tracer()
+    r = _measure(8, "hetmec", "tcp", trace=tr)
+    cp = tr.critical_path(exact=True)
+    ident = bool(cp.segments) and cp.segment_sum() == cp.makespan
+    mk = float(cp.makespan)
+    halo_ms = sum(float(s.dur) for s in cp.segments
+                  if s.stage in HALO_STAGES) * 1e3
+    share = halo_ms / (mk * 1e3) if mk else 0.0
+    print(tr.format_blame(top=10, title="critical path: cfd 8srv hetmec"),
+          file=sys.stderr)
+    rows = [Row("critpath_cfd8_halo_wait_share", share,
+                f"halo_ms={halo_ms:.3f};makespan_ms={mk * 1e3:.3f};"
+                f"segments={len(cp.segments)};"
+                f"identity={1 if ident else 0}")]
+    # what the scaling curve looks like with the halo wire hidden
+    # behind compute (first-chunk cut-through): the savings come out of
+    # the stepping drain — halo traffic only exists during stepping.
+    # Savings are projection-vs-projection (no-knob model baseline
+    # minus the overlap projection) so the re-timing model's ~1% bias
+    # on this two-phase workload cancels out instead of swamping the
+    # few-ms effect being measured.
+    w0 = tr.whatif()
+    w = tr.whatif(overlap_halo=True)
+    saved_ms = (w0["projected_s"] - w["projected_s"]) * 1e3
+    proj_ms = r["sim_ms"] - saved_ms
+    if proj_ms < 1e-9:
+        proj_ms = 1e-9
+    base_eff = base_ms / (8 * r["sim_ms"])
+    eff = base_ms / (8 * proj_ms)
+    rows.append(Row(
+        "critpath_cfd8_halo_hidden_ms", proj_ms * 1e3,
+        f"eff={eff:.3f};base_eff={base_eff:.3f};"
+        f"saved_ms={saved_ms:.3f};sim_ms={proj_ms:.3f}"))
+    print(f"# halo-wait share of 8srv critical path: {share:.3f} "
+          f"({halo_ms:.1f} of {mk * 1e3:.1f} ms); halo hidden -> "
+          f"eff {base_eff:.3f} => {eff:.3f}", file=sys.stderr)
+    if trace_path:
+        tr.write_perfetto(trace_path)
+        errs = common.validate_perfetto(trace_path)
+        for e in errs:
+            print(f"# trace: {e}", file=sys.stderr)
+        print(f"# trace: {len(tr.cmds)} commands -> {trace_path} "
+              f"({'INVALID' if errs else 'schema ok'})", file=sys.stderr)
+        if errs:
+            raise SystemExit(1)
+    return rows
+
+
+def run(trace_path=None):
     err = functional_check()
     rows = [Row("cfd_functional_err", 0.0, f"max_abs_err={err:.2e}")]
     base = {}
@@ -270,6 +337,8 @@ def run():
             f"sim_ms={r['sim_ms']:.3f};"
             f"placed_remote={r['placed_remote']};"
             f"bytes_avoided={r['bytes_avoided']:.0f}"))
+    rows.extend(_critpath_rows(base["tcp"]["sim_ms"],
+                               trace_path=trace_path))
     return emit(rows)
 
 
@@ -322,6 +391,25 @@ def check_baseline(rows, baseline_path: str) -> bool:
     return ok
 
 
+def check_critpath(rows, baseline_path: str) -> bool:
+    """Gate the critical-path rows: the tiling identity must hold, and
+    the halo-wait share / hidden-halo projection must not drift beyond
+    the shared BENCH_critpath.json tolerances."""
+    from benchmarks.latency_breakdown import CRITPATH_TOLERANCE
+
+    by_name = {r.name: r for r in rows}
+    share_row = by_name["critpath_cfd8_halo_wait_share"]
+    ident = common.derived(share_row, "identity")
+    ok = ident == 1
+    print(f"# critpath_cfd8 identity={ident:.0f} "
+          f"{'ok' if ok else 'FAILED'}", file=sys.stderr)
+    gated = [r for r in rows if r.name.startswith("critpath_")]
+    return common.check_rows(
+        gated, baseline_path, extract=lambda r: r.us_per_call,
+        tolerance=CRITPATH_TOLERANCE, direction="lower_is_better",
+        benchmark="critpath") and ok
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default=None,
@@ -329,21 +417,42 @@ def main() -> None:
                          "regression or acceptance-floor violation")
     ap.add_argument("--write-baseline", default=None,
                     help="write measured sim_ms to this JSON path")
+    ap.add_argument("--critpath-baseline", default=None,
+                    help="BENCH_critpath.json; gate the halo-wait share "
+                         "and hidden-halo projection rows")
+    ap.add_argument("--write-critpath-baseline", default=None,
+                    help="merge this module's critpath_* rows into the "
+                         "shared BENCH_critpath.json at this path")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="export the traced 8-server hetmec run as "
+                         "Perfetto trace_event JSON (.gz gzips it)")
     ap.add_argument("--json-out", default=None,
                     help="write the result rows to this JSON path")
     args = ap.parse_args()
-    rows = run()
+    rows = run(trace_path=args.trace)
     if args.json_out:
         common.dump_rows(rows, args.json_out)
     if args.write_baseline:
         common.write_baseline(
             args.write_baseline,
             {r.name: _sim_ms(r) for r in rows
-             if r.name != "cfd_functional_err"},
+             if r.name != "cfd_functional_err"
+             and not r.name.startswith("critpath_")},
             benchmark="cfd_halo", metric="sim_ms",
             direction="lower_is_better", tolerance=REGRESSION_TOLERANCE,
             regenerate=REGENERATE)
-    if args.baseline and not check_baseline(rows, args.baseline):
+    if args.write_critpath_baseline:
+        from benchmarks.latency_breakdown import write_critpath_baseline
+        write_critpath_baseline(
+            args.write_critpath_baseline,
+            {r.name: r.us_per_call for r in rows
+             if r.name.startswith("critpath_")})
+    ok = True
+    if args.baseline:
+        ok = check_baseline(rows, args.baseline)
+    if args.critpath_baseline:
+        ok = check_critpath(rows, args.critpath_baseline) and ok
+    if not ok:
         raise SystemExit(1)
 
 

@@ -12,6 +12,7 @@ benchmark runs)."""
 from __future__ import annotations
 
 import dataclasses
+import gzip
 import json
 import math
 import os
@@ -266,8 +267,9 @@ def validate_perfetto(trace, require_fault_markers: bool = False) -> list:
     instead of failing silently in the viewer."""
     errs: list = []
     if isinstance(trace, str):
+        opener = gzip.open if trace.endswith(".gz") else open
         try:
-            with open(trace) as f:
+            with opener(trace, "rt") as f:
                 trace = json.load(f)
         except (OSError, ValueError) as e:
             return [f"unreadable trace: {e}"]
@@ -276,7 +278,7 @@ def validate_perfetto(trace, require_fault_markers: bool = False) -> list:
     events = trace.get("traceEvents")
     if not isinstance(events, list) or not events:
         return ["traceEvents must be a non-empty list"]
-    known_ph = {"M", "X", "b", "e", "i"}
+    known_ph = {"M", "X", "b", "e", "i", "C"}
     async_depth: dict = {}
     fault_markers = 0
     for i, ev in enumerate(events):

@@ -15,10 +15,24 @@ decomposition attributes every last tick of latency to exactly one
 stage, nothing double-counted, nothing dropped. Each ``*_total`` row
 carries ``exact_sum=1`` only if that held.
 
-  PYTHONPATH=src python -m benchmarks.latency_breakdown [--check]
+On top of the per-command decomposition, the causal critical-path
+analyzer (core/critpath.py, DESIGN.md §11) is gated here on the same
+two workloads: the path's segment sum must equal the workload makespan
+exactly (rational arithmetic again — the path is a gap-free tiling of
+the makespan window), and the what-if projections must land within
+``WHATIF_TOLERANCE`` of a ground-truth re-run of the simulator with
+the knob actually changed (``device_speed=2`` re-runs the dispatch DAG
+with halved kernel durations; ``nic_bandwidth=2`` re-runs the
+migration pipeline with doubled link bandwidths). The projected and
+recorded makespans also gate against ``BENCH_critpath.json`` so the
+analyzer's attribution cannot silently drift.
 
-``--check`` exits non-zero unless every workload's exact-sum gate and
-Perfetto schema check pass (used by scripts/ci.sh).
+  PYTHONPATH=src python -m benchmarks.latency_breakdown [--check] \
+      [--baseline benchmarks/BENCH_critpath.json] [--write-baseline P]
+
+``--check`` exits non-zero unless every workload's exact-sum gate, the
+critical-path identity, and the what-if accuracy gates pass (used by
+scripts/ci.sh).
 """
 from __future__ import annotations
 
@@ -32,41 +46,75 @@ import numpy as np
 from benchmarks import common
 from benchmarks.common import (ETH_1G, ETH_40G, GPU_2080TI, LOOPBACK, MiB,
                                Row, build_dag, emit)
-from repro.core import ClientRuntime, DeviceSpec, ServerSpec, Tracer
+from repro.core import (ClientRuntime, DeviceSpec, LinkSpec, ServerSpec,
+                        Tracer)
 from repro.core.trace import STAGES
 
 N_CMDS = 2000
 N_SRV = 4
 BIG = 8 * MiB
+WHATIF_TOLERANCE = 0.10       # projection vs ground-truth re-run
+CRITPATH_TOLERANCE = 0.10     # BENCH_critpath.json gate (deterministic)
+REGENERATE = (
+    "python -m benchmarks.latency_breakdown "
+    "--write-baseline benchmarks/BENCH_critpath.json && "
+    "python -m benchmarks.cfd_halo "
+    "--write-critpath-baseline benchmarks/BENCH_critpath.json")
 
 
-def _dispatch_workload() -> Tracer:
+def _scaled_link(spec: LinkSpec, bw: float) -> LinkSpec:
+    return LinkSpec(latency=spec.latency, bandwidth=spec.bandwidth * bw)
+
+
+def _dispatch_workload(speed: float = 1.0,
+                       duration: float = 1e-7) -> Tracer:
     tr = Tracer()
     rt = ClientRuntime(
         servers=[ServerSpec(f"s{i}", [DeviceSpec("gpu0")])
                  for i in range(N_SRV)],
         client_link=LOOPBACK, peer_link=LOOPBACK, trace=tr)
-    build_dag(rt, N_CMDS, N_SRV, seed=42)
+    build_dag(rt, N_CMDS, N_SRV, seed=42, duration=duration / speed)
     rt.finish()
     return tr
 
 
-def _migration_workload() -> Tracer:
+def _compute_workload(speed: float = 1.0) -> Tracer:
+    """Compute-bound variant of the dispatch DAG (device execution
+    dominates, not the wire) — the workload the ``device_speed``
+    what-if knob is validated on: a 2x device must roughly halve THIS
+    makespan, and the projection has to see that from the trace."""
+    return _dispatch_workload(speed=speed, duration=1e-4)
+
+
+def _migration_workload(nic: float = 1.0) -> Tracer:
+    # single-phase on purpose: everything is enqueued up front with
+    # explicit dependencies, so the whole makespan is causal structure
+    # the what-if re-timing can reason about (a mid-run finish() would
+    # pin the second phase's enqueue times to the FIRST run's wall
+    # clock, which no projection can know to move)
     tr = Tracer()
     rt = ClientRuntime(
         servers=[ServerSpec(f"s{i}", [GPU_2080TI]) for i in range(N_SRV)],
-        client_link=ETH_1G, peer_link=ETH_40G, transport="tcp",
+        client_link=_scaled_link(ETH_1G, nic),
+        peer_link=_scaled_link(ETH_40G, nic), transport="tcp",
         trace=tr)
     weights = rt.create_buffer(BIG, name="weights")
-    rt.enqueue_write("s0", weights, np.zeros(BIG // 4, np.uint32))
-    rt.finish()
+    wev = rt.enqueue_write("s0", weights, np.zeros(BIG // 4, np.uint32))
     for s in (f"s{i}" for i in range(1, N_SRV)):
         for j in range(2):
             out = rt.create_buffer(4096)
             rt.enqueue_kernel(s, fn=None, inputs=[weights], outputs=[out],
-                              duration=1e-5, name=f"{s}_k{j}")
+                              duration=1e-5, wait_for=[wev],
+                              name=f"{s}_k{j}")
     rt.finish()
     return tr
+
+
+def _span_s(tr: Tracer) -> float:
+    """First enqueue -> last client-visible completion, over the whole
+    trace (the same window ``Tracer.whatif`` projects)."""
+    stamps = [Tracer._stamps(rec) for rec in tr.finished()]
+    return max(s[5] for s in stamps) - min(s[0] for s in stamps)
 
 
 def _rows_for(tag: str, tr: Tracer) -> tuple:
@@ -97,6 +145,34 @@ def _rows_for(tag: str, tr: Tracer) -> tuple:
     return rows, ok
 
 
+def _critpath_rows(tag: str, tr: Tracer, knob,
+                   rerun) -> list:
+    """Critical-path + what-if rows for one traced workload: the
+    rational-arithmetic tiling identity (segment sum == makespan), the
+    blame table for the log, and — when a knob is given — the what-if
+    projection validated against a ground-truth re-run with the knob
+    actually changed."""
+    cp = tr.critical_path(exact=True)
+    ident = bool(cp.segments) and cp.segment_sum() == cp.makespan
+    rows = [Row(f"critpath_{tag}_makespan_us", float(cp.makespan) * 1e6,
+                f"segments={len(cp.segments)};"
+                f"identity={1 if ident else 0}")]
+    print(tr.format_blame(top=8, title=f"critical path: {tag}"),
+          file=sys.stderr)
+    if knob is None:
+        return rows
+    knob_name, = knob
+    w = tr.whatif(**knob)
+    actual = _span_s(rerun())
+    err = abs(w["projected_s"] - actual) / actual if actual else 1.0
+    rows.append(Row(
+        f"critpath_whatif_{knob_name}_projected_us",
+        w["projected_s"] * 1e6,
+        f"actual_us={actual * 1e6:.3f};"
+        f"recorded_us={w['recorded_s'] * 1e6:.3f};err={err:.4f}"))
+    return rows
+
+
 def run():
     # the deep dispatch DAG overflows the session replay window by
     # design; silence the (expected) warning for this sweep only
@@ -105,42 +181,110 @@ def run():
     rt_log.setLevel(logging.ERROR)
     try:
         rows = []
-        for tag, workload in (("dispatch", _dispatch_workload),
-                              ("migration", _migration_workload)):
-            wrows, _ok = _rows_for(tag, workload())
-            rows.extend(wrows)
+        for tag, workload, knob, rerun in (
+                ("dispatch", _dispatch_workload, None, None),
+                ("compute", _compute_workload, {"device_speed": 2.0},
+                 lambda: _compute_workload(speed=2.0)),
+                ("migration", _migration_workload, {"nic_bandwidth": 2.0},
+                 lambda: _migration_workload(nic=2.0))):
+            tr = workload()
+            if tag != "compute":      # stage tables: the two originals
+                wrows, _ok = _rows_for(tag, tr)
+                rows.extend(wrows)
+            rows.extend(_critpath_rows(tag, tr, knob, rerun))
     finally:
         rt_log.setLevel(prev_level)
     return emit(rows)
 
 
 def check(rows) -> bool:
-    """Every workload's exact-sum gate must hold and report commands."""
+    """Every workload's exact-sum gate must hold and report commands;
+    every critical path must tile its makespan exactly; every what-if
+    projection must land within WHATIF_TOLERANCE of its re-run."""
     ok = True
     for row in rows:
-        if not row.name.endswith("_total"):
+        if row.name.endswith("_total"):
+            exact = common.derived(row, "exact_sum")
+            n = common.derived(row, "commands")
+            good = exact == 1 and n > 0
+            print(f"# {row.name}: commands={n:.0f} "
+                  f"exact_sum={exact:.0f} "
+                  f"{'ok' if good else 'FAILED'}", file=sys.stderr)
+        elif row.name.endswith("_makespan_us"):
+            ident = common.derived(row, "identity")
+            segs = common.derived(row, "segments")
+            good = ident == 1 and segs > 0
+            print(f"# {row.name}: segments={segs:.0f} "
+                  f"identity={ident:.0f} "
+                  f"{'ok' if good else 'FAILED'}", file=sys.stderr)
+        elif "_whatif_" in row.name:
+            err = common.derived(row, "err")
+            good = err <= WHATIF_TOLERANCE
+            print(f"# {row.name}: projection err {err:.4f} vs re-run "
+                  f"(tolerance {WHATIF_TOLERANCE}) "
+                  f"{'ok' if good else 'FAILED'}", file=sys.stderr)
+        else:
             continue
-        exact = common.derived(row, "exact_sum")
-        n = common.derived(row, "commands")
-        good = exact == 1 and n > 0
-        print(f"# {row.name}: commands={n:.0f} exact_sum={exact:.0f} "
-              f"{'ok' if good else 'FAILED'}", file=sys.stderr)
         ok = ok and good
     return ok
+
+
+def _gate_value(row: Row) -> float:
+    return row.us_per_call
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--check", action="store_true",
-                    help="exit non-zero unless the exact-sum gates hold")
+                    help="exit non-zero unless the exact-sum, "
+                         "critical-path identity, and what-if accuracy "
+                         "gates hold")
+    ap.add_argument("--baseline", default=None,
+                    help="BENCH_critpath.json; fail if a critpath "
+                         "makespan/projection row regresses >10%%")
+    ap.add_argument("--write-baseline", default=None,
+                    help="merge this module's critpath_* rows into the "
+                         "shared BENCH_critpath.json at this path")
     ap.add_argument("--json-out", default=None,
                     help="write the result rows to this JSON path")
     args = ap.parse_args()
     rows = run()
     if args.json_out:
         common.dump_rows(rows, args.json_out)
-    if args.check and not check(rows):
+    if args.write_baseline:
+        write_critpath_baseline(
+            args.write_baseline,
+            {r.name: r.us_per_call for r in rows
+             if r.name.startswith("critpath_")})
+    ok = True
+    if args.check:
+        ok = check(rows)
+    if args.baseline:
+        gated = [r for r in rows if r.name.startswith("critpath_")]
+        ok = common.check_rows(
+            gated, args.baseline, extract=_gate_value,
+            tolerance=CRITPATH_TOLERANCE, direction="lower_is_better",
+            unit=" us", benchmark="critpath") and ok
+    if not ok:
         raise SystemExit(1)
+
+
+def write_critpath_baseline(path: str, values: dict) -> None:
+    """Merge-write into the shared critpath baseline: this module and
+    benchmarks/cfd_halo.py each own a disjoint subset of the rows, so a
+    regeneration preserves the other module's entries."""
+    import os
+
+    merged = {}
+    if os.path.exists(path):
+        meta, existing = common.load_baseline(path)
+        if meta.get("benchmark") in (None, "critpath"):
+            merged.update(existing)
+    merged.update(values)
+    common.write_baseline(
+        path, merged, benchmark="critpath", metric="us_or_ratio",
+        direction="lower_is_better", tolerance=CRITPATH_TOLERANCE,
+        regenerate=REGENERATE)
 
 
 if __name__ == "__main__":

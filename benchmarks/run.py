@@ -20,8 +20,13 @@ gate by hand instead of regenerating through ``--write-baseline``.
 before any benchmark runs: every cluster built without an explicit
 ``trace=`` argument attaches to it, and on exit the combined trace is
 written to FILE as Perfetto ``trace_event`` JSON (schema-validated,
-loadable at https://ui.perfetto.dev). Pair with ``--only`` — a full
-sweep's trace is huge.
+loadable at https://ui.perfetto.dev; a ``.gz`` suffix gzips it). Pair
+with ``--only`` — a full sweep's trace is huge.
+
+``--blame`` prints the causal critical-path attribution table for the
+combined trace (core/critpath.py), and ``--whatif=nic_bandwidth=2``
+projects the makespan under hypothetical substrate changes — both
+install a default tracer themselves, so ``--trace`` is optional.
 """
 from __future__ import annotations
 
@@ -129,6 +134,30 @@ def check_baselines(drift_ref=None) -> int:
     return bad
 
 
+def _parse_whatif(spec: str) -> dict:
+    """Parse ``--whatif`` knob=value pairs (``nic_bandwidth=2,wire=0``)."""
+    valid = {"nic_bandwidth": float, "device_speed": float,
+             "wire": float, "overlap_halo": lambda v: v.lower() in
+             ("1", "true", "yes", "on")}
+    knobs: dict = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        key, _, val = part.partition("=")
+        key = key.strip()
+        if key not in valid:
+            raise SystemExit(f"--whatif: unknown knob {key!r} "
+                             f"(choose from {sorted(valid)})")
+        try:
+            knobs[key] = valid[key](val.strip())
+        except ValueError:
+            raise SystemExit(f"--whatif: bad value for {key}: {val!r}")
+    if not knobs:
+        raise SystemExit("--whatif: empty spec")
+    return knobs
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
@@ -150,7 +179,18 @@ def main() -> None:
                          "file (implies --profile)")
     ap.add_argument("--trace", default=None, metavar="FILE",
                     help="trace every benchmark cluster and write combined "
-                         "Perfetto trace_event JSON to FILE on exit")
+                         "Perfetto trace_event JSON to FILE on exit "
+                         "(.gz suffix gzips the export)")
+    ap.add_argument("--blame", action="store_true",
+                    help="after the run, print the causal critical-path "
+                         "blame table (core/critpath.py) for the combined "
+                         "trace — installs a tracer even without --trace")
+    ap.add_argument("--whatif", default=None, metavar="SPEC",
+                    help="after the run, print what-if makespan projections "
+                         "for the combined trace; SPEC is comma-separated "
+                         "knob=value (nic_bandwidth=2, device_speed=2, "
+                         "wire=0, overlap_halo=1) — implies --blame's "
+                         "tracer")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "results.json"))
     args = ap.parse_args()
@@ -159,8 +199,12 @@ def main() -> None:
     if args.profile_out:
         args.profile = True
 
+    whatif_knobs = None
+    if args.whatif is not None:
+        whatif_knobs = _parse_whatif(args.whatif)
+
     tracer = None
-    if args.trace:
+    if args.trace or args.blame or whatif_knobs is not None:
         from repro.core import trace as trace_mod
         tracer = trace_mod.Tracer()
         trace_mod.set_default(tracer)
@@ -198,16 +242,27 @@ def main() -> None:
         if prof_f is not None:
             prof_f.close()
         if tracer is not None:
-            from benchmarks import common
             from repro.core import trace as trace_mod
             trace_mod.set_default(None)
-            tracer.write_perfetto(args.trace)
-            errs = common.validate_perfetto(args.trace)
-            for e in errs:
-                print(f"# trace: {e}", file=sys.stderr)
-            print(f"# trace: {len(tracer.cmds)} commands -> {args.trace}"
-                  f" ({'INVALID' if errs else 'schema ok'})",
-                  file=sys.stderr)
+            if args.trace:
+                from benchmarks import common
+                tracer.write_perfetto(args.trace)
+                errs = common.validate_perfetto(args.trace)
+                for e in errs:
+                    print(f"# trace: {e}", file=sys.stderr)
+                print(f"# trace: {len(tracer.cmds)} commands -> "
+                      f"{args.trace} "
+                      f"({'INVALID' if errs else 'schema ok'})",
+                      file=sys.stderr)
+            if args.blame or whatif_knobs is not None:
+                title = f"--only {args.only}" if args.only else "full sweep"
+                print(tracer.format_blame(title=title), file=sys.stderr)
+            if whatif_knobs is not None:
+                w = tracer.whatif(**whatif_knobs)
+                print(f"# whatif {args.whatif}: recorded "
+                      f"{w['recorded_s'] * 1e3:.3f} ms -> projected "
+                      f"{w['projected_s'] * 1e3:.3f} ms "
+                      f"(speedup {w['speedup']:.3f}x)", file=sys.stderr)
     with open(args.out, "w") as f:
         json.dump(all_rows, f, indent=1)
 

@@ -26,12 +26,24 @@
 #
 # Observability (DESIGN.md §9) rides the existing gates: the chaos and
 # fleet smokes run TRACED, so their sim-time baselines double as proof
-# that tracing never perturbs simulated time; both Perfetto exports are
-# schema-validated (the chaos one must carry fault markers) and land in
-# benchmarks/ci-results for the workflow artifact upload; the
-# latency-breakdown step gates the exact per-stage decomposition; and
-# the non-smoke dispatch gate includes the <=2% tracing-off overhead
-# floor.
+# that tracing never perturbs simulated time; the Perfetto exports are
+# schema-validated (the chaos one must carry fault markers, the fleet
+# one exercises the gzip path) and land in benchmarks/ci-results for
+# the workflow artifact upload; the latency-breakdown step gates the
+# exact per-stage decomposition; and the non-smoke dispatch gate
+# includes the <=2% tracing-off overhead floor.
+#
+# The causal critical-path analyzer (DESIGN.md §11) gates twice: the
+# latency-breakdown step checks the path-tiling identity and the
+# what-if projections against ground-truth re-runs plus the
+# BENCH_critpath.json makespans, and the CFD step adds a traced run
+# whose halo-wait share and hidden-halo projection gate against the
+# same baseline (the cfd trace export doubles as the candidate for
+# trace-diff triage). When a gate step fails AND $CI_BASELINE_TRACES
+# points at a directory of cached baseline traces (ci.yml restores one
+# keyed on the PR base), the EXIT-trap summary runs
+# scripts/trace_diff.py for the failing step's trace and appends the
+# top shifted resources to the job summary.
 #
 # Every step is timed, and every check_rows gate comparison records its
 # remaining margin; on exit (pass or fail) scripts/ci_summary.py
@@ -111,9 +123,11 @@ run_step "SLO burst smoke (20% gates + admission/preemption floors)" \
         --baseline benchmarks/BENCH_slo.json \
         --json-out "$ARTIFACTS/slo_burst.json"
 
-run_step "CFD halo-exchange placement smoke (20% gates + floors)" \
+run_step "CFD halo-exchange placement smoke (20% gates + floors + critpath)" \
     python -m benchmarks.cfd_halo \
         --baseline benchmarks/BENCH_cfd.json \
+        --critpath-baseline benchmarks/BENCH_critpath.json \
+        --trace "$ARTIFACTS/cfd_trace.json.gz" \
         --json-out "$ARTIFACTS/cfd_halo.json"
 
 run_step "chaos membership smoke (20% gates + exactly-once ledger; traced)" \
@@ -126,18 +140,19 @@ if [[ "$SIMTIME_ONLY" == "1" ]]; then
     run_step "1000-UE fleet sweep (sim-time gate; wall ceiling SKIPPED; traced)" \
         python -m benchmarks.fleet_sweep \
             --baseline benchmarks/BENCH_fleet.json \
-            --trace "$ARTIFACTS/fleet_trace.json" \
+            --trace "$ARTIFACTS/fleet_trace.json.gz" \
             --json-out "$ARTIFACTS/fleet.json"
 else
     run_step "1000-UE fleet sweep (sim-time gate + 30s wall ceiling; traced)" \
         python -m benchmarks.fleet_sweep \
             --baseline benchmarks/BENCH_fleet.json --max-wall-s 30 \
-            --trace "$ARTIFACTS/fleet_trace.json" \
+            --trace "$ARTIFACTS/fleet_trace.json.gz" \
             --json-out "$ARTIFACTS/fleet.json"
 fi
 
-run_step "latency breakdown (exact per-stage decomposition gate)" \
+run_step "latency breakdown (exact decomposition + critical-path gates)" \
     python -m benchmarks.latency_breakdown --check \
+        --baseline benchmarks/BENCH_critpath.json \
         --json-out "$ARTIFACTS/latency_breakdown.json"
 
 echo "ci.sh: all checks passed"

@@ -8,6 +8,13 @@ appended one record per gate comparison to. Output is appended to
 ``$GITHUB_STEP_SUMMARY`` when set (the Actions job-summary panel) and
 always printed to stdout, so local runs get the same table. Stdlib
 only; never fails the build (ci.sh invokes it with ``|| true``).
+
+Trace-diff triage (DESIGN.md §11): when a traced gate step failed AND
+``$CI_BASELINE_TRACES`` names a directory holding the baseline run's
+Perfetto exports (ci.yml restores an actions/cache keyed on the PR
+base), the summary appends ``scripts/trace_diff.py`` output for that
+step's trace — the top resources where time moved — so a sim-time
+regression lands with its forensics attached instead of a bare number.
 """
 from __future__ import annotations
 
@@ -46,6 +53,62 @@ def _read_margins(path: str) -> list:
     return margins
 
 
+# failing-step keyword -> trace basename (extension probed: the fleet
+# and cfd exports are gzipped, chaos is plain JSON)
+_TRACE_FOR_STEP = (
+    ("chaos", "chaos_trace"),
+    ("fleet", "fleet_trace"),
+    ("cfd", "cfd_trace"),
+)
+
+
+def _find_trace(dirpath: str, stem: str):
+    for ext in (".json.gz", ".json"):
+        p = os.path.join(dirpath, stem + ext)
+        if os.path.exists(p):
+            return p
+    return None
+
+
+def triage(steps: list, artifacts_dir: str, baseline_dir) -> str:
+    """Markdown trace-diff section for failed traced steps; empty when
+    nothing failed, no baseline traces are cached, or diffing breaks
+    (forensics must never fail the summary)."""
+    failed = [title for title, _secs, rc in steps if rc != 0]
+    if not failed or not baseline_dir or not os.path.isdir(baseline_dir):
+        return ""
+    try:
+        import trace_diff           # sibling module, scripts/ on path
+    except ImportError:
+        return ""
+    out: list = []
+    seen: set = set()
+    for title in failed:
+        low = title.lower()
+        for kw, stem in _TRACE_FOR_STEP:
+            if kw not in low or stem in seen:
+                continue
+            seen.add(stem)
+            base = _find_trace(baseline_dir, stem)
+            cand = _find_trace(artifacts_dir, stem)
+            if base is None or cand is None:
+                continue
+            try:
+                d = trace_diff.diff(
+                    trace_diff.aggregate(trace_diff.load_events(base)),
+                    trace_diff.aggregate(trace_diff.load_events(cand)),
+                    top=5)
+                body = trace_diff.render(d, markdown=True)
+            except Exception as e:  # noqa: BLE001 — never fail the summary
+                body = f"(trace_diff failed for {stem}: {e})"
+            out += [f"#### {stem}: where the time moved vs the "
+                    f"baseline trace", "", body, ""]
+    if not out:
+        return ""
+    return "\n".join(["### Trace-diff triage (failed gate steps)", ""]
+                     + out) + "\n"
+
+
 def render(steps: list, margins: list) -> str:
     out = ["## ci.sh summary", ""]
     if steps:
@@ -82,7 +145,10 @@ def main() -> None:
     ap.add_argument("--margins", required=True,
                     help="JSONL appended by benchmarks.common.check_rows")
     args = ap.parse_args()
-    md = render(_read_steps(args.steps), _read_margins(args.margins))
+    steps = _read_steps(args.steps)
+    md = render(steps, _read_margins(args.margins))
+    md += triage(steps, os.path.dirname(os.path.abspath(args.steps)),
+                 os.environ.get("CI_BASELINE_TRACES"))
     sys.stdout.write(md)
     summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
     if summary_path:

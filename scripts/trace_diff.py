@@ -1,0 +1,186 @@
+#!/usr/bin/env python3
+"""Trace-diff regression forensics: align two Perfetto traces exported
+by ``Tracer.write_perfetto`` and rank where time moved.
+
+Given a baseline trace and a candidate trace (plain ``.json`` or
+``.json.gz``), aggregate per-resource busy time — device execution
+slices, NIC occupancy, link wire/transfer spans, per-stage command
+lifecycle totals — and report the top movers plus the makespan delta.
+CI runs this automatically when a sim-time gate fails (the EXIT-trap
+summary in ``scripts/ci.sh`` feeds it the cached baseline trace), so a
+regression lands with "s1.nic busy +38%, queue_wait +22ms on s0/gpu0"
+attached instead of a bare number.
+
+Usage:
+    python scripts/trace_diff.py BASELINE CANDIDATE [--top N] [--markdown]
+
+Exit code 0 always (forensics, not a gate).
+"""
+from __future__ import annotations
+
+import argparse
+import gzip
+import json
+import sys
+
+
+# mirrors repro.core.trace.STAGES — kept literal so this script stays
+# stdlib-only and runnable against a trace from any checkout
+_STAGES = frozenset(("submit_wire", "dep_wait", "queue_wait",
+                     "execute", "completion"))
+
+
+def load_events(path: str) -> list:
+    opener = gzip.open if path.endswith(".gz") else open
+    with opener(path, "rt") as f:
+        data = json.load(f)
+    if isinstance(data, dict):
+        data = data.get("traceEvents", [])
+    if not isinstance(data, list):
+        raise ValueError(f"{path}: not a trace_event list")
+    return data
+
+
+def aggregate(events: list) -> dict:
+    """Per-resource busy totals (seconds) plus the trace makespan.
+
+    Resources:
+      * ``<server>/<device>``   — exec X slice time
+      * ``<server>.nic[_in]``   — NIC occupancy X time
+      * ``net:<link>``          — transfer span time (queue-inclusive)
+      * ``net:<link>.wire``     — wire occupancy X time
+      * ``stage:<stage>``       — summed b/e lifecycle stage time
+    """
+    proc: dict = {}
+    thread: dict = {}
+    for ev in events:
+        if ev.get("ph") == "M":
+            if ev.get("name") == "process_name":
+                proc[ev["pid"]] = ev["args"]["name"]
+            elif ev.get("name") == "thread_name":
+                thread[(ev["pid"], ev["tid"])] = ev["args"]["name"]
+
+    busy: dict = {}
+    open_stage: dict = {}
+    t_min = None
+    t_max = None
+
+    def add(key: str, us: float) -> None:
+        busy[key] = busy.get(key, 0.0) + us / 1e6
+
+    for ev in events:
+        ph = ev.get("ph")
+        ts = ev.get("ts")
+        if ts is not None:
+            if t_min is None or ts < t_min:
+                t_min = ts
+            end = ts + ev.get("dur", 0.0)
+            if t_max is None or end > t_max:
+                t_max = end
+        if ph == "X":
+            cat = ev.get("cat")
+            tname = thread.get((ev.get("pid"), ev.get("tid")), "?")
+            dur = ev.get("dur", 0.0)
+            if cat == "exec":
+                pname = proc.get(ev.get("pid"), "?")
+                server = pname.split(":", 1)[-1]
+                dev = tname.split(":", 1)[-1]
+                add(f"{server}/{dev}", dur)
+            elif cat == "nic":
+                add(tname, dur)
+            elif cat == "net":
+                add(f"net:{tname}", dur)
+        elif ph == "b" and ev.get("cat") == "cmd":
+            open_stage[(ev.get("id"), ev.get("name"))] = ts
+        elif ph == "e" and ev.get("cat") == "cmd":
+            name = ev.get("name")
+            t0 = open_stage.pop((ev.get("id"), name), None)
+            # lifecycle-stage children only: the parent span carries
+            # the command's NAME, which embeds an event id that shifts
+            # between runs — aggregating those would fabricate
+            # new/-100% movers out of pure re-numbering
+            if t0 is not None and name in _STAGES:
+                add(f"stage:{name}", ts - t0)
+    makespan = ((t_max - t_min) / 1e6
+                if t_max is not None and t_min is not None else 0.0)
+    return {"busy": busy, "makespan_s": makespan, "events": len(events)}
+
+
+def diff(base: dict, cand: dict, top: int = 5) -> dict:
+    """Rank resources by absolute busy-time shift, descending."""
+    keys = set(base["busy"]) | set(cand["busy"])
+    rows = []
+    for k in keys:
+        b = base["busy"].get(k, 0.0)
+        c = cand["busy"].get(k, 0.0)
+        d = c - b
+        if b == 0.0 and c == 0.0:
+            continue
+        pct = (d / b * 100.0) if b > 0.0 else float("inf")
+        rows.append({"resource": k, "base_s": b, "cand_s": c,
+                     "delta_s": d, "delta_pct": pct})
+    rows.sort(key=lambda r: (-abs(r["delta_s"]), r["resource"]))
+    return {"movers": rows[:top], "total_resources": len(rows),
+            "makespan_base_s": base["makespan_s"],
+            "makespan_cand_s": cand["makespan_s"],
+            "makespan_delta_s": cand["makespan_s"] - base["makespan_s"]}
+
+
+def _fmt_pct(p: float) -> str:
+    return "new" if p == float("inf") else f"{p:+.1f}%"
+
+
+def render(d: dict, markdown: bool = False) -> str:
+    mb, mc = d["makespan_base_s"], d["makespan_cand_s"]
+    dm = d["makespan_delta_s"]
+    dpct = (dm / mb * 100.0) if mb > 0.0 else 0.0
+    lines = []
+    if markdown:
+        lines.append("#### Trace diff (where the time moved)")
+        lines.append(f"makespan: {mb * 1e3:.3f} ms → {mc * 1e3:.3f} ms "
+                     f"({dm * 1e3:+.3f} ms, {dpct:+.1f}%)")
+        lines.append("")
+        lines.append("| resource | baseline ms | candidate ms | Δ ms | Δ% |")
+        lines.append("|---|---:|---:|---:|---:|")
+        for r in d["movers"]:
+            lines.append(f"| `{r['resource']}` | {r['base_s'] * 1e3:.3f} "
+                         f"| {r['cand_s'] * 1e3:.3f} "
+                         f"| {r['delta_s'] * 1e3:+.3f} "
+                         f"| {_fmt_pct(r['delta_pct'])} |")
+    else:
+        lines.append(f"makespan: {mb * 1e3:.3f} ms -> {mc * 1e3:.3f} ms "
+                     f"({dm * 1e3:+.3f} ms, {dpct:+.1f}%)")
+        lines.append(f"{'resource':<32}{'base ms':>12}{'cand ms':>12}"
+                     f"{'delta ms':>12}{'delta%':>9}")
+        for r in d["movers"]:
+            lines.append(f"{r['resource']:<32}{r['base_s'] * 1e3:>12.3f}"
+                         f"{r['cand_s'] * 1e3:>12.3f}"
+                         f"{r['delta_s'] * 1e3:>+12.3f}"
+                         f"{_fmt_pct(r['delta_pct']):>9}")
+    if d["total_resources"] > len(d["movers"]):
+        lines.append(f"... {d['total_resources'] - len(d['movers'])} "
+                     f"more resources unchanged or below the cut")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("baseline", help="baseline trace (.json or .json.gz)")
+    ap.add_argument("candidate", help="candidate trace (.json or .json.gz)")
+    ap.add_argument("--top", type=int, default=5,
+                    help="movers to show (default 5)")
+    ap.add_argument("--markdown", action="store_true",
+                    help="emit a GitHub-flavoured markdown table")
+    args = ap.parse_args(argv)
+    try:
+        base = aggregate(load_events(args.baseline))
+        cand = aggregate(load_events(args.candidate))
+    except (OSError, ValueError, json.JSONDecodeError) as exc:
+        print(f"trace_diff: {exc}", file=sys.stderr)
+        return 0                       # forensics must never mask the gate
+    print(render(diff(base, cand, top=args.top), markdown=args.markdown))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

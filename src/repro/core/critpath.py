@@ -1,0 +1,540 @@
+"""Causal critical-path analysis over the span store (DESIGN.md §11).
+
+The tracer (DESIGN.md §9) records *what happened when*; this module
+answers *why the workload took as long as it did*. It reconstructs the
+happens-before DAG of a finished trace — explicit command dependencies
+(``CmdRecord.deps``) plus resource edges (serial device occupancy from
+execution intervals and llf slices, per-link transfer ordering, NIC
+occupancy chains, per-chunk landfall) — and provides three views:
+
+* ``critical_path``: walk the binding constraint backward from the
+  last-finishing command. The result is a gap-free tiling of
+  ``[path start, makespan end]`` by segments, each blaming one
+  (resource, stage) pair — so the segment sum equals the makespan
+  *exactly* (in rational arithmetic under ``exact=True``), which the
+  CI gate in ``benchmarks/latency_breakdown.py`` enforces.
+* ``whatif``: re-time the recorded DAG under hypothetical substrate
+  changes (``nic_bandwidth=2.0``, ``device_speed=2.0``, ``wire=0.0``,
+  ``overlap_halo=True``) to bound an optimization's win before
+  building it. Uniquely validatable here: the simulator can actually
+  re-run with the changed parameter, and the benchmark gates the
+  projection within 10% of the ground-truth re-run.
+* ``format_blame``: terminal table ranking makespan attribution.
+
+Everything is post-hoc: these functions read the append-only span
+store after the simulation drained and never touch the clock, so the
+five sim-time baselines stay byte-identical whether or not anyone
+calls them.
+
+Walk semantics (the resource edges, DESIGN.md §11):
+
+* ``completion`` — device completion → client ack (completion wire +
+  reap), attributed to the tenant's access link.
+* ``execute`` — device occupancy of the command itself; under llf the
+  recorded slices are tiled and the holes between them (other
+  commands' slices) become ``preempt_wait`` on the same device.
+* ``transfer`` — a migration/read command whose "execution" is a wire
+  leg, attributed to the link that carried it.
+* ``queue_wait`` — run-queue time, tiled backward with the device's
+  actual occupant intervals: devices are serial and work-conserving,
+  so the wait is exactly the predecessors' execution (each sub-segment
+  names the occupant).
+* ``notify`` — the binding dependency resolved on another server; the
+  gap to readiness is its completion-notification leg, and the walk
+  jumps *into* that dependency (this is the causal chain: shortening
+  anything after it cannot shorten the makespan).
+* ``dep_wait`` — dependency wait the walk cannot attribute to a
+  recorded command (dep enqueued before tracing attached, or pure
+  daemon delivery delay).
+* ``submit_wire`` — enqueue → daemon submit stamp on the access link.
+"""
+from __future__ import annotations
+
+from fractions import Fraction
+from typing import Optional
+
+from .trace import Tracer
+
+__all__ = ["Segment", "CriticalPath", "critical_path", "format_blame",
+           "whatif"]
+
+_COMPLETE = "complete"
+
+
+class Segment:
+    """One tile of the critical path: ``[t0, t1)`` blamed on
+    ``(resource, stage)``; ``ev_id`` names the command occupying the
+    resource there (None when idle/unattributed)."""
+
+    __slots__ = ("t0", "t1", "resource", "stage", "ev_id")
+
+    def __init__(self, t0, t1, resource: str, stage: str,
+                 ev_id: Optional[int] = None):
+        self.t0 = t0
+        self.t1 = t1
+        self.resource = resource
+        self.stage = stage
+        self.ev_id = ev_id
+
+    @property
+    def dur(self):
+        return self.t1 - self.t0
+
+    def __repr__(self):
+        return (f"Segment({float(self.t0):.9f}, {float(self.t1):.9f}, "
+                f"{self.resource!r}, {self.stage!r}, ev={self.ev_id})")
+
+
+class CriticalPath:
+    """Gap-free tiling of ``[t0, t1]`` (causal order); ``makespan`` is
+    ``t1 - t0`` and equals the segment-duration sum exactly — rational
+    arithmetic when built with ``exact=True``."""
+
+    __slots__ = ("segments", "t0", "t1", "exact")
+
+    def __init__(self, segments: list, t0, t1, exact: bool):
+        self.segments = segments
+        self.t0 = t0
+        self.t1 = t1
+        self.exact = exact
+
+    @property
+    def makespan(self):
+        return self.t1 - self.t0
+
+    def segment_sum(self):
+        total = Fraction(0) if self.exact else 0.0
+        for s in self.segments:
+            total += s.dur
+        return total
+
+    def blame(self) -> list:
+        """Ranked attribution: one row per (resource, stage), summed
+        over the path, descending by time. Shares are of the makespan
+        (they sum to 1 by the tiling identity)."""
+        agg: dict = {}
+        for s in self.segments:
+            key = (s.resource, s.stage)
+            tot, cnt = agg.get(key, (0.0, 0))
+            agg[key] = (tot + float(s.dur), cnt + 1)
+        mk = float(self.makespan) or 1.0
+        rows = [{"resource": r, "stage": st, "seconds": tot,
+                 "share": tot / mk, "segments": cnt}
+                for (r, st), (tot, cnt) in agg.items()]
+        rows.sort(key=lambda row: (-row["seconds"], row["resource"],
+                                   row["stage"]))
+        return rows
+
+    def stage_totals(self) -> dict:
+        out: dict = {}
+        for s in self.segments:
+            out[s.stage] = out.get(s.stage, 0.0) + float(s.dur)
+        return out
+
+
+def _stamp_cache(cmds: dict) -> dict:
+    return {eid: Tracer._stamps(rec) for eid, rec in cmds.items()}
+
+
+def _device_intervals(all_cmds: dict) -> dict:
+    """(server, device) -> sorted [(t0, t1, ev_id)] actual occupancy.
+    Includes unfinished/failed commands — their device time was real —
+    and uses llf slices when the command ran preemptively."""
+    by_dev: dict = {}
+    for eid, rec in all_cmds.items():
+        if rec.server is None or rec.ev.t_start <= 0.0:
+            continue
+        lst = by_dev.setdefault((rec.server, rec.device), [])
+        if rec.slices:
+            for a, b in rec.slices:
+                lst.append((a, b, eid))
+        else:
+            lst.append((rec.ev.t_start, rec.ev.t_start + rec.cost, eid))
+    for lst in by_dev.values():
+        lst.sort()
+    return by_dev
+
+
+def _transfer_maps(tracer: Tracer):
+    """ev_id-keyed transfer indexes: payload legs that ARE a command's
+    lifecycle stage. ``mig`` covers migration pushes and read returns
+    (the command's execute interval is the wire leg), ``upl`` covers
+    write uploads (inside the submit leg)."""
+    mig: dict = {}
+    upl: dict = {}
+    for kind, link, _tn, t0, t1, nbytes, eid, chunks in tracer.transfers:
+        if eid is None:
+            continue
+        entry = (link, t0, t1, nbytes, chunks)
+        if kind == "upload":
+            upl[eid] = entry
+        else:                      # migration / read_return
+            mig[eid] = entry
+    return mig, upl
+
+
+def critical_path(tracer: Tracer, exact: bool = False,
+                  root=None) -> CriticalPath:
+    """Extract the critical path ending at ``root`` (default: the
+    last-finishing command). See the module docstring for the edge
+    semantics; the returned segments tile the window exactly."""
+    cmds = {eid: rec for eid, rec in tracer.cmds.items()
+            if rec.ev.status == _COMPLETE and
+            Tracer._cmd_end(rec.ev) > 0.0}
+    if not cmds:
+        z = Fraction(0) if exact else 0.0
+        return CriticalPath([], z, z, exact)
+    stamps = _stamp_cache(cmds)
+    mig, upl = _transfer_maps(tracer)
+    devs = _device_intervals(tracer.cmds)
+
+    def num(x):
+        return Fraction(x) if exact else x
+
+    if root is None:
+        root = max(stamps, key=lambda e: (stamps[e][5], e))
+    segs: list = []
+
+    def seg(a, b, resource, stage, eid=None):
+        if b > a:
+            segs.append(Segment(num(a), num(b), resource, stage, eid))
+
+    rec = cmds[root]
+    entry = stamps[root][5]
+    origin = stamps[root][0]
+    # the walk always moves strictly backward in (time, command) — the
+    # guard only bounds pathological traces, not correct ones
+    for _guard in range(len(cmds) * 8 + 64):
+        eid = rec.ev.id
+        q, sub, ready, start, end, done = stamps[eid]
+        t = entry
+        client_res = f"client:{rec.tenant}"
+        dev_res = (f"{rec.server}/{rec.device}" if rec.server is not None
+                   else "daemon")
+        # completion: device end -> client ack
+        if t > end:
+            seg(end, t, client_res, "completion", eid)
+            t = end
+        # a join/daemon event that never started anything has no
+        # execute/queue interval of its own — its whole window up to
+        # the completion stamp is dependency wait (walked below)
+        ran = rec.ev.t_start > 0.0 or eid in mig
+        # execute: device occupancy, wire leg, or llf slice tiling
+        if ran and t > start:
+            if eid in mig:
+                seg(start, t, mig[eid][0], "transfer", eid)
+            elif rec.slices:
+                cur = t
+                for a, b in reversed(rec.slices):
+                    if cur <= start:
+                        break
+                    if b < cur:
+                        # hole between slices: someone else's slice ran
+                        lo = b if b > start else start
+                        seg(lo, cur, dev_res, "preempt_wait", eid)
+                        cur = lo
+                        if cur <= start:
+                            break
+                    lo = a if a > start else start
+                    if lo < cur:
+                        seg(lo, cur, dev_res, "execute", eid)
+                        cur = lo
+                if cur > start:
+                    seg(start, cur, dev_res, "execute", eid)
+            else:
+                seg(start, t, dev_res, "execute", eid)
+            t = start
+        # queue wait: tile with the device's actual occupants. Only
+        # commands that entered a device run queue (cmd_ready fired)
+        # have one — for a server-less command (migration, daemon
+        # write) the [ready, start] gap is dependency wait: the
+        # transfer could not start before its producer finished, and
+        # the dep-jump below walks into that producer
+        if rec.server is not None and t > ready:
+            ivs = devs.get((rec.server, rec.device), ())
+            cur = t
+            for a, b, oid in reversed(ivs):
+                if cur <= ready:
+                    break
+                if oid == eid:
+                    continue
+                if a >= cur:
+                    continue
+                if b > cur:
+                    b = cur         # clip an interval spanning our start
+                if b < cur:
+                    # device idle while we were queued (dispatch seam)
+                    lo = b if b > ready else ready
+                    seg(lo, cur, dev_res, "queue_wait")
+                    cur = lo
+                    if cur <= ready:
+                        break
+                lo = a if a > ready else ready
+                if lo < cur:
+                    seg(lo, cur, dev_res, "queue_wait", oid)
+                    cur = lo
+            if cur > ready:
+                seg(ready, cur, dev_res, "queue_wait")
+            t = ready
+        # dependency wait: jump into the binding (latest-resolving) dep
+        nxt = None
+        if t > sub:
+            best = None
+            best_end = sub
+            for d in (rec.deps or ()):
+                drec = cmds.get(d)
+                if drec is None:
+                    continue
+                de = stamps[d][4]
+                if best_end < de <= t:
+                    best_end, best = de, drec
+            if best is not None:
+                seg(best_end, t, "notify", "notify", best.ev.id)
+                nxt = (best, best_end)
+            else:
+                seg(sub, t, "deps", "dep_wait", eid)
+        if nxt is None:
+            if sub > q:
+                res = upl[eid][0] if eid in upl else client_res
+                seg(q, sub, res, "submit_wire", eid)
+            origin = q
+            break
+        rec, entry = nxt
+    segs.reverse()
+    return CriticalPath(segs, num(origin), num(stamps[root][5]), exact)
+
+
+def format_blame(path: CriticalPath, top: int = 12,
+                 title: str = "") -> str:
+    """Terminal blame table for a ``CriticalPath``."""
+    lines = []
+    if title:
+        lines.append(f"# {title}")
+    mk = float(path.makespan)
+    lines.append(f"critical path: {len(path.segments)} segments, "
+                 f"makespan {mk * 1e3:.3f} ms "
+                 f"[{float(path.t0) * 1e3:.3f} .. "
+                 f"{float(path.t1) * 1e3:.3f}]")
+    lines.append(f"{'resource':<28}{'stage':<14}{'ms':>10}{'share%':>8}"
+                 f"{'segs':>6}")
+    rows = path.blame()
+    for row in rows[:top]:
+        lines.append(f"{row['resource']:<28}{row['stage']:<14}"
+                     f"{row['seconds'] * 1e3:>10.3f}"
+                     f"{row['share'] * 100.0:>8.2f}"
+                     f"{row['segments']:>6}")
+    rest = rows[top:]
+    if rest:
+        tot = sum(r["seconds"] for r in rest)
+        lines.append(f"{'(other)':<28}{'':<14}{tot * 1e3:>10.3f}"
+                     f"{tot / (mk or 1.0) * 100.0:>8.2f}"
+                     f"{sum(r['segments'] for r in rest):>6}")
+    return "\n".join(lines)
+
+
+def _scaled_wire(dur: float, nbytes: float, link_label: str,
+                 links: dict, wire: float, nic_bandwidth: float) -> float:
+    """Re-time a recorded wire leg: the bandwidth-proportional part
+    (``nbytes / recorded link bandwidth``) scales with the NIC knob,
+    the rest (latency, serialization overheads, copy costs) with the
+    blanket ``wire`` knob. ``wire == 0`` idealizes communication away
+    entirely."""
+    if wire == 0.0:
+        return 0.0
+    lat_bw = links.get(link_label)
+    if lat_bw is None or lat_bw[1] <= 0.0 or nbytes <= 0.0:
+        return wire * dur
+    var = nbytes / lat_bw[1]
+    if var > dur:
+        var = dur
+    return wire * (dur - var) + var / nic_bandwidth
+
+
+def whatif(tracer: Tracer, nic_bandwidth: float = 1.0,
+           device_speed: float = 1.0, wire: float = 1.0,
+           overlap_halo: bool = False) -> dict:
+    """Forward re-timing of the recorded DAG under hypothetical
+    substrate changes. Knobs:
+
+    * ``nic_bandwidth`` — scale every link/NIC bandwidth (2.0 = twice
+      as fast); only the bandwidth-proportional share of each recorded
+      wire leg moves.
+    * ``device_speed`` — scale device compute rate (2.0 = kernels take
+      half the device-seconds).
+    * ``wire`` — blanket scale on every communication delta (0.0 =
+      ideal network: submit/notify/completion/transfers free).
+    * ``overlap_halo`` — cut-through into compute: a dependency that is
+      a chunked migration resolves at its *first* chunk's landfall
+      instead of the last (the ROADMAP "hide the wire" follow-up).
+
+    Model assumptions (DESIGN.md §11): recorded orders are preserved —
+    commands dispatch per device in recorded order and payload
+    transfers serialize per link in recorded order; preempted commands
+    are re-timed as solid ``cost`` blocks; link contention beyond the
+    per-resource FIFO (NIC cross-talk between links) is second-order
+    and ignored. Projections are therefore estimates — the benchmark
+    gate validates them against ground-truth re-runs within 10%.
+    """
+    nic_bandwidth = float(nic_bandwidth)
+    device_speed = float(device_speed)
+    wire = float(wire)
+    if nic_bandwidth <= 0.0 or device_speed <= 0.0 or wire < 0.0:
+        raise ValueError("knobs must be positive (wire may be 0.0)")
+    cmds = {eid: rec for eid, rec in tracer.cmds.items()
+            if rec.ev.status == _COMPLETE and
+            Tracer._cmd_end(rec.ev) > 0.0}
+    if not cmds:
+        return {"recorded_s": 0.0, "projected_s": 0.0, "speedup": 1.0}
+    stamps = _stamp_cache(cmds)
+    mig, upl = _transfer_maps(tracer)
+    links = tracer.links
+
+    # recorded device dispatch order -> per-command predecessor
+    prev_on_dev: dict = {}
+    by_dev: dict = {}
+    for eid, rec in cmds.items():
+        if rec.server is not None and rec.ev.t_start > 0.0:
+            by_dev.setdefault((rec.server, rec.device), []).append(eid)
+    for lst in by_dev.values():
+        lst.sort(key=lambda e: (stamps[e][3], e))
+        for prv, nx in zip(lst, lst[1:]):
+            prev_on_dev[nx] = prv
+    # recorded per-link transfer order (payload legs only)
+    prev_on_link: dict = {}
+    by_link: dict = {}
+    for eid in cmds:
+        if eid in mig:
+            by_link.setdefault(mig[eid][0], []).append(eid)
+    for lst in by_link.values():
+        lst.sort(key=lambda e: (mig[e][1], e))
+        for prv, nx in zip(lst, lst[1:]):
+            prev_on_link[nx] = prv
+
+    # prepass: re-time every upload's wire window, serialized per link
+    # in recorded order (uploads depend only on their enqueue time).
+    # Commands whose recorded submit landed INSIDE an upload's wire
+    # window were queued behind that payload on the shared client link,
+    # so their delivery is paced by the upload — it moves
+    # proportionally within the upload's re-timed window, not by a
+    # blanket scale of the recorded delta.
+    new_upl: dict = {}
+    paced: dict = {}
+    upl_free: dict = {}
+    for eid in sorted((e for e in upl if e in cmds),
+                      key=lambda e: (upl[e][1], e)):
+        lk, t0, t1, nbytes, _ch = upl[eid]
+        uq = stamps[eid][0]
+        pre = t0 - uq
+        if pre < 0.0:
+            pre = 0.0
+        w0 = uq + wire * pre
+        lf = upl_free.get(lk, 0.0)
+        if lf > w0:
+            w0 = lf
+        w1 = w0 + _scaled_wire(t1 - t0, nbytes, lk, links, wire,
+                               nic_bandwidth)
+        upl_free[lk] = w1
+        new_upl[eid] = (w0, w1)
+        if t1 > t0:
+            paced.setdefault(cmds[eid].tenant, []).append((t0, t1, eid))
+
+    # forward pass in a dependency-safe order: a dep's (filled) start
+    # precedes its consumer's, and enqueue ids are monotonic
+    order = sorted(cmds, key=lambda e: (stamps[e][3], stamps[e][4], e))
+    new_start: dict = {}
+    new_end: dict = {}
+    new_done: dict = {}
+    for eid in order:
+        rec = cmds[eid]
+        q, sub, ready, start, end, done = stamps[eid]
+        if eid in upl:
+            _lk, _t0, _t1, _nb, _ch = upl[eid]
+            _w0, w1 = new_upl[eid]
+            tail = sub - _t1            # post-wire daemon latency
+            if tail < 0.0:
+                tail = 0.0
+            sub_n = w1 + wire * tail
+        else:
+            sub_n = None
+            for t0u, t1u, ueid in paced.get(rec.tenant, ()):
+                if t0u < sub <= t1u:
+                    f = (sub - t0u) / (t1u - t0u)
+                    w0, w1 = new_upl[ueid]
+                    sub_n = w0 + f * (w1 - w0)
+                    break
+            if sub_n is None:
+                sub_n = q + wire * (sub - q)
+            elif sub_n < q:
+                sub_n = q
+        constraint = sub_n
+        rec_base = sub
+        for d in (rec.deps or ()):
+            de = stamps[d][4] if d in cmds else None
+            if de is None:
+                continue
+            if de > rec_base:
+                rec_base = de
+            nde = new_end.get(d)
+            if nde is None:
+                continue
+            if overlap_halo and d in mig and mig[d][4]:
+                # resolve at the first chunk's landfall, proportionally
+                # re-timed inside the dep's new transfer window
+                ds, de_r = stamps[d][3], stamps[d][4]
+                first = mig[d][4][0]
+                frac = ((first - ds) / (de_r - ds)
+                        if de_r > ds else 1.0)
+                if frac > 1.0:
+                    frac = 1.0
+                nde = new_start[d] + frac * (new_end[d] - new_start[d])
+            if nde > constraint:
+                constraint = nde
+        lag = ready - rec_base
+        if lag < 0.0:
+            lag = 0.0
+        ready_n = constraint + wire * lag
+        # dispatch under the recorded resource order
+        if eid in mig:
+            lk, _t0, _t1, nbytes, _ch = mig[eid]
+            prv = prev_on_link.get(eid)
+            # the wire frees one propagation latency before the
+            # previous transfer's ARRIVAL stamp (cut-through): the next
+            # payload can be on the link while the last chunk is still
+            # in flight
+            avail = 0.0
+            if prv is not None:
+                avail = new_end.get(prv, 0.0) - \
+                    wire * links.get(lk, (0.0, 0.0))[0]
+            start_n = ready_n if ready_n > avail else avail
+            exec_n = _scaled_wire(end - start, nbytes, lk, links, wire,
+                                  nic_bandwidth)
+        elif rec.server is not None and rec.ev.t_start > 0.0:
+            prv = prev_on_dev.get(eid)
+            avail = new_end.get(prv, 0.0) if prv is not None else 0.0
+            start_n = ready_n if ready_n > avail else avail
+            dur = rec.cost if rec.slices else end - start
+            exec_n = dur / device_speed
+        else:
+            # daemon/join event: any part of its [start, end] window
+            # that was really waiting on recorded dependencies is
+            # modeled by the constraint above, not kept as latency
+            start_n = ready_n
+            exec_n = end - start
+            overlap = (end if end < rec_base else rec_base) - start
+            if overlap > 0.0:
+                exec_n = exec_n - overlap
+                if exec_n < 0.0:
+                    exec_n = 0.0
+        end_n = start_n + exec_n
+        new_start[eid] = start_n
+        new_end[eid] = end_n
+        new_done[eid] = end_n + wire * (done - end)
+
+    t0_rec = min(st[0] for st in stamps.values())
+    rec_mk = max(st[5] for st in stamps.values()) - t0_rec
+    prj_mk = max(new_done.values()) - t0_rec
+    return {"recorded_s": rec_mk, "projected_s": prj_mk,
+            "speedup": (rec_mk / prj_mk) if prj_mk > 0.0 else float("inf"),
+            "knobs": {"nic_bandwidth": nic_bandwidth,
+                      "device_speed": device_speed, "wire": wire,
+                      "overlap_halo": overlap_halo}}

@@ -393,7 +393,7 @@ class Link:
 
     __slots__ = ("clock", "latency", "bandwidth", "name", "_busy_until",
                  "bytes_sent", "_up", "_closed", "_inflight",
-                 "_schedule_at")
+                 "_schedule_at", "trace", "trace_label")
 
     def __init__(self, clock: SimClock, latency: float, bandwidth: float,
                  name: str = ""):
@@ -407,6 +407,13 @@ class Link:
         self._closed = False
         self._inflight: list = []
         self._schedule_at = clock.schedule_at   # bound once: send is hot
+        # observability (DESIGN.md §9/§11): a traced cluster points
+        # these at its Tracer; wire-occupancy spans then record when
+        # each message's serialization actually held the link — the
+        # per-link ordering edge of the critical-path DAG. Untraced:
+        # one slot load + branch per send, same gate as NIC.trace.
+        self.trace = None
+        self.trace_label = name
 
     @property
     def up(self) -> bool:
@@ -508,6 +515,11 @@ class Link:
             busy = start + (nbytes / bw if bw > 0 else 0.0)
             if nic_end > busy:
                 busy = nic_end     # NIC slower than the link: it governs
+        ltr = self.trace
+        if ltr is not None:
+            # wire occupancy: serialization start → link freed (includes
+            # a slower egress NIC pacing the tail, which held the link)
+            ltr.link_span(self.trace_label, start, busy - start)
         self._busy_until = busy
         self.bytes_sent += nbytes
         arrive = busy + self.latency
@@ -587,6 +599,9 @@ class Link:
         nic_occupied = 0.0
         in_occupied = 0.0
         nic_t0 = in_t0 = -1.0        # first port occupancy (trace spans)
+        ltr = self.trace
+        wire_t0 = -1.0               # first wire occupancy (trace span)
+        wire_occupied = 0.0
         for snd_cpu, wire_bytes, rcv_cpu in chunks:
             snd_free += snd_cpu                  # chunk copied/staged
             if egress is None:
@@ -606,6 +621,10 @@ class Link:
                 wire_free = start + (wire_bytes / bw if bw > 0 else 0.0)
                 if nic_free > wire_free:
                     wire_free = nic_free  # NIC slower: it paces the chunk
+            if ltr is not None:
+                wire_occupied += wire_free - start
+                if wire_t0 < 0.0:
+                    wire_t0 = start
             total += wire_bytes
             arrive = wire_free + lat
             if ingress is not None:
@@ -645,6 +664,9 @@ class Link:
             tr = ingress.trace
             if tr is not None and in_t0 >= 0.0:
                 tr.nic_span(ingress.trace_label, in_t0, in_occupied)
+        if ltr is not None and wire_t0 >= 0.0:
+            # one aggregated span per transfer, like the NIC spans
+            ltr.link_span(self.trace_label, wire_t0, wire_occupied)
         self.bytes_sent += total
         # register the transfer so a mid-flight down drops the remainder
         # (the pre-flap time-accounting above stands: the wire WAS held

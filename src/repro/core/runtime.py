@@ -189,6 +189,13 @@ class ServerHost:
                 if nic is not None:
                     nic.trace = tr
                     nic.trace_label = cluster.trace_prefix + nic.name
+            # run-queue depth samples (DESIGN.md §11): push/pop
+            # boundaries become device-ordering resource edges
+            for dname, sch in self.schedulers.items():
+                sch.trace = tr
+                sch.trace_label = (f"{cluster.trace_prefix}{self.name}"
+                                   f".{dname}.runq")
+                sch.trace_clock = cluster.clock
         self.sessions: dict = {}     # session id (bytes) -> ServerSim
         # membership lifecycle (DESIGN.md §7); the MembershipManager is
         # authoritative, this mirror makes hot-path checks a plain load
@@ -290,9 +297,13 @@ class Cluster:
         names = list(self.hosts)
         for i, a in enumerate(names):
             for b in names[i + 1:]:
-                self.p_links[(a, b)] = Link(self.clock, peer_link.latency,
-                                            peer_link.bandwidth,
-                                            f"{a}<->{b}")
+                lk = self.p_links[(a, b)] = Link(self.clock,
+                                                 peer_link.latency,
+                                                 peer_link.bandwidth,
+                                                 f"{a}<->{b}")
+                if trace is not None:
+                    lk.trace = trace
+                    lk.trace_label = self.trace_prefix + lk.name
         self.clients: list = []
         # elastic membership control plane (DESIGN.md §7): seed hosts
         # start ACTIVE; join/drain/crash move them through the lifecycle
@@ -341,8 +352,11 @@ class Cluster:
                 continue
             key = ((other, name) if (other, name) in self.p_links
                    else (name, other))
-            self.p_links[key] = Link(self.clock, lat, bw,
-                                     f"{key[0]}<->{key[1]}")
+            lk = self.p_links[key] = Link(self.clock, lat, bw,
+                                          f"{key[0]}<->{key[1]}")
+            if self.trace is not None:
+                lk.trace = self.trace
+                lk.trace_label = self.trace_prefix + lk.name
         return host
 
     def peer_link(self, a: str, b: str) -> Link:
@@ -692,6 +706,13 @@ class ServerSim:
                 slice_next(release)
 
             t0, _ = dev.execute(this, slice_done)
+            tr = self.rt._trace
+            if tr is not None:
+                # actual device occupancy: under preemption the wall
+                # interval [t_start, t_end] interleaves with other
+                # commands; the slices are the ground truth the
+                # critical-path analyzer tiles with (DESIGN.md §11)
+                tr.exec_slice(ev, t0, t0 + this)
             if ev.t_start == 0.0:
                 ev.t_start = t0   # first slice only; resumes keep it
 
@@ -959,6 +980,11 @@ class ClientRuntime:
                                 client_link.bandwidth,
                                 f"{self.name}<->{s}")
                         for s in self.servers}
+        tr = self._trace
+        if tr is not None:
+            for lk in self.c_links.values():
+                lk.trace = tr
+                lk.trace_label = self._tp + lk.name
         self.p_links = cluster.p_links
         cluster.clients.append(self)
         self._buffers: list[Buffer] = []
@@ -999,6 +1025,12 @@ class ClientRuntime:
         if ctrl is not None and self._slo_s is not None:
             decision = ctrl.request(self)
             self.admission = decision
+            tr = self._trace
+            if tr is not None:
+                # verdict marker (admit/degrade/reject + predicted
+                # latency) lands in the trace even for rejects — the
+                # tenant then leaves before spending simulated time
+                tr.admission(self._tlabel, decision)
             if decision.status == REJECT:
                 # leave no residue on the shared cluster: the sessions
                 # and links built above were never handshaken and spend
@@ -1065,10 +1097,13 @@ class ClientRuntime:
         name = host.name
         self.servers[name] = ServerSim(self, host)
         self.sessions[name] = Session(name, self._replay_window)
-        self.c_links[name] = Link(self.clock,
-                                  self._client_link_spec.latency,
-                                  self._client_link_spec.bandwidth,
-                                  f"{self.name}<->{name}")
+        lk = self.c_links[name] = Link(self.clock,
+                                       self._client_link_spec.latency,
+                                       self._client_link_spec.bandwidth,
+                                       f"{self.name}<->{name}")
+        if self._trace is not None:
+            lk.trace = self._trace
+            lk.trace_label = self._tp + lk.name
         self.reconnect_attempts.setdefault(name, 0)
         self.reconnect_failures.pop(name, None)
         d = self._handshake(name)
@@ -1656,6 +1691,9 @@ class ClientRuntime:
         # naive: read back to client, then write to dst
         rd = self.enqueue_read(src, buf, wait_for=wait_for)
         wr_ev = self._new_event(cmd, dst)
+        trc = self._trace
+        if trc is not None:             # write leg waits on the read leg
+            trc.cmd_deps(wr_ev, [rd.id])
         self._track_inflight(key, wr_ev, buf.version)
         if sentry is not None:
             store.add_pending(sentry, dst, wr_ev)
@@ -1740,6 +1778,9 @@ class ClientRuntime:
         error-dependency semantics); subscribers are notified over the
         client links like any other client-completing event."""
         join = self._register_event(Event(user=True, server="client"))
+        trc = self._trace
+        if trc is not None:             # the join's causal inputs
+            trc.cmd_deps(join, [e.id for e in events])
         state = {"remaining": len(events)}
 
         def one_done(_e):
@@ -1768,6 +1809,9 @@ class ClientRuntime:
         tenant's event table. If the ride dies under us (dropped link,
         payload gone stale) a real migration runs as fallback."""
         ev = self._register_event(Event(user=True, server="client"))
+        trc = self._trace
+        if trc is not None:             # the ride's causal input
+            trc.cmd_deps(ev, [pending.id])
         snap = buf.version
         saved = buf.transfer_bytes()    # what the caller counted as saved
 
@@ -1847,7 +1891,8 @@ class ClientRuntime:
                                arrived: Callable,
                                egress: Optional[NIC] = None,
                                ingress: Optional[NIC] = None,
-                               on_dropped: Optional[Callable] = None) \
+                               on_dropped: Optional[Callable] = None,
+                               ev_id: Optional[int] = None) \
             -> bool:
         """Shared bulk-payload leg for both migration paths: build the
         transport's cut-through plan, apply wire inflation, keep the
@@ -1897,7 +1942,8 @@ class ClientRuntime:
         self.bytes_on_wire += wire_total
         if trc is not None:
             trc.transfer("migration", self._tp + link.name, self._tlabel,
-                         t0, rcv, wire_total, chunk_arrivals=arrivals)
+                         t0, rcv, wire_total, ev_id=ev_id,
+                         chunk_arrivals=arrivals, link_obj=link)
         return True
 
     def _deliver_naive_write(self, ev, dst, nbytes, version):
@@ -1919,7 +1965,8 @@ class ClientRuntime:
         if not self._send_migration_chunks(
                 self.c_links[dst], self.transport, nbytes, 0.0, arrived,
                 ingress=self._nic_in(dst),
-                on_dropped=lambda: self._fail_dropped_migration(ev, dst)):
+                on_dropped=lambda: self._fail_dropped_migration(ev, dst),
+                ev_id=ev.id):
             self._fail_dropped_migration(ev, dst)
 
     def marker(self) -> Event:
@@ -1932,6 +1979,12 @@ class ClientRuntime:
     def _send_command(self, ev: Event, server: str, device: str,
                       dep_ids: list, payload: float = 0.0,
                       extra_wire: float = 0.0):
+        trc = self._trace
+        if trc is not None and dep_ids:
+            # happens-before edges for the critical-path DAG
+            # (DESIGN.md §11): raw ids, before the wire-message
+            # classification below drops already-finished deps
+            trc.cmd_deps(ev, dep_ids)
         # classify deps at enqueue time: already-finished ones are
         # dropped from the wire message; live ones are retained (they
         # must stay resolvable until this command dispatches) and, when
@@ -1982,7 +2035,6 @@ class ClientRuntime:
                     DISPATCH,
                     self.servers[server].receive_command, ev, device, deps)
 
-            trc = self._trace
             arrivals = [] if trc is not None else None
             t0 = self.clock.now
             rcv = link.send_chunked(chunks, deliver_chunked,
@@ -1996,7 +2048,8 @@ class ClientRuntime:
                 if trc is not None:
                     trc.transfer("upload", self._tp + link.name,
                                  self._tlabel, t0, rcv, payload * scale,
-                                 ev_id=ev.id, chunk_arrivals=arrivals)
+                                 ev_id=ev.id, chunk_arrivals=arrivals,
+                                 link_obj=link)
             return
         # zero-payload: the cost triple is the transport's cached
         # constant (`_cmd_cost0`) and the derived overhead/delay floats
@@ -2051,7 +2104,8 @@ class ClientRuntime:
         if not self._send_migration_chunks(
                 link, tr, nbytes, reg, arrived,
                 egress=src_srv.host.nic, ingress=self._nic_in(dst),
-                on_dropped=lambda: self._fail_dropped_migration(ev, dst)):
+                on_dropped=lambda: self._fail_dropped_migration(ev, dst),
+                ev_id=ev.id):
             self._fail_dropped_migration(ev, dst)
 
     def _store_replica_landed(self, buf: Buffer, dst: str):
@@ -2104,7 +2158,7 @@ class ClientRuntime:
                              self._tlabel, t0, ret,
                              cost.wire_bytes * wire_scale(self.transport,
                                                           link.bandwidth),
-                             ev_id=ev.id)
+                             ev_id=ev.id, link_obj=link)
         else:
             # link died after the command was delivered: the daemon has
             # already marked it processed, so a replay will be deduped

@@ -488,7 +488,8 @@ class DeviceScheduler:
     """
 
     __slots__ = ("policy", "_busy", "dispatched", "queue_peak",
-                 "preempt_chunk", "preempted")
+                 "preempt_chunk", "preempted", "trace", "trace_label",
+                 "trace_clock")
 
     def __init__(self, policy):
         self.policy = policy
@@ -497,6 +498,14 @@ class DeviceScheduler:
         self.queue_peak = 0          # max commands ever waiting
         self.preempt_chunk = policy.preempt_chunk
         self.preempted = 0           # chunk-boundary preemptions
+        # observability (DESIGN.md §9/§11): a traced cluster points
+        # these at its Tracer so push/pop boundaries emit run-queue
+        # depth samples — the device-ordering resource edge of the
+        # critical-path DAG. Untraced: one slot load + branch, same
+        # zero-overhead gate as NIC.trace.
+        self.trace = None
+        self.trace_label = ""
+        self.trace_clock = None
 
     def submit(self, tenant, weight: float, cost: float, run: Callable,
                tag=None, deadline=None):
@@ -521,6 +530,9 @@ class DeviceScheduler:
         backlog = len(policy)
         if backlog > self.queue_peak:
             self.queue_peak = backlog
+        tr = self.trace
+        if tr is not None:
+            tr.run_queue(self.trace_label, self.trace_clock.now, backlog)
         if not self._busy:
             self._dispatch()
 
@@ -543,6 +555,9 @@ class DeviceScheduler:
         backlog = len(self.policy)
         if backlog > self.queue_peak:
             self.queue_peak = backlog
+        tr = self.trace
+        if tr is not None:
+            tr.run_queue(self.trace_label, self.trace_clock.now, backlog)
 
     def discard(self, tenant) -> int:
         """Tenant lifecycle (detach): drop every command ``tenant`` still
@@ -579,6 +594,10 @@ class DeviceScheduler:
             return
         self._busy = True
         self.dispatched += 1
+        tr = self.trace
+        if tr is not None:
+            tr.run_queue(self.trace_label, self.trace_clock.now,
+                         len(self.policy))
         run(self._release)
 
     def _release(self):

@@ -31,7 +31,9 @@ namespace, unifying the ad-hoc scoreboards.
 """
 from __future__ import annotations
 
+import gzip
 import json
+import math
 from fractions import Fraction
 from typing import Optional
 
@@ -62,15 +64,48 @@ def get_default() -> Optional["Tracer"]:
     return _DEFAULT
 
 
+def _round_shares(shares: list, decimals: int = 2) -> list:
+    """Largest-remainder rounding of percentage shares: the returned
+    values, each a multiple of ``10**-decimals``, sum to exactly 100 at
+    that precision — so a printed share column never drifts off 100.0
+    by display rounding. Tolerates inputs whose float sum is slightly
+    off 100 (telescoping error): the correction lands on the entries
+    with the largest (or smallest) fractional remainders."""
+    scale = 10 ** decimals
+    scaled = [s * scale for s in shares]
+    floors = [math.floor(x) for x in scaled]
+    short = round(100 * scale) - sum(floors)
+    order = sorted(range(len(shares)),
+                   key=lambda i: (scaled[i] - floors[i], shares[i]),
+                   reverse=True)
+    out = list(floors)
+    i = 0
+    while short > 0 and order:
+        out[order[i % len(order)]] += 1
+        short -= 1
+        i += 1
+    i = len(order) - 1
+    while short < 0 and order:
+        out[order[i % len(order)]] -= 1
+        short += 1
+        i -= 1
+    return [v / scale for v in out]
+
+
 class CmdRecord:
     """Per-command lifecycle record. Timestamps other than ``t_ready``
     live on the ``Event`` itself (``t_queued``/``t_submitted``/
     ``t_start``/``t_end``/``t_client_ack``); the tracer only adds what
     the Event does not carry: the run-queue entry time, the placed
-    server/device, the modeled execution cost, and any drain requeues."""
+    server/device, the modeled execution cost, and any drain requeues.
+
+    Causal edges for the critical-path analyzer (DESIGN.md §11) ride
+    the same record: ``deps`` holds the dependency event ids the client
+    classified at enqueue time, ``slices`` the actual device occupancy
+    intervals when a preemptive policy ran the command in chunks."""
 
     __slots__ = ("ev", "tenant", "t_ready", "server", "device", "cost",
-                 "requeues")
+                 "requeues", "deps", "slices")
 
     def __init__(self, ev, tenant: str):
         self.ev = ev
@@ -80,6 +115,8 @@ class CmdRecord:
         self.device: Optional[str] = None
         self.cost = 0.0
         self.requeues = None          # lazily [(t, src_server, reason)]
+        self.deps = None              # lazily [dep_event_id, ...]
+        self.slices = None            # lazily [(t0, t1), ...] llf slices
 
 
 class Histogram:
@@ -191,6 +228,11 @@ class Tracer:
         self.dedups: list = []        # (t, tenant, signed nbytes)
         self.faults: list = []        # (t, kind, target, detail)
         self.slo: list = []           # (t, tenant, ev_id, latency, slo)
+        self.admissions: list = []    # (t, tenant, status, predicted_s,
+                                      #  requested_slo_s, slo_s, reason)
+        self.link_spans: list = []    # (label, wire_t0, wire_busy)
+        self.runq: list = []          # (label, t, queued_depth)
+        self.links: dict = {}         # label -> (latency_s, bandwidth_Bps)
         self._clusters: list = []
 
     # ---- wiring ----
@@ -220,9 +262,60 @@ class Tracer:
             r.requeues = []
         r.requeues.append((now, src, reason))
 
+    def cmd_deps(self, ev, dep_ids) -> None:
+        """Happens-before edges (DESIGN.md §11): the dependency event
+        ids this command waited on, as classified by the client at send
+        time — the explicit half of the causal DAG (resource edges come
+        from exec slices, link/NIC spans, and run-queue samples)."""
+        if not dep_ids:
+            return
+        r = self.cmds.get(ev.id)
+        if r is None:
+            r = self.cmds[ev.id] = CmdRecord(ev, "?")
+        r.deps = list(dep_ids)
+
+    def exec_slice(self, ev, t0: float, t1: float) -> None:
+        """One device slice of a preemptively-scheduled command (llf,
+        DESIGN.md §10): the device was occupied by ``ev`` over exactly
+        ``[t0, t1)``. Non-preemptive commands occupy
+        ``[t_start, t_start + cost)`` and never emit slices."""
+        r = self.cmds.get(ev.id)
+        if r is None:
+            r = self.cmds[ev.id] = CmdRecord(ev, "?")
+        if r.slices is None:
+            r.slices = []
+        r.slices.append((t0, t1))
+
+    def admission(self, tenant: str, decision) -> None:
+        """Admission verdict marker (DESIGN.md §10 control plane →
+        §9 observability): admit/degrade/reject with the controller's
+        predicted latency, so predicted-vs-actual is inspectable next
+        to the tenant's own command tracks."""
+        self.admissions.append((decision.t, tenant, decision.status,
+                                decision.predicted_s,
+                                decision.requested_slo_s,
+                                decision.slo_s, decision.reason))
+
+    def link_span(self, label: str, t0: float, busy: float) -> None:
+        """Wire occupancy of one link: ``busy`` seconds of serialization
+        starting at ``t0`` (queueing behind earlier messages excluded —
+        that is the gap between the transfer span start and this)."""
+        self.link_spans.append((label, t0, busy))
+
+    def run_queue(self, label: str, t: float, depth: int) -> None:
+        """Run-queue depth sample from a DeviceScheduler at a push/pop
+        boundary (the in-service command is excluded, matching
+        ``queued_seconds``). Renders as a Perfetto counter track."""
+        self.runq.append((label, t, depth))
+
     def transfer(self, kind: str, link: str, tenant: str, t0: float,
                  t1: float, nbytes: float, ev_id: Optional[int] = None,
-                 chunk_arrivals: Optional[list] = None) -> None:
+                 chunk_arrivals: Optional[list] = None,
+                 link_obj=None) -> None:
+        if link_obj is not None and link not in self.links:
+            # substrate metadata for what-if re-timing: which part of a
+            # recorded transfer duration is bandwidth-proportional
+            self.links[link] = (link_obj.latency, link_obj.bandwidth)
         self.transfers.append((kind, link, tenant, t0, t1, nbytes,
                                ev_id, chunk_arrivals))
 
@@ -319,8 +412,9 @@ class Tracer:
                          f"{s['p50']:>10.2f}{s['p95']:>10.2f}"
                          f"{s['p99']:>10.2f}{share:>8.2f}")
 
-        for stage in STAGES:
-            row(stage, bd[stage], 100.0 * sum(bd[stage]) / total)
+        raw = [100.0 * sum(bd[stage]) / total for stage in STAGES]
+        for stage, share in zip(STAGES, _round_shares(raw)):
+            row(stage, bd[stage], share)
         row("total", bd["total"], 100.0)
         return "\n".join(lines)
 
@@ -337,9 +431,27 @@ class Tracer:
                 key = f"{rec.server}/{rec.device}"
                 reg.observe("queue_wait", key, st[2], st[3] - st[2])
                 reg.observe("execute", key, st[3], rec.cost)
+                if rec.slices:
+                    # llf preemption slices (DESIGN.md §10): per-slice
+                    # device occupancy, plus the count per command
+                    for a, b in rec.slices:
+                        reg.observe("preempt_slice", key, a, b - a)
+                    reg.observe("preempt_slices_per_cmd", key, st[3],
+                                len(rec.slices))
         for kind, link, _tenant, t0, t1, nbytes, _e, _c in self.transfers:
             reg.observe("wire_time", link, t0, t1 - t0)
             reg.observe("wire_bytes", link, t0, nbytes)
+        for label, t0, busy in self.link_spans:
+            reg.observe("link_busy", label, t0, busy)
+        for label, t, depth in self.runq:
+            reg.observe("run_queue_depth", label, t, depth)
+        for t, _tenant, status, predicted, _req, _slo, _why \
+                in self.admissions:
+            # verdict counts + the controller's predicted latency per
+            # verdict class; actuals live in cmd_latency/slo_lateness
+            reg.observe("admission_predicted", status, t, predicted)
+            name = f"admission.{status}"
+            reg.counters[name] = reg.counters.get(name, 0) + 1
         for t, tenant, _eid, latency, slo in self.slo:
             # lateness past the deadline, per tenant: the per-class
             # violation *rates* live on the admission controller; this
@@ -421,15 +533,30 @@ class Tracer:
             ev_list.append({"ph": "e", "cat": "cmd", "id": str(eid),
                             "name": str(name), "pid": p, "tid": 0,
                             "ts": st[-1] * us})
-            # device execution slice on the server's device thread
+            # device execution on the server's device thread: one X per
+            # llf slice when the command ran preemptively (the wall
+            # interval [t_start, t_end] then interleaves with other
+            # commands), else a single full-cost X
             if rec.server is not None and ev.t_start > 0.0:
                 sp = pid("server", rec.server)
-                ev_list.append({"ph": "X", "cat": "exec",
-                                "name": str(name), "pid": sp,
-                                "tid": tid(sp, f"dev:{rec.device}"),
-                                "ts": ev.t_start * us,
-                                "dur": rec.cost * us,
-                                "args": {"tenant": rec.tenant}})
+                dt = tid(sp, f"dev:{rec.device}")
+                if rec.slices:
+                    n_sl = len(rec.slices)
+                    for i, (a, b) in enumerate(rec.slices):
+                        ev_list.append({"ph": "X", "cat": "exec",
+                                        "name": str(name), "pid": sp,
+                                        "tid": dt, "ts": a * us,
+                                        "dur": (b - a) * us,
+                                        "args": {"tenant": rec.tenant,
+                                                 "slice": i,
+                                                 "slices": n_sl}})
+                else:
+                    ev_list.append({"ph": "X", "cat": "exec",
+                                    "name": str(name), "pid": sp,
+                                    "tid": dt,
+                                    "ts": ev.t_start * us,
+                                    "dur": rec.cost * us,
+                                    "args": {"tenant": rec.tenant}})
         # NIC occupancy
         for label, t0, busy in self.nic_spans:
             server = label.split(".", 1)[0]
@@ -437,12 +564,24 @@ class Tracer:
             ev_list.append({"ph": "X", "cat": "nic", "name": "busy",
                             "pid": p, "tid": tid(p, label),
                             "ts": t0 * us, "dur": busy * us})
-        # transfers on the net process, one thread per link
-        np_ = None
+        # run-queue depth samples as counter tracks on the owning server
+        for label, t, depth in self.runq:
+            server = label.split(".", 1)[0]
+            p = pid("server", server)
+            ev_list.append({"ph": "C", "cat": "sched", "name": label,
+                            "pid": p, "tid": 0, "ts": t * us,
+                            "args": {"queued": depth}})
+        # transfers on the net process, one thread per link (wire
+        # occupancy gets its own sibling thread so the X slices nest
+        # cleanly next to the queue-inclusive transfer spans)
+        np_ = pid("net", "links") if (self.transfers or
+                                      self.link_spans) else None
+        for label, t0, busy in self.link_spans:
+            ev_list.append({"ph": "X", "cat": "net", "name": "wire",
+                            "pid": np_, "tid": tid(np_, label + ".wire"),
+                            "ts": t0 * us, "dur": busy * us})
         for kind, link, tenant, t0, t1, nbytes, eid, chunks \
                 in self.transfers:
-            if np_ is None:
-                np_ = pid("net", "links")
             t = tid(np_, link)
             ev_list.append({"ph": "X", "cat": "net", "name": kind,
                             "pid": np_, "tid": t, "ts": t0 * us,
@@ -472,6 +611,22 @@ class Tracer:
                             "pid": p, "tid": tid(p, "store"),
                             "ts": t * us, "s": "t",
                             "args": {"bytes": nbytes}})
+        # admission verdicts: instants on the tenant's process carrying
+        # the controller's prediction, so predicted-vs-actual reads off
+        # the same screen as the tenant's command latencies
+        for t, tenant, status, predicted, req_slo, slo_s, reason \
+                in self.admissions:
+            p = pid("tenant", tenant)
+            ev_list.append({"ph": "i", "cat": "admission",
+                            "name": f"admission:{status}", "pid": p,
+                            "tid": tid(p, "admission"), "ts": t * us,
+                            "s": "t",
+                            "args": {"predicted_ms": predicted * 1e3,
+                                     "requested_slo_ms":
+                                         (req_slo or 0.0) * 1e3,
+                                     "granted_slo_ms":
+                                         (slo_s or 0.0) * 1e3,
+                                     "reason": reason}})
         # SLO violations: instants on the tenant's own process so the
         # breach lines up with the offending command track
         for t, tenant, eid, latency, slo in self.slo:
@@ -493,8 +648,36 @@ class Tracer:
         return ev_list
 
     def write_perfetto(self, path: str) -> None:
-        with open(path, "w") as f:
+        # a ``.gz`` suffix gzips transparently (1000-UE fleet traces
+        # are large; Perfetto's UI loads gzipped JSON directly)
+        opener = gzip.open if str(path).endswith(".gz") else open
+        with opener(path, "wt") as f:
             json.dump({"traceEvents": self.perfetto_events(),
                        "displayTimeUnit": "ms"}, f, indent=None,
                       separators=(",", ":"))
             f.write("\n")
+
+    # ---- causal critical-path analysis (DESIGN.md §11) ----
+    def critical_path(self, exact: bool = False, root=None):
+        """Reconstruct the happens-before DAG from the recorded spans
+        and walk the binding constraint backward from the last finished
+        command (or ``root``): a ``critpath.CriticalPath`` whose
+        segments tile the makespan exactly. Post-hoc only — reads the
+        span store, never the live simulation."""
+        from . import critpath
+        return critpath.critical_path(self, exact=exact, root=root)
+
+    def format_blame(self, top: int = 12, title: str = "") -> str:
+        """Terminal table ranking the critical path's makespan
+        attribution per (resource, stage)."""
+        from . import critpath
+        return critpath.format_blame(self.critical_path(), top=top,
+                                     title=title)
+
+    def whatif(self, **knobs) -> dict:
+        """Re-time the recorded DAG under hypothetical substrate changes
+        (``nic_bandwidth=2.0``, ``device_speed=2.0``, ``wire=0.0``,
+        ``overlap_halo=True``); see ``critpath.whatif`` for the model
+        and its assumptions."""
+        from . import critpath
+        return critpath.whatif(self, **knobs)

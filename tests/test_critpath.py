@@ -1,0 +1,310 @@
+"""Causal critical-path analyzer (DESIGN.md §11): the path must tile
+the makespan *exactly* (rational arithmetic) on arbitrary DAGs under
+both clock engines, the what-if projections must track ground-truth
+re-runs, and the whole analyzer must stay post-hoc — attaching it (or
+the tracer features it reads: llf slice spans, admission markers)
+never moves simulated time."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "scripts"))
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # deterministic fallback, see _hypothesis_stub
+    from _hypothesis_stub import given, settings, st
+
+import trace_diff  # noqa: E402
+from benchmarks.common import validate_perfetto  # noqa: E402
+from repro.core import (ClientRuntime, Cluster, DeviceSpec,  # noqa: E402
+                        HeapSimClock, LinkSpec, ServerSpec, SimClock,
+                        Tracer)
+from repro.core import runtime as runtime_mod  # noqa: E402
+from repro.core.trace import _round_shares  # noqa: E402
+
+MiB = 1 << 20
+CLIENT = LinkSpec(latency=61e-6, bandwidth=1e9 / 8)
+PEER = LinkSpec(latency=20e-6, bandwidth=40e9 / 8)
+
+
+def mk_cluster(n=2, trace=None, scheduler="fifo", scheduler_opts=None,
+               admission=None):
+    return Cluster([ServerSpec(f"s{i}", [DeviceSpec("gpu0")])
+                    for i in range(n)],
+                   peer_link=PEER, peer_transport="tcp",
+                   scheduler=scheduler, scheduler_opts=scheduler_opts,
+                   admission=admission, trace=trace)
+
+
+def attach(cluster, **kw):
+    kw.setdefault("client_link", CLIENT)
+    return ClientRuntime(cluster=cluster, **kw)
+
+
+def random_dag_workload(cluster, rng, n_cmds):
+    """Seeded random DAG: uploads, kernels with random wait_for edges,
+    cross-server placements (forcing migrations), read-backs."""
+    rt = attach(cluster, name="ue")
+    cluster.run()
+    bufs = []
+    events = []
+    for i in range(2):
+        buf = rt.create_buffer(64 * 1024 * (i + 1))
+        rt.enqueue_write(f"s{i % 2}", buf,
+                         np.full(16 * 1024 * (i + 1), i, np.uint32))
+        bufs.append(buf)
+    for i in range(n_cmds):
+        srv = f"s{rng.randrange(2)}"
+        deps = [events[j] for j in
+                sorted(rng.sample(range(len(events)),
+                                  min(len(events), rng.randrange(3))))]
+        out = rt.create_buffer(4096)
+        ev = rt.enqueue_kernel(
+            srv, fn=None, inputs=[bufs[rng.randrange(2)]],
+            outputs=[out], duration=2.0 ** -rng.randrange(8, 14),
+            wait_for=deps, name=f"k{i}")
+        events.append(ev)
+        bufs.append(out)
+    rt.enqueue_read("s1", bufs[-1])
+    cluster.run()
+    return rt
+
+
+# ---- the tiling identity, property-tested on both engines ----
+
+@settings(max_examples=12, deadline=None)
+@given(st.data())
+def test_critical_path_tiles_makespan_exactly(data):
+    import random
+
+    seed = data.draw(st.integers(0, 2 ** 20), label="seed")
+    engine = data.draw(st.sampled_from([SimClock, HeapSimClock]),
+                       label="engine")
+    n_cmds = data.draw(st.integers(4, 14), label="n_cmds")
+    saved = runtime_mod.SimClock
+    runtime_mod.SimClock = engine
+    try:
+        tr = Tracer()
+        cluster = mk_cluster(trace=tr)
+        random_dag_workload(cluster, random.Random(seed), n_cmds)
+    finally:
+        runtime_mod.SimClock = saved
+    cp = tr.critical_path(exact=True)
+    assert cp.segments, "non-empty workload must yield a path"
+    # the identity: rational segment sum == makespan, no float dust
+    assert cp.segment_sum() == cp.makespan
+    # gap-free tiling in causal order, endpoints anchored
+    assert cp.segments[0].t0 == cp.t0
+    assert cp.segments[-1].t1 == cp.t1
+    for a, b in zip(cp.segments, cp.segments[1:]):
+        assert a.t1 == b.t0
+        assert a.t1 > a.t0
+    # blame shares sum to 1 by the same identity
+    assert abs(sum(r["share"] for r in cp.blame()) - 1.0) < 1e-9
+
+
+def test_empty_trace_yields_empty_path_and_identity():
+    tr = Tracer()
+    cp = tr.critical_path(exact=True)
+    assert cp.segments == [] and cp.makespan == 0
+    w = tr.whatif(wire=0.0)
+    assert w["recorded_s"] == w["projected_s"] == 0.0
+
+
+# ---- what-if projections vs ground truth ----
+
+def _compute_dag(speed=1.0):
+    """Compute-bound two-server chain: device_speed=2 should ~halve
+    the makespan, and a re-run with halved durations is ground truth."""
+    import random
+
+    tr = Tracer()
+    cluster = mk_cluster(trace=tr)
+    rng = random.Random(7)
+    rt = attach(cluster, name="ue")
+    cluster.run()
+    prev = None
+    for i in range(12):
+        ev = rt.enqueue_kernel(
+            f"s{rng.randrange(2)}", fn=None, duration=1e-4 / speed,
+            wait_for=[prev] if prev and rng.random() < 0.7 else (),
+            name=f"k{i}")
+        prev = ev
+    cluster.run()
+    return tr, cluster
+
+
+def _migration_run(nic=1.0):
+    """Single-phase bulk migration pipeline; nic_bandwidth=2 vs a
+    re-run with doubled link bandwidths."""
+    tr = Tracer()
+    cluster = Cluster(
+        [ServerSpec(f"s{i}", [DeviceSpec("gpu0")]) for i in range(2)],
+        peer_link=LinkSpec(latency=PEER.latency,
+                           bandwidth=PEER.bandwidth * nic),
+        peer_transport="tcp", trace=tr)
+    rt = ClientRuntime(
+        cluster=cluster,
+        client_link=LinkSpec(latency=CLIENT.latency,
+                             bandwidth=CLIENT.bandwidth * nic))
+    big = rt.create_buffer(4 * MiB)
+    wev = rt.enqueue_write("s0", big, np.zeros(MiB, np.uint32))
+    for j in range(2):
+        out = rt.create_buffer(4096)
+        rt.enqueue_kernel("s1", fn=None, inputs=[big], outputs=[out],
+                          duration=1e-5, wait_for=[wev], name=f"k{j}")
+    cluster.run()
+    return tr, cluster
+
+
+def _span(tr):
+    stamps = [Tracer._stamps(rec) for rec in tr.finished()]
+    return max(s[5] for s in stamps) - min(s[0] for s in stamps)
+
+
+def test_whatif_no_knobs_reproduces_recorded_makespan():
+    tr, _ = _migration_run()
+    w = tr.whatif()
+    assert w["recorded_s"] == pytest.approx(_span(tr))
+    assert w["projected_s"] == pytest.approx(w["recorded_s"], rel=0.01)
+    assert w["speedup"] == pytest.approx(1.0, rel=0.01)
+
+
+def test_whatif_device_speed_matches_ground_truth_rerun():
+    tr, _ = _compute_dag()
+    w = tr.whatif(device_speed=2.0)
+    tr2, _ = _compute_dag(speed=2.0)
+    actual = _span(tr2)
+    assert abs(w["projected_s"] - actual) / actual <= 0.10
+    assert w["projected_s"] < w["recorded_s"]
+
+
+def test_whatif_nic_bandwidth_matches_ground_truth_rerun():
+    tr, _ = _migration_run()
+    w = tr.whatif(nic_bandwidth=2.0)
+    tr2, _ = _migration_run(nic=2.0)
+    actual = _span(tr2)
+    assert abs(w["projected_s"] - actual) / actual <= 0.10
+    assert w["projected_s"] < w["recorded_s"]
+
+
+def test_whatif_wire_zero_is_a_lower_bound_and_knobs_validate():
+    tr, _ = _migration_run()
+    w = tr.whatif(wire=0.0)
+    assert 0.0 < w["projected_s"] < w["recorded_s"]
+    for bad in ({"device_speed": 0.0}, {"nic_bandwidth": -1.0},
+                {"wire": -0.5}):
+        with pytest.raises(ValueError):
+            tr.whatif(**bad)
+
+
+# ---- analyzer inputs stay sim-time invisible ----
+
+def _llf_admission_run(trace):
+    cluster = mk_cluster(n=1, trace=trace, scheduler="llf",
+                         scheduler_opts={"chunk": 0.5e-3},
+                         admission={})
+    be = attach(cluster, name="be")
+    slo = attach(cluster, name="slo", slo_ms=4.0)
+    cluster.run()
+    buf = be.create_buffer(64)
+    w0 = be.enqueue_write("s0", buf, np.zeros(16, np.uint32))
+    be.enqueue_kernel("s0", fn=None, inputs=[buf], duration=20e-3,
+                      wait_for=[w0], name="bulk")
+    sbuf = slo.create_buffer(64)
+    w1 = slo.enqueue_write("s0", sbuf, np.zeros(16, np.uint32))
+    slo.enqueue_kernel("s0", fn=None, inputs=[sbuf], duration=1e-3,
+                       wait_for=[w1], name="tight")
+    cluster.run()
+    return cluster
+
+
+def test_llf_admission_traced_run_is_sim_time_identical():
+    traced, plain = _llf_admission_run(Tracer()), _llf_admission_run(None)
+    assert traced.clock.now == plain.clock.now
+    assert traced.stats()["device_busy"] == plain.stats()["device_busy"]
+
+
+def test_llf_slices_admission_markers_and_histograms_export():
+    cluster = _llf_admission_run(Tracer())
+    tr = cluster.trace
+    # llf slice spans: the preempted bulk kernel's slices tile its cost
+    sliced = [r for r in tr.cmds.values() if r.slices]
+    assert sliced, "chunked llf execution must record slices"
+    for r in sliced:
+        assert sum(b - a for a, b in r.slices) == \
+            pytest.approx(r.cost, rel=1e-9)
+    # admission verdicts recorded and exported
+    assert any(entry[2] in ("admit", "degrade", "reject")
+               for entry in tr.admissions)
+    events = tr.perfetto_events()
+    assert validate_perfetto({"traceEvents": events}) == []
+    names = {e.get("name") for e in events}
+    assert any(n and n.startswith("admission") for n in names)
+    # metrics histograms over the same spans
+    summ = tr.metrics().summary()
+    assert any(k.startswith("admission_predicted") for k in summ)
+    assert summ["cmd_latency[slo]"]["count"] > 0
+
+
+# ---- exporter round-trip + trace-diff forensics ----
+
+def test_gzip_trace_roundtrip_and_diff_finds_the_mover(tmp_path):
+    def run(bulk_duration):
+        tr = Tracer()
+        cluster = mk_cluster(trace=tr)
+        rt = attach(cluster, name="ue")
+        cluster.run()
+        buf = rt.create_buffer(MiB)
+        w = rt.enqueue_write("s0", buf, np.zeros(MiB // 4, np.uint32))
+        for i in range(4):
+            rt.enqueue_kernel(f"s{i % 2}", fn=None, inputs=[buf],
+                              duration=bulk_duration, wait_for=[w],
+                              name=f"k{i}")
+        cluster.run()
+        return tr
+
+    base, cand = tmp_path / "base.json", tmp_path / "cand.json.gz"
+    run(1e-3).write_perfetto(str(base))
+    run(4e-3).write_perfetto(str(cand))     # 4x slower devices
+    assert validate_perfetto(str(cand)) == []   # gzip-aware validator
+    d = trace_diff.diff(trace_diff.aggregate(trace_diff.load_events(
+        str(base))), trace_diff.aggregate(trace_diff.load_events(
+            str(cand))), top=5)
+    assert d["makespan_delta_s"] > 0
+    movers = [m["resource"] for m in d["movers"]]
+    assert any(m in ("s0/gpu0", "s1/gpu0", "stage:execute")
+               for m in movers)
+    out = trace_diff.render(d, markdown=True)
+    assert "makespan" in out and "|" in out
+    assert trace_diff.main([str(base), str(cand)]) == 0
+
+
+def test_format_blame_lists_top_contributors():
+    tr, _ = _migration_run()
+    table = tr.format_blame(top=3, title="mig")
+    assert "# mig" in table and "critical path:" in table
+    assert "share%" in table
+    # the bulk migration dominates this workload: the wire must appear
+    assert "transfer" in table or "submit_wire" in table
+
+
+# ---- display rounding: shares always sum to 100 ----
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_round_shares_sum_to_exactly_100(data):
+    import random
+
+    rng = random.Random(data.draw(st.integers(0, 2 ** 20)))
+    n = data.draw(st.integers(1, 9))
+    raw = [rng.random() + 1e-9 for _ in range(n)]
+    tot = sum(raw)
+    rounded = _round_shares([x / tot * 100.0 for x in raw])
+    assert round(sum(rounded), 2) == 100.0
+    assert all(abs(v - round(v, 2)) < 1e-9 for v in rounded)
